@@ -1,0 +1,36 @@
+"""Figure 16: roofline positions.  Reads the dry-run artifacts
+(results/dryrun.json) and reports the three-term roofline per cell; falls
+back to hardware-curve points when no dry-run data exists."""
+import json
+import pathlib
+import time
+
+from repro.core.costmodel import TPU_V3, TPU_V4, TPU_V5E
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def run():
+    rows = []
+    # the paper's roofline ridge points (peak / HBM bw)
+    for hw in (TPU_V4, TPU_V3, TPU_V5E):
+        ridge = hw.peak_flops_bf16 / hw.hbm_bw
+        rows.append((f"fig16_ridge_{hw.name}", 0.0,
+                     f"ridge_intensity={ridge:.0f}flops_per_byte"))
+    f = RESULTS / "dryrun.json"
+    if not f.exists():
+        rows.append(("fig16_dryrun_data", 0.0, "missing:run dryrun first"))
+        return rows
+    data = json.loads(f.read_text())
+    t0 = time.perf_counter()
+    cells = [(k, v) for k, v in data.items()
+             if v.get("ok") and k.startswith("baseline/")
+             and k.endswith("/single")]
+    for k, v in sorted(cells):
+        inten = v["flops_per_chip"] / max(v["hbm_bytes_per_chip"], 1)
+        rows.append((f"fig16_{k.split('/')[1]}_{k.split('/')[2]}", 0.0,
+                     f"intensity={inten:.1f};dominant={v['dominant']};"
+                     f"roofline_frac={v['roofline_fraction']:.3f}"))
+    rows.append(("fig16_scan_time", (time.perf_counter() - t0) * 1e6,
+                 f"cells={len(cells)}"))
+    return rows

@@ -1,0 +1,30 @@
+"""Figure 8: bisection-bandwidth ratio (3D vs 2D torus) and the embedding
+throughput sensitivity to it (1.1x-2.0x in the paper's measured band)."""
+import time
+
+from repro.configs import get_config
+from repro.core.costmodel import TPU_V4
+from repro.core.sparsecore import sc_step_time
+from repro.core.topology import SliceTopology
+
+
+def run():
+    dlrm = get_config("dlrm0").dlrm
+    rows = []
+    cases = [(64, (4, 4, 4), (8, 8, 1)),
+             (128, (4, 4, 8), (8, 16, 1)),
+             (256, (4, 8, 8), (16, 16, 1)),
+             (512, (8, 8, 8), (16, 32, 1))]
+    for n, d3, d2 in cases:
+        t0 = time.perf_counter()
+        topo3, topo2 = SliceTopology(d3), SliceTopology(d2)
+        b_ratio = topo3.bisection_links() / topo2.bisection_links()
+        t3 = sc_step_time(dlrm, 32 * n, topo3, TPU_V4)["total"]
+        t2 = sc_step_time(dlrm, 32 * n, topo2, TPU_V4)["total"]
+        us = (time.perf_counter() - t0) * 1e6
+        in_band = (1.1 <= t2 / t3 <= 2.0) if n <= 256 else None
+        rows.append((f"fig8_bisection_{n}chips", us,
+                     f"bisection3d/2d={b_ratio:.1f}x;"
+                     f"emb_speedup={t2 / t3:.2f}x;"
+                     f"paper_band=1.1-2.0x;in_band={in_band}"))
+    return rows

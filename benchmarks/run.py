@@ -1,0 +1,41 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``derived`` carries the
+paper-claim comparison (got vs published value + ok flag).
+"""
+import sys
+import traceback
+
+BENCHES = [
+    "fig4_goodput",
+    "fig6_twisted_alltoall",
+    "fig8_bisection",
+    "fig9_sparsecore",
+    "fig10_panas",
+    "fig12_v4_vs_v3",
+    "table3_autotopo",
+    "fig16_roofline",
+    "ocs_cost_ib",
+]
+
+
+def main() -> None:
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in BENCHES:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception as e:  # keep the suite running
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fault-tolerant training demo: block failure -> OCS re-route -> restore.
+
+Reproduces the paper's §2.3 availability story end to end at container
+scale, and verifies the post-restore run matches an uninterrupted run.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import jax
+
+from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
+                           ShapeConfig, registry)
+from repro.train.fault import run_fault_drill
+
+
+def main():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    run = RunConfig(
+        model=registry.get_reduced("olmo-1b"),
+        shape=ShapeConfig("ft", "train", 32, 8),
+        parallel=ParallelConfig(remat="none"),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2))
+    rep = run_fault_drill(run, mesh, total_steps=12, fail_at=7,
+                          ckpt_every=4)
+    print("scheduler events:")
+    for e in rep.events:
+        print("  ", e)
+    print(f"\nsteps run:        {rep.steps_run}")
+    print(f"restarts:         {rep.restarts}")
+    print(f"circuits moved:   {rep.circuits_moved} (in "
+          f"{rep.reroute_seconds * 1e3:.0f} ms — OCS MEMS switch time)")
+    print(f"final loss:       {rep.final_loss:.4f}")
+    print(f"matches clean run: {rep.losses_match_clean_run}")
+
+
+if __name__ == "__main__":
+    main()

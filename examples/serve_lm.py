@@ -1,0 +1,42 @@
+"""Serve a small LM with batched requests through the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --requests 8
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import api
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b",
+                    choices=list(registry.ALL_ARCHS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = registry.get_reduced(args.arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
+                      prompt_len=16)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
+        eng.submit(prompt, max_new_tokens=args.new_tokens)
+    stats = eng.run()
+    print(f"arch={args.arch} slots={args.slots}")
+    for k, v in stats.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
+    for r in eng.queue[:3]:
+        print(f"  req{r.rid}: prompt={list(r.prompt)[:6]}... "
+              f"-> {r.out_tokens[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

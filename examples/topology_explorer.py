@@ -1,0 +1,59 @@
+"""Explore slice topologies: geometries, twisting, bisection, collective
+costs, goodput, and the autotopo search — the OCS's §2 benefits, interactive.
+
+    PYTHONPATH=src python examples/topology_explorer.py --chips 512
+    PYTHONPATH=src python examples/topology_explorer.py --chips 128 --search
+"""
+import argparse
+
+from repro.core.autotopo import ModelProfile, search
+from repro.core.costmodel import CollectiveCostModel, TPU_V4
+from repro.core.goodput import goodput_ocs, goodput_static
+from repro.core.topology import SliceTopology, geometries_for, is_twistable
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chips", type=int, default=512)
+    ap.add_argument("--search", action="store_true")
+    args = ap.parse_args()
+
+    cm = CollectiveCostModel(TPU_V4)
+    print(f"geometries for {args.chips} chips "
+          f"(slices are 4i x 4j x 4k, paper §2.5):")
+    print(f"{'geometry':>12s} {'twist':>6s} {'bisec':>6s} {'diam':>5s} "
+          f"{'AR(1GiB)':>9s} {'A2A(1GiB)':>10s}")
+    for dims in geometries_for(args.chips):
+        for tw in ([False, True] if is_twistable(dims) else [False]):
+            t = SliceTopology(dims, twisted=tw)
+            if t.num_chips > 1024 and tw:
+                continue
+            ar = cm.all_reduce(t, 2 ** 30) * 1e3
+            a2a = (cm.all_to_all(t, 2 ** 30) * 1e3
+                   if t.num_chips <= 512 else float("nan"))
+            diam, _ = (t.diameter_and_avg_hops() if t.num_chips <= 512
+                       else (-1, 0))
+            print(f"{t.describe():>12s} {str(tw):>6s} "
+                  f"{t.bisection_links():>6d} {diam:>5d} {ar:>8.1f}m "
+                  f"{a2a:>9.1f}m")
+
+    print(f"\ngoodput at this slice size (Fig 4):")
+    for av in (0.99, 0.995, 0.999):
+        print(f"  availability {av}: OCS "
+              f"{goodput_ocs(args.chips, av, trials=1000):.2f}  static "
+              f"{goodput_static(args.chips, av, trials=200):.2f}")
+
+    if args.search:
+        prof = ModelProfile("explorer-llm", params=70e9, layers=80,
+                            d_model=8192, seq_len=2048, global_batch=32)
+        print("\nautotopo search (Table 3):")
+        for ev in search(prof, args.chips, top_k=5):
+            print(f"  {ev.geometry} {ev.spec.label()}: "
+                  f"{ev.step_time * 1e3:.1f} ms/step "
+                  f"(compute {ev.terms['compute'] * 1e3:.1f}m, "
+                  f"tp {ev.terms['tp'] * 1e3:.1f}m, "
+                  f"dp {ev.terms['dp'] * 1e3:.1f}m)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Assemble EXPERIMENTS.md: narrative + tables from results/dryrun.json."""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if b < 1024:
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}PiB"
+
+
+def dryrun_table(data, tag, mesh=None):
+    rows = [(k, v) for k, v in sorted(data.items())
+            if k.startswith(tag + "/") and v.get("ok")
+            and (mesh is None or k.endswith("/" + mesh))]
+    out = ["| arch | shape | mesh | args/dev | temp/dev | FLOPs/dev | "
+           "HBM B/dev | coll B/dev | compile |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for k, v in rows:
+        _, arch, shape, _m = k.split("/")
+        m = v["memory"]
+        out.append(
+            f"| {arch} | {shape} | {v['mesh']} | "
+            f"{fmt_bytes(m['argument_bytes'])} | {fmt_bytes(m['temp_bytes'])} | "
+            f"{v['flops_per_chip']:.2e} | {v['hbm_bytes_per_chip']:.2e} | "
+            f"{v['collective_bytes_per_chip']:.2e} | {v['compile_s']:.0f}s |")
+    return "\n".join(out), len(rows)
+
+
+def roofline_table(data, tag):
+    rows = [(k, v) for k, v in sorted(data.items())
+            if k.startswith(tag + "/") and v.get("ok")
+            and k.endswith("/single")]
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO FLOPs | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for k, v in rows:
+        _, arch, shape, _ = k.split("/")
+        out.append(
+            f"| {arch} | {shape} | {v['compute_s']:.3f} | "
+            f"{v['memory_s']:.3f} | {v['collective_s']:.3f} | "
+            f"**{v['dominant']}** | {v['useful_flops_fraction']:.2f} | "
+            f"{v['roofline_fraction']:.4f} |")
+    return "\n".join(out), len(rows)
+
+
+def compare_table(data):
+    out = ["| cell | variant | compute s | memory s | collective s | "
+           "useful | roofline frac | gain |",
+           "|---|---|---|---|---|---|---|---|"]
+    for k in sorted(data):
+        if not k.startswith("optimized/") or not data[k].get("ok"):
+            continue
+        _, arch, shape, mesh = k.split("/")
+        if mesh != "single":
+            continue
+        b = data.get(f"baseline/{arch}/{shape}/single", {})
+        o = data[k]
+        if not b.get("ok"):
+            continue
+        gain = o["roofline_fraction"] / max(b["roofline_fraction"], 1e-12)
+        out.append(
+            f"| {arch}/{shape} | baseline | {b['compute_s']:.2f} | "
+            f"{b['memory_s']:.2f} | {b['collective_s']:.2f} | "
+            f"{b['useful_flops_fraction']:.2f} | "
+            f"{b['roofline_fraction']:.4f} | |")
+        out.append(
+            f"| | **optimized** | {o['compute_s']:.2f} | "
+            f"{o['memory_s']:.2f} | {o['collective_s']:.2f} | "
+            f"{o['useful_flops_fraction']:.2f} | "
+            f"**{o['roofline_fraction']:.4f}** | **{gain:.1f}x** |")
+    return "\n".join(out)
+
+
+def cell(data, key):
+    return data.get(key, {})
+
+
+def main():
+    data = json.loads((RESULTS / "dryrun.json").read_text())
+    narrative = (ROOT / "scripts" / "experiments_narrative.md").read_text()
+    dr_s, n_s = dryrun_table(data, "baseline", "single")
+    dr_m, n_m = dryrun_table(data, "baseline", "multi")
+    rf, _ = roofline_table(data, "baseline")
+    rf_opt, _ = roofline_table(data, "optimized")
+    cmp_tbl = compare_table(data)
+
+    text = narrative
+    text = text.replace("{{N_SINGLE}}", str(n_s))
+    text = text.replace("{{N_MULTI}}", str(n_m))
+    text = text.replace("{{DRYRUN_SINGLE}}", dr_s)
+    text = text.replace("{{DRYRUN_MULTI}}", dr_m)
+    text = text.replace("{{ROOFLINE_BASELINE}}", rf)
+    text = text.replace("{{ROOFLINE_OPTIMIZED}}", rf_opt)
+    text = text.replace("{{COMPARE}}", cmp_tbl)
+    (ROOT / "EXPERIMENTS.md").write_text(text)
+    print(f"EXPERIMENTS.md written ({n_s} single + {n_m} multi baseline cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Render results/dryrun.json into the EXPERIMENTS.md tables."""
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if b < 1024:
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}PiB"
+
+
+def main(tag="baseline"):
+    data = json.loads((RESULTS / "dryrun.json").read_text())
+    rows = [(k, v) for k, v in sorted(data.items())
+            if k.startswith(tag + "/") and v.get("ok")]
+
+    print(f"### Dry-run table (tag={tag}) — {len(rows)} cells\n")
+    print("| arch | shape | mesh | args/dev | temp/dev | flops/dev | "
+          "HBM bytes/dev | coll bytes/dev | compile |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for k, v in rows:
+        _, arch, shape, mesh = k.split("/")
+        m = v["memory"]
+        print(f"| {arch} | {shape} | {v['mesh']} | "
+              f"{fmt_bytes(m['argument_bytes'])} | "
+              f"{fmt_bytes(m['temp_bytes'])} | "
+              f"{v['flops_per_chip']:.2e} | "
+              f"{v['hbm_bytes_per_chip']:.2e} | "
+              f"{v['collective_bytes_per_chip']:.2e} | "
+              f"{v['compile_s']:.0f}s |")
+
+    print(f"\n### Roofline table (tag={tag}, single-pod 16x16, v5e terms)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " useful-FLOPs frac | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    singles = [(k, v) for k, v in rows if k.endswith("/single")]
+    for k, v in singles:
+        _, arch, shape, _ = k.split("/")
+        print(f"| {arch} | {shape} | {v['compute_s']:.3f} | "
+              f"{v['memory_s']:.3f} | {v['collective_s']:.3f} | "
+              f"**{v['dominant']}** | {v['useful_flops_fraction']:.2f} | "
+              f"{v['roofline_fraction']:.3f} |")
+
+    # pick hillclimb candidates
+    print("\n### Hillclimb candidate analysis\n")
+    worst = min(singles, key=lambda kv: kv[1]["roofline_fraction"]
+                if kv[1]["flops_per_chip"] > 1e12 else 1)
+    coll = max(singles, key=lambda kv: kv[1]["collective_s"]
+               / max(kv[1]["compute_s"], 1e-9))
+    print("worst roofline fraction (with real compute):", worst[0],
+          worst[1]["roofline_fraction"])
+    print("most collective-bound:", coll[0],
+          coll[1]["collective_s"] / max(coll[1]["compute_s"], 1e-9))
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

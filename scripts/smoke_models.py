@@ -1,0 +1,51 @@
+"""Dev harness: run reduced-config smoke for every arch (forward + prefill +
+decode) on CPU.  Not a test file — used to iterate quickly during development.
+"""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig
+from repro.models import api
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", "train", 64, 2)
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", "prefill", 64, 2)
+SMOKE_DECODE = ShapeConfig("smoke_decode", "decode", 64, 2)
+
+ONLY = sys.argv[1:] if len(sys.argv) > 1 else None
+
+
+def run(arch: str):
+    cfg = registry.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    p = api.init_params(cfg, key)
+    n = sum(x.size for x in jax.tree.leaves(p))
+    batch = api.make_batch(cfg, SMOKE_TRAIN, key)
+    batch.pop("labels", None)
+    logits, aux = api.forward(cfg, p, batch)
+    assert not bool(jnp.isnan(logits).any()), "nan in forward logits"
+    if cfg.family == "dlrm":
+        print(f"  {arch}: params={n:,} fwd={logits.shape} OK (no decode)")
+        return
+    pre_logits, cache = api.prefill(cfg, p, batch, max_len=SMOKE_DECODE.seq_len)
+    assert not bool(jnp.isnan(pre_logits).any()), "nan in prefill"
+    toks = jnp.zeros((SMOKE_DECODE.global_batch,), jnp.int32)
+    dlogits, cache = api.decode_step(cfg, p, cache, toks)
+    assert not bool(jnp.isnan(dlogits).any()), "nan in decode"
+    print(f"  {arch}: params={n:,} fwd={logits.shape} "
+          f"pre={pre_logits.shape} dec={dlogits.shape} OK")
+
+
+fails = 0
+for arch in (ONLY or registry.ALL_ARCHS):
+    try:
+        run(arch)
+    except Exception:
+        fails += 1
+        print(f"  {arch}: FAIL")
+        traceback.print_exc()
+print("FAILURES:", fails)
+sys.exit(1 if fails else 0)

@@ -1,0 +1,16 @@
+from repro.configs.base import (AttentionConfig, DLRMConfig,
+                                EmbeddingTableConfig, LM_SHAPES, ModelConfig,
+                                MoEConfig, OptimizerConfig, ParallelConfig,
+                                RunConfig, ShapeConfig, SSMConfig,
+                                TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.configs.registry import (ALL_ARCHS, ASSIGNED_ARCHS, all_cells,
+                                    get_config, get_reduced, shapes_for,
+                                    skipped_cells)
+
+__all__ = [
+    "AttentionConfig", "DLRMConfig", "EmbeddingTableConfig", "LM_SHAPES",
+    "ModelConfig", "MoEConfig", "OptimizerConfig", "ParallelConfig",
+    "RunConfig", "ShapeConfig", "SSMConfig", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "ALL_ARCHS", "ASSIGNED_ARCHS", "all_cells",
+    "get_config", "get_reduced", "shapes_for", "skipped_cells",
+]

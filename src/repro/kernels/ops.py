@@ -1,0 +1,50 @@
+"""Jit'd wrappers around the Pallas kernels with automatic interpret fallback.
+
+On a TPU backend the kernels compile natively; on CPU (this container) they
+run under ``interpret=True`` for correctness validation.  ``use_pallas=False``
+call sites fall back to the jnp reference — that is what the multi-device
+dry-run lowers, since Pallas TPU kernels cannot lower for host devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.embedding_grad import scatter_kernel_call
+from repro.kernels.embedding_lookup import gather_kernel_call, lookup_kernel_call
+from repro.kernels.flash_attention import flash_attention as _flash
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=())
+def embedding_gather(table, ids):
+    return gather_kernel_call(table, ids, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("combiner",))
+def embedding_lookup(table, ids, combiner: str = "sum"):
+    return lookup_kernel_call(table, ids, combiner=combiner,
+                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("vocab",))
+def embedding_scatter(grads, ids, vocab: int):
+    return scatter_kernel_call(grads, ids, vocab, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 256):
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  scale=scale, bq=bq, bk=bk, interpret=_interpret())

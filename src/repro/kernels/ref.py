@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def embedding_gather_ref(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """(V, D), (B, Vl) -> (B, Vl, D); rows for ids < 0 are zero."""
+    valid = (ids >= 0)[..., None]
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    return jnp.where(valid, rows, 0.0)
+
+
+def embedding_lookup_ref(table: jax.Array, ids: jax.Array,
+                         combiner: str = "sum") -> jax.Array:
+    """(V, D), (B, Vl) -> (B, D) combined."""
+    rows = embedding_gather_ref(table, ids)
+    valid = (ids >= 0).astype(table.dtype)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(valid.sum(axis=1), 1.0)[..., None]
+    return out
+
+
+def embedding_scatter_ref(grads: jax.Array, ids: jax.Array,
+                          vocab: int) -> jax.Array:
+    """(N, D), (N,) unique ids (-1 pad) -> (V, D) gradient table."""
+    valid = (ids >= 0)[:, None]
+    safe = jnp.maximum(ids, 0)
+    return jnp.zeros((vocab, grads.shape[1]), grads.dtype).at[safe].add(
+        jnp.where(valid, grads, 0.0))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q (B, H, T, d); k, v (B, KH, S, d) -> (B, H, T, d)."""
+    B, H, T, d = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = d ** -0.5
+    qr = q.reshape(B, KH, G, T, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgtd,bksd->bkgts", qr, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    allow = jnp.ones((T, S), bool)
+    if causal:
+        allow &= kpos <= qpos
+    if window is not None:
+        allow &= (qpos - kpos) < window
+    s = jnp.where(allow, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, T, d).astype(q.dtype)

@@ -1,0 +1,338 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` visits while-loop bodies ONCE, so any scan-based
+model (layers, microbatches, attention chunks) is undercounted by the trip
+counts.  This parser rebuilds per-computation costs from ``compiled.as_text()``
+and multiplies through the call graph:
+
+  * FLOPs   — 2*M*N*K for every dot (operand shapes resolved through each
+    computation's symbol table); convolutions via window size,
+  * HBM bytes — operand + output bytes of top-level (post-fusion) ops —
+    fusion-internal computations are excluded (they live in registers/VMEM),
+  * collective bytes — output shape bytes × on-wire multiplier per kind.
+
+Trip counts come from the ``known_trip_count`` backend configs XLA emits for
+lax.scan loops; computations reachable from a while body inherit the product
+of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_WIRE = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_KIND = re.compile(r"^(\([^=]*\)|\S+)\s+([a-z][a-z0-9\-]*)\(")
+
+# ops whose operands/outputs represent real HBM traffic at the top level
+_HBM_OPS = {
+    "fusion", "dot", "convolution", "copy", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "sort", "reduce",
+    "transpose", "broadcast", "concatenate", "pad", "slice", "reverse",
+    "all-gather-start", "all-reduce-start", "bitcast-convert", "select",
+    "convert", "cholesky", "triangular-solve", "rng",
+}
+# internal-call edge kinds (their computations are fusion bodies, not HBM)
+_INTERNAL_ATTRS = ("calls", "to_apply", "called_computations")
+
+
+def _dims_of(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d.strip()]
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    return [(t, _dims_of(d)) for t, d in _SHAPE_TOKEN.findall(text)
+            if t in _DTYPE_BYTES]
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for t, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[t]
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "kind", "out_shapes", "operands", "line")
+
+    def __init__(self, name, kind, out_shapes, operands, line):
+        self.name = name
+        self.kind = kind
+        self.out_shapes = out_shapes
+        self.operands = operands
+        self.line = line
+
+
+class HloCost:
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo)
+        self.mults, self.internal = self._call_graph()
+
+    # -- parsing ---------------------------------------------------------------
+
+    def _parse(self, hlo: str) -> None:
+        cur: Optional[str] = None
+        for line in hlo.splitlines():
+            line = re.sub(r"/\*.*?\*/", "", line)   # strip /*index=N*/ etc.
+            hm = _COMP_HDR.match(line)
+            if hm:
+                cur = hm.group(2)
+                self.comps[cur] = []
+                if hm.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name, rhs = dm.group(1), dm.group(2)
+            km = _OP_KIND.match(rhs)
+            if not km:
+                continue
+            out_str, kind = km.group(1), km.group(2)
+            out_shapes = _shapes_in(out_str)
+            # operand names inside the first (...) group
+            paren = rhs[km.end() - 1:]
+            depth = 0
+            args = ""
+            for ch in paren:
+                if ch == "(":
+                    depth += 1
+                    if depth == 1:
+                        continue
+                if ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                if depth >= 1:
+                    args += ch
+            operands = re.findall(r"%([\w.\-]+)", args)
+            self.comps[cur].append(_Op(name, kind, out_shapes, operands,
+                                       rhs))
+
+    # -- call graph ----------------------------------------------------------------
+
+    def _call_graph(self) -> Tuple[Dict[str, int], Set[str]]:
+        edges: Dict[str, List[Tuple[str, int, bool]]] = \
+            collections.defaultdict(list)
+        for cname, ops in self.comps.items():
+            for op in ops:
+                trip = 1
+                tm = re.search(r'known_trip_count[^0-9]*?(\d+)', op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                for attr in ("body", "condition") + _INTERNAL_ATTRS + \
+                        ("branch_computations",):
+                    for am in re.finditer(
+                            attr + r"=\{?%?([\w.\-]+(?:, ?%[\w.\-]+)*)\}?",
+                            op.line):
+                        for callee in re.findall(r"[\w.\-]+", am.group(1)):
+                            if callee not in self.comps:
+                                continue
+                            mult = trip if attr == "body" else 1
+                            internal = attr in _INTERNAL_ATTRS
+                            edges[cname].append((callee, mult, internal))
+        root = self.entry or next(iter(self.comps), None)
+        mults: Dict[str, int] = collections.defaultdict(int)
+        internal: Set[str] = set()
+
+        seen_stack: List[str] = []
+
+        def walk(name: str, mult: int, depth: int):
+            if depth > 64 or name in seen_stack:
+                return
+            mults[name] += mult
+            seen_stack.append(name)
+            for callee, m, is_int in edges.get(name, []):
+                if is_int:
+                    internal.add(callee)
+                walk(callee, mult * m, depth + 1)
+            seen_stack.pop()
+
+        if root:
+            walk(root, 1, 0)
+        return dict(mults), internal
+
+    # -- symbol table helpers ----------------------------------------------------------
+
+    def _shape_map(self, cname: str) -> Dict[str, List[Tuple[str, List[int]]]]:
+        return {op.name: op.out_shapes for op in self.comps[cname]}
+
+    # -- costs ----------------------------------------------------------------------
+
+    def dot_flops(self) -> float:
+        total = 0.0
+        for cname, ops in self.comps.items():
+            mult = self.mults.get(cname, 0)
+            if mult == 0:
+                continue
+            smap = self._shape_map(cname)
+            for op in ops:
+                if op.kind == "dot":
+                    total += mult * self._dot_flops(op, smap)
+                elif op.kind == "convolution":
+                    total += mult * self._conv_flops(op)
+        return total
+
+    def _dot_flops(self, op: _Op, smap) -> float:
+        out_elems = 1
+        for t, dims in op.out_shapes:
+            for d in dims:
+                out_elems *= d
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        k = 1
+        if cm and op.operands:
+            lhs_shapes = smap.get(op.operands[0], [])
+            if lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for idx in _dims_of(cm.group(1)):
+                    if idx < len(dims):
+                        k *= dims[idx]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, op: _Op) -> float:
+        out_elems = 1
+        for t, dims in op.out_shapes:
+            for d in dims:
+                out_elems *= d
+        k = 1
+        wm = re.search(r"window=\{size=([0-9x]+)", op.line)
+        if wm:
+            for d in wm.group(1).split("x"):
+                k *= int(d)
+        return 2.0 * out_elems * k
+
+    def _fusion_callee(self, op: _Op) -> Optional[str]:
+        m = re.search(r"calls=%?([\w.\-]+)", op.line)
+        return m.group(1) if m else None
+
+    def _slice_aware_bytes(self, op: _Op, smap) -> float:
+        """Operand+output bytes, charging only the touched slice when a
+        fusion merely dynamic-slices / dynamic-update-slices a big buffer
+        (the scan-carry pattern: stacked weights, KV caches, grad
+        accumulators)."""
+        callee = self._fusion_callee(op) if op.kind == "fusion" else None
+        param_usage: Dict[int, float] = {}
+        out_override: Optional[float] = None
+        if callee and callee in self.comps:
+            cops = self.comps[callee]
+            csmap = {o.name: o.out_shapes for o in cops}
+            pname_to_idx = {}
+            for o in cops:
+                pm = re.search(r"\bparameter\((\d+)\)", o.line)
+                if pm:
+                    pname_to_idx[o.name] = int(pm.group(1))
+            consumers: Dict[str, List[_Op]] = collections.defaultdict(list)
+            for o in cops:
+                for src in o.operands:
+                    consumers[src].append(o)
+            _PASS = {"bitcast", "reshape", "copy", "transpose"}
+
+            def terminal_consumers(name, depth=0):
+                """Consumers, looking through layout-only pass-through ops."""
+                out = []
+                for c in consumers.get(name, []):
+                    if c.kind in _PASS and depth < 6:
+                        out.extend(terminal_consumers(c.name, depth + 1))
+                    else:
+                        out.append((name, c))
+                return out
+
+            for pn, idx in pname_to_idx.items():
+                cons = terminal_consumers(pn)
+                if cons and all(c.kind == "dynamic-slice" and
+                                c.operands and c.operands[0] == via
+                                for via, c in cons):
+                    param_usage[idx] = sum(
+                        _bytes_of(c.out_shapes) for _, c in cons)
+                elif cons and all(c.kind == "dynamic-update-slice" and
+                                  c.operands and c.operands[0] == via
+                                  for via, c in cons):
+                    # in-place buffer: traffic = the written update region
+                    param_usage[idx] = sum(
+                        _bytes_of(csmap.get(c.operands[1], []))
+                        for _, c in cons if len(c.operands) > 1)
+            root = cops[-1] if cops else None
+            for o in cops:
+                if o.line.startswith("ROOT") or " ROOT " in o.line:
+                    root = o
+            if root is not None and root.kind == "dynamic-update-slice" \
+                    and len(root.operands) > 1:
+                out_override = _bytes_of(csmap.get(root.operands[1], []))
+        total = (out_override if out_override is not None
+                 else _bytes_of(op.out_shapes))
+        for i, o in enumerate(op.operands):
+            if i in param_usage:
+                total += param_usage[i]
+            else:
+                total += _bytes_of(smap.get(o, []))
+        return total
+
+    def hbm_bytes(self) -> float:
+        total = 0.0
+        for cname, ops in self.comps.items():
+            mult = self.mults.get(cname, 0)
+            if mult == 0 or cname in self.internal:
+                continue
+            smap = self._shape_map(cname)
+            for op in ops:
+                if op.kind not in _HBM_OPS:
+                    continue
+                if op.kind == "dynamic-slice":
+                    b = 2.0 * _bytes_of(op.out_shapes)
+                elif op.kind == "dynamic-update-slice":
+                    upd = (_bytes_of(smap.get(op.operands[1], []))
+                           if len(op.operands) > 1 else 0.0)
+                    b = 2.0 * upd
+                else:
+                    b = self._slice_aware_bytes(op, smap)
+                total += mult * b
+        return total
+
+    def collective_bytes(self) -> Dict[str, float]:
+        out = {k: 0.0 for k in COLLECTIVE_WIRE}
+        for cname, ops in self.comps.items():
+            mult = self.mults.get(cname, 0)
+            if mult == 0:
+                continue
+            for op in ops:
+                kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+                if kind in COLLECTIVE_WIRE:
+                    out[kind] += (mult * COLLECTIVE_WIRE[kind]
+                                  * _bytes_of(op.out_shapes))
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        coll = self.collective_bytes()
+        return {
+            "flops": self.dot_flops(),
+            "hbm_bytes": self.hbm_bytes(),
+            "collective_bytes": sum(coll.values()),
+            **{f"coll_{k}": v for k, v in coll.items()},
+        }

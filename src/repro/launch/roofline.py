@@ -1,0 +1,191 @@
+"""Three-term roofline analysis from compiled dry-run artifacts (§Roofline).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+``compiled.cost_analysis()`` supplies per-partition FLOPs and bytes;
+collective bytes are NOT in cost_analysis, so we parse the optimized HLO
+(``compiled.as_text()``) and sum shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, with the
+standard on-wire multipliers (all-reduce moves 2x its payload, etc.).
+Ops inside while-loop bodies (the layer scan) are multiplied by the trip
+count when it can be recovered from the HLO constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# grading-spec hardware constants (TPU v5e-class target)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\(?[^)=]*\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _loop_trip_counts(hlo: str) -> Dict[str, int]:
+    """Best-effort map: while-body computation name -> trip count."""
+    trips: Dict[str, int] = {}
+    # XLA prints e.g. `while(...), condition=..., body=%body.123 ...
+    #   backend_config={"known_trip_count":{"n":"42"}}`
+    for m in re.finditer(
+            r"while\([^)]*\).*?body=%?([\w.\-]+).*?"
+            r"known_trip_count[^0-9]*(\d+)", hlo):
+        trips[m.group(1)] = int(m.group(2))
+    return trips
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Per-device on-wire bytes by collective kind (loop-aware)."""
+    trips = _loop_trip_counts(hlo)
+    # split into computations to apply trip counts
+    comps = re.split(r"\n(?=%?[\w.\-]+ \([\w.,%\[\] ]*\) -> )", hlo)
+    # fallback: whole text as one computation with multiplier 1
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for comp in comps:
+        header = comp.split("\n", 1)[0]
+        name_m = re.match(r"%?([\w.\-]+) \(", header)
+        mult = 1
+        if name_m:
+            for body_name, n in trips.items():
+                if name_m.group(1) == body_name:
+                    mult = n
+                    break
+        for m in _OP_RE.finditer(comp):
+            shape_str, kind = m.group(1), m.group(2)
+            out[kind] += _COLLECTIVES[kind] * _shape_bytes(shape_str) * mult
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float               # 6*N_active*D (train) / 2*N_active*D
+    bytes_per_chip_peak: float       # memory_analysis peak
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops_per_chip / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes_per_chip / HBM_BW
+        self.collective_s = self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return (self.model_flops / total) if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak the dominant-term-bound step achieves on the
+        *useful* (MODEL_FLOPS) work."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful_per_chip = self.model_flops / self.chips
+        return (useful_per_chip / PEAK_FLOPS) / self.bound_s
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "bytes_per_chip_peak": self.bytes_per_chip_peak,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference forward).
+
+    DLRM: N = dense-tower parameters (embedding lookups are gathers, not
+    matmuls — their cost is the memory/collective terms, §3.4)."""
+    if cfg.family == "dlrm":
+        from repro.models.counting import _dlrm_dense_params
+        n_active = _dlrm_dense_params(cfg)
+    else:
+        n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} "
+           f"{'compute':>10s} {'memory':>10s} {'collect':>10s} "
+           f"{'bound':>11s} {'useful%':>8s} {'roof%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        dom = r["dominant"][:4]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['compute_s']*1e3:9.2f}m {r['memory_s']*1e3:9.2f}m "
+            f"{r['collective_s']*1e3:9.2f}m {bound*1e3:7.2f}m({dom}) "
+            f"{100*r['useful_flops_fraction']:7.1f}% "
+            f"{100*r['roofline_fraction']:6.1f}%")
+    return "\n".join(lines)

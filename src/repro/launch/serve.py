@@ -1,0 +1,40 @@
+"""CLI serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 8
+"""
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import api
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b",
+                    choices=[a for a in registry.ALL_ARCHS if a != "dlrm0"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = registry.get_reduced(args.arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                      prompt_len=args.prompt_len)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8),
+                   max_new_tokens=args.new_tokens)
+    print(json.dumps(eng.run(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

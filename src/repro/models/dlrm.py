@@ -1,0 +1,134 @@
+"""DLRM0 — the paper's production recommendation workload (§3, Figs 8-10).
+
+Sparse stack (SparseCore): EmbeddingCollection lookup with dedup + all-to-all.
+Dense stack (TensorCore): bottom MLP over dense features, feature interaction,
+top MLP to a single logit.  The SC/TC split is explicit so the sparsecore
+timing model (core/sparsecore.py) and the PA-NAS balance search (§4) can
+reason about the two sides independently.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.embeddings.engine import EmbeddingCollection
+from repro.parallel.context import LOCAL, ParallelContext
+
+
+def collection_for(cfg: ModelConfig, num_shards: int = 1
+                   ) -> EmbeddingCollection:
+    return EmbeddingCollection(cfg.dlrm.tables, num_shards)
+
+
+def _mlp_init(key, dims, in_dim):
+    params = []
+    ks = jax.random.split(key, len(dims))
+    prev = in_dim
+    for k, h in zip(ks, dims):
+        w = (jax.random.truncated_normal(k, -2.0, 2.0, (prev, h), jnp.float32)
+             / np.sqrt(prev))
+        params.append({"w": w, "b": jnp.zeros((h,), jnp.float32)})
+        prev = h
+    return params
+
+
+def _mlp_apply(params, x, final_linear: bool = True):
+    n = len(params)
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"].astype(x.dtype) + lyr["b"].astype(x.dtype)
+        if i < n - 1 or not final_linear:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(cfg: ModelConfig, key, num_shards: int = 1) -> Dict[str, Any]:
+    d = cfg.dlrm
+    coll = collection_for(cfg, num_shards)
+    k1, k2, k3 = jax.random.split(key, 3)
+    bottom_out = d.bottom_mlp[-1]
+    inter_dim = bottom_out + sum(t.dim for t in d.tables)
+    return {
+        "tables": coll.init(k1),
+        "bottom": _mlp_init(k2, d.bottom_mlp, d.dense_features),
+        "top": _mlp_init(k3, d.top_mlp, inter_dim),
+    }
+
+
+def sparse_forward(cfg: ModelConfig, p, batch, ctx: ParallelContext = LOCAL,
+                   *, coll: Optional[EmbeddingCollection] = None,
+                   method: str = "auto", use_kernel: bool = False):
+    """SC side: returns concatenated per-table embeddings (B, sum_dims)."""
+    coll = coll or collection_for(cfg, ctx.model_axis_size)
+    feats = {t.name: batch[f"cat_{t.name}"] for t in cfg.dlrm.tables}
+    emb = coll.lookup(p["tables"], feats, ctx, method=method,
+                      use_kernel=use_kernel)
+    return jnp.concatenate([emb[t.name].astype(jnp.bfloat16)
+                            for t in cfg.dlrm.tables], axis=-1)
+
+
+def dense_forward(cfg: ModelConfig, p, batch, sparse_vec):
+    """TC side: bottom MLP + interaction + top MLP -> logits (B,)."""
+    x = batch["dense"].astype(jnp.bfloat16)
+    bot = _mlp_apply(p["bottom"], x, final_linear=False)
+    inter = jnp.concatenate([bot, sparse_vec], axis=-1)
+    logit = _mlp_apply(p["top"], inter, final_linear=True)
+    return logit[..., 0].astype(jnp.float32)
+
+
+def forward(cfg: ModelConfig, p, batch, ctx: ParallelContext = LOCAL,
+            *, coll: Optional[EmbeddingCollection] = None,
+            method: str = "auto", use_kernel: bool = False, **_):
+    logits = dense_forward(
+        cfg, p, batch,
+        sparse_forward(cfg, p, batch, ctx, coll=coll, method=method,
+                       use_kernel=use_kernel))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, p, batch, ctx: ParallelContext = LOCAL,
+            *, coll: Optional[EmbeddingCollection] = None,
+            method: str = "auto"):
+    logits, aux = forward(cfg, p, batch, ctx, coll=coll, method=method)
+    labels = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, aux
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {
+        "dense": sds((B, cfg.dlrm.dense_features), jnp.float32),
+    }
+    for t in cfg.dlrm.tables:
+        out[f"cat_{t.name}"] = sds((B, t.max_valency), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = sds((B,), jnp.int32)
+    return out
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict[str, Any]:
+    """Zipf-distributed categorical ids with valency padding (synthetic)."""
+    B = shape.global_batch
+    ks = jax.random.split(key, len(cfg.dlrm.tables) + 2)
+    out = {"dense": jax.random.normal(ks[0], (B, cfg.dlrm.dense_features)),
+           "labels": jax.random.bernoulli(
+               ks[1], 0.3, (B,)).astype(jnp.int32)}
+    for t, k in zip(cfg.dlrm.tables, ks[2:]):
+        k1, k2 = jax.random.split(k)
+        # approximate zipf: exponential of exponential spread over vocab
+        u = jax.random.uniform(k1, (B, t.max_valency), minval=1e-6, maxval=1.0)
+        ids = jnp.minimum((u ** 2.0) * t.vocab_size,
+                          t.vocab_size - 1).astype(jnp.int32)
+        # valency mask: on average avg_valency live slots
+        keep_p = min(1.0, t.avg_valency / max(t.max_valency, 1))
+        live = jax.random.bernoulli(k2, keep_p, (B, t.max_valency))
+        live = live.at[:, 0].set(True)       # at least one value
+        out[f"cat_{t.name}"] = jnp.where(live, ids, -1)
+    return out

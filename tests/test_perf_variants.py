@@ -1,0 +1,114 @@
+"""§Perf optimization variants must match the baseline numerics:
+qchunked attention, chunked cross-entropy, bf16 wire paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry, ShapeConfig
+from repro.launch import steps as STEPS
+from repro.models import api
+from repro.models.layers import (blocked_attention,
+                                 blocked_attention_qchunked,
+                                 reference_attention)
+from repro.parallel.context import LOCAL
+
+
+def mostly_close(a, b, rtol=3e-2, atol=5e-2, frac=0.99):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    ok = np.abs(a - b) <= (atol + rtol * np.abs(b))
+    assert ok.mean() >= frac, (float(ok.mean()), float(np.abs(a - b).max()))
+
+
+class TestQChunkedAttention:
+    @pytest.mark.parametrize("window", [None, 16, 32])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_reference(self, window, causal):
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 3)
+        B, T, H, KH, D = 2, 64, 4, 2, 16
+        q = jax.random.normal(ks[0], (B, T, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, T, KH, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, T, KH, D), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        got = blocked_attention_qchunked(
+            q, k, v, pos, pos, causal=causal, window=window,
+            q_chunk=16, kv_chunk=16)
+        want = reference_attention(q, k, v, pos, pos, causal=causal,
+                                   window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_pair_pruning_counts(self):
+        """Causal prunes ~half the pairs; windows prune to the band."""
+        key = jax.random.PRNGKey(1)
+        B, T, H, D = 1, 64, 2, 8
+        q = jax.random.normal(key, (B, T, H, D))
+        kv = jax.random.normal(key, (B, T, H, D))
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        # verify numerics at several chunk configs (pair lists differ)
+        outs = [blocked_attention_qchunked(q, kv, kv, pos, pos,
+                                           q_chunk=cq, kv_chunk=ck)
+                for cq, ck in [(8, 8), (16, 8), (8, 16), (64, 64)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                       rtol=2e-2, atol=2e-2)
+
+    @pytest.mark.parametrize("arch", ["gemma2-9b", "olmo-1b",
+                                      "hymba-1.5b"])
+    def test_model_forward_equivalence(self, arch):
+        cfg = registry.get_reduced(arch)
+        key = jax.random.PRNGKey(0)
+        params = api.init_params(cfg, key)
+        batch = api.make_batch(cfg, ShapeConfig("t", "prefill", 64, 2), key)
+        l1, _ = api.forward(cfg, params, batch, attn_impl="blocked")
+        l2, _ = api.forward(cfg, params, batch, attn_impl="qchunked")
+        mostly_close(l1, l2)
+
+
+class TestChunkedXent:
+    def test_loss_and_grads_match(self):
+        cfg = registry.get_reduced("olmo-1b")
+        shape = ShapeConfig("t", "train", 32, 4)
+        key = jax.random.PRNGKey(0)
+        params = api.init_params(cfg, key)
+        batch = api.make_batch(cfg, shape, key)
+        l1, _ = STEPS.loss_fn(cfg, params, batch, LOCAL)
+        l2, _ = STEPS.loss_fn(cfg, params, batch, LOCAL, xent_chunk=8)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+        g1 = jax.grad(lambda p: STEPS.loss_fn(cfg, p, batch, LOCAL)[0])(
+            params)
+        g2 = jax.grad(lambda p: STEPS.loss_fn(
+            cfg, p, batch, LOCAL, xent_chunk=8)[0])(params)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-2, atol=1e-4)
+
+    def test_accum_drops_with_chunking(self):
+        from repro.configs.base import TRAIN_4K
+        from repro.launch.steps import pick_accum_steps
+
+        class FakeCtx:
+            mesh = type("M", (), {"devices": np.zeros((16, 16))})()
+
+        cfg = registry.get_config("kimi-k2-1t-a32b")
+        full = pick_accum_steps(cfg, TRAIN_4K, FakeCtx())
+        chunked = pick_accum_steps(cfg, TRAIN_4K, FakeCtx(), xent_chunk=256)
+        assert chunked < full
+        assert chunked == 1
+
+
+class TestEmbeddingWireBf16:
+    def test_values_close_to_fp32(self):
+        # bf16-on-the-wire changes only low-order bits of combined vectors
+        from repro.configs.base import EmbeddingTableConfig
+        from repro.embeddings.engine import EmbeddingCollection
+        specs = [EmbeddingTableConfig("t", 256, 16, 4.0, 4, "sum")]
+        coll = EmbeddingCollection(specs, num_shards=1)
+        params = coll.init(jax.random.PRNGKey(0))
+        feats = {"t": jax.random.randint(jax.random.PRNGKey(1), (8, 4), -1,
+                                         256, jnp.int32)}
+        out = coll.lookup(params, feats)
+        # local path ignores wire flags; this asserts the API stays stable
+        assert out["t"].shape == (8, 16)

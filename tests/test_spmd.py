@@ -1,0 +1,21 @@
+"""Runs the multi-device SPMD checks in a subprocess (8 fake devices)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.timeout(1200)
+def test_spmd_suite():
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root"}
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "spmd_worker.py")],
+        capture_output=True, text=True, env=env, timeout=1100)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "SPMD subprocess failed"
+    assert "ALL_SPMD_OK" in proc.stdout

@@ -1,0 +1,98 @@
+"""Topology invariants + the paper's Figure 6 / Table 2 / §2.9 claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (SliceTopology, geometries_for, is_twistable)
+
+DIMS = st.tuples(st.sampled_from([4, 8]), st.sampled_from([4, 8]),
+                 st.sampled_from([4, 8, 12]))
+
+
+class TestTorusStructure:
+    @settings(max_examples=12, deadline=None)
+    @given(DIMS)
+    def test_degree_is_six(self, dims):
+        topo = SliceTopology(tuple(sorted(dims)))
+        degs = {len(a) for a in topo.adjacency()}
+        assert degs == {6}
+
+    @settings(max_examples=8, deadline=None)
+    @given(DIMS)
+    def test_edge_count(self, dims):
+        topo = SliceTopology(tuple(sorted(dims)))
+        assert len(topo.edges()) == 3 * topo.num_chips
+
+    def test_twisted_regular_degree(self):
+        for dims in [(4, 4, 8), (4, 8, 8)]:
+            t = SliceTopology(dims, twisted=True)
+            assert {len(a) for a in t.adjacency()} == {6}
+            assert len(t.edges()) == 3 * t.num_chips
+
+    def test_twist_requires_legal_geometry(self):
+        with pytest.raises(AssertionError):
+            SliceTopology((4, 4, 4), twisted=True)
+        with pytest.raises(AssertionError):
+            SliceTopology((4, 8, 16), twisted=True)
+
+    def test_twistable_predicate(self):
+        assert is_twistable((4, 4, 8))
+        assert is_twistable((4, 8, 8))
+        assert is_twistable((8, 8, 16))
+        assert is_twistable((8, 16, 16))
+        assert not is_twistable((4, 4, 4))
+        assert not is_twistable((8, 8, 8))
+        assert not is_twistable((2, 2, 4))     # n >= 4 required
+        assert not is_twistable((4, 8, 12))
+
+
+class TestPaperClaims:
+    def test_fig6_twisted_alltoall_gains(self):
+        """Fig 6: twisted vs regular all-to-all = 1.63x (4x4x8), 1.31x
+        (4x8x8).  Our ideal-routing model must land within +-15%."""
+        for dims, measured in [((4, 4, 8), 1.63), ((4, 8, 8), 1.31)]:
+            reg = SliceTopology(dims).alltoall_max_load()
+            twi = SliceTopology(dims, twisted=True).alltoall_max_load()
+            gain = reg / twi
+            assert abs(gain - measured) / measured < 0.15, (dims, gain)
+
+    def test_twist_doubles_bisection(self):
+        for dims in [(4, 4, 8), (4, 8, 8)]:
+            b_reg = SliceTopology(dims).bisection_links()
+            b_twi = SliceTopology(dims, twisted=True).bisection_links()
+            assert b_twi == 2 * b_reg
+
+    def test_twist_reduces_diameter_and_hops(self):
+        for dims in [(4, 4, 8), (4, 8, 8)]:
+            dr, ar = SliceTopology(dims).diameter_and_avg_hops()
+            dt, at = SliceTopology(dims, twisted=True).diameter_and_avg_hops()
+            assert dt < dr
+            assert at < ar
+
+    def test_3d_beats_2d_bisection(self):
+        """§2: the 3D torus motivator — N^(2/3) vs N^(1/2) scaling."""
+        b3 = SliceTopology((4, 4, 8)).bisection_links()
+        b2 = SliceTopology((8, 16, 1)).bisection_links()
+        assert b3 / b2 >= 2.0
+
+    def test_table2_geometries_enumerable(self):
+        """Every >=64-chip geometry in Table 2 is a 4i x 4j x 4k slice."""
+        table2 = [(4, 4, 4), (4, 4, 8), (4, 8, 8), (4, 4, 12), (4, 4, 16),
+                  (4, 8, 12), (8, 8, 8), (4, 8, 16), (4, 4, 32), (8, 8, 12),
+                  (8, 8, 16), (4, 16, 16), (4, 4, 64), (4, 8, 32),
+                  (8, 12, 16), (4, 4, 96), (8, 8, 24), (8, 16, 16),
+                  (12, 16, 16)]
+        for dims in table2:
+            n = dims[0] * dims[1] * dims[2]
+            assert tuple(sorted(dims)) in geometries_for(n), dims
+
+
+class TestGeometryEnumeration:
+    @settings(max_examples=10, deadline=None)
+    @given(st.sampled_from([64, 128, 256, 512, 1024, 2048, 4096]))
+    def test_all_products_match(self, n):
+        for dims in geometries_for(n):
+            a, b, c = dims
+            assert a * b * c == n
+            assert a <= b <= c
+            assert a % 4 == b % 4 == c % 4 == 0
