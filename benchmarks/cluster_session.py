@@ -1,0 +1,71 @@
+"""Cluster session benchmark: serve tokens/s through the `repro.cluster`
+API, recorded to BENCH_cluster.json so the perf trajectory of the serving
+path is tracked PR over PR.
+
+Method: allocate a slice, open a serve session on a reduced LM, run one
+warmup batch (absorbs jit compilation of the prefill/decode programs), then
+time a measured batch of requests in steady state.
+"""
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.cluster import SliceSpec, Supercomputer
+from repro.configs import registry
+from repro.models import api
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_cluster.json"
+
+ARCH = "olmo-1b"
+SPEC = SliceSpec(slots=4, max_len=64, prompt_len=16)
+REQUESTS = 8
+NEW_TOKENS = 16
+
+
+def run():
+    cfg = registry.get_reduced(ARCH)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    sc = Supercomputer()
+    rows = []
+    with sc.allocate((4, 4, 8)) as sl:
+        session = sl.serve(cfg, params, SPEC)
+        rng = np.random.default_rng(0)
+
+        # warmup: compile prefill + decode
+        session.submit(rng.integers(0, cfg.vocab_size, size=8),
+                       max_new_tokens=4)
+        t0 = time.perf_counter()
+        session.run()
+        warmup_s = time.perf_counter() - t0
+
+        for _ in range(REQUESTS):
+            session.submit(rng.integers(0, cfg.vocab_size, size=8),
+                           max_new_tokens=NEW_TOKENS)
+        t0 = time.perf_counter()
+        stats = session.run()
+        wall = time.perf_counter() - t0
+        tokens = REQUESTS * NEW_TOKENS           # steady-state batch only
+        tps = tokens / max(wall, 1e-9)
+
+        record = {
+            "arch": ARCH,
+            "slice": sl.describe(),
+            "spec": {"slots": SPEC.slots, "max_len": SPEC.max_len,
+                     "prompt_len": SPEC.prompt_len},
+            "requests": REQUESTS,
+            "new_tokens_per_request": NEW_TOKENS,
+            "serve_tokens_per_s": round(tps, 2),
+            "steady_state_wall_s": round(wall, 4),
+            "warmup_s": round(warmup_s, 2),
+            "mean_ttft_s": stats["mean_ttft_s"],
+        }
+    OUT.write_text(json.dumps(record, indent=2) + "\n")
+    rows.append(("cluster_serve_tokens_per_s", wall * 1e6,
+                 f"tok_per_s={tps:.1f};arch={ARCH};slots={SPEC.slots}"))
+    rows.append(("cluster_serve_warmup", warmup_s * 1e6,
+                 f"compile+first_batch_s={warmup_s:.2f}"))
+    return rows

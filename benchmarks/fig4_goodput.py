@@ -1,25 +1,31 @@
-"""Figure 4: goodput vs CPU-host availability, OCS vs static cabling."""
+"""Figure 4: goodput vs CPU-host availability, OCS vs static cabling.
+
+Driven through the `Supercomputer` facade's fleet arithmetic."""
 import time
 
-from repro.core.goodput import goodput_ocs, goodput_static
+from repro.cluster import Supercomputer
 
 
 def run():
+    sc = Supercomputer()
     rows = []
     slices = [256, 512, 1024, 2048, 3072]
     for av in (0.99, 0.995, 0.999):
         for s in slices:
             t0 = time.perf_counter()
-            g_ocs = goodput_ocs(s, av, trials=2000)
-            g_static = goodput_static(s, av, trials=200)
+            g_ocs = sc.expected_goodput(s, av, mode="ocs", trials=2000)
+            g_static = sc.expected_goodput(s, av, mode="static", trials=200)
             us = (time.perf_counter() - t0) * 1e6
             rows.append((f"fig4_goodput_{s}chips_av{av}", us,
                          f"ocs={g_ocs:.3f};static={g_static:.3f}"))
     # caption fixed points
     checks = [
-        ("fig4_caption_1k_99.0", goodput_ocs(1024, 0.99, trials=4000), 0.75),
-        ("fig4_caption_2k_99.0", goodput_ocs(2048, 0.99, trials=4000), 0.50),
-        ("fig4_caption_3k_99.0", goodput_ocs(3072, 0.99, trials=4000), 0.75),
+        ("fig4_caption_1k_99.0",
+         sc.expected_goodput(1024, 0.99, mode="ocs", trials=4000), 0.75),
+        ("fig4_caption_2k_99.0",
+         sc.expected_goodput(2048, 0.99, mode="ocs", trials=4000), 0.50),
+        ("fig4_caption_3k_99.0",
+         sc.expected_goodput(3072, 0.99, mode="ocs", trials=4000), 0.75),
     ]
     for name, got, want in checks:
         rows.append((name, 0.0, f"got={got:.3f};paper={want};"

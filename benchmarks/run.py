@@ -16,6 +16,7 @@ BENCHES = [
     "table3_autotopo",
     "fig16_roofline",
     "ocs_cost_ib",
+    "cluster_session",       # serve tokens/s -> BENCH_cluster.json
 ]
 
 

@@ -1,36 +1,63 @@
 """Fault-tolerant training demo: block failure -> OCS re-route -> restore.
 
 Reproduces the paper's §2.3 availability story end to end at container
-scale, and verifies the post-restore run matches an uninterrupted run.
+scale through the `repro.cluster` API: two slices coexist on one machine
+(a faulted run and a clean reference), a block dies mid-run, the
+supercomputer swaps a spare in, and the training session restores from its
+last checkpoint and finishes with bit-identical losses.
 
     PYTHONPATH=src python examples/fault_tolerant_training.py
 """
-import jax
+import tempfile
 
+import numpy as np
+
+from repro.cluster import Supercomputer
 from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
                            ShapeConfig, registry)
-from repro.train.fault import run_fault_drill
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
     run = RunConfig(
         model=registry.get_reduced("olmo-1b"),
         shape=ShapeConfig("ft", "train", 32, 8),
         parallel=ParallelConfig(remat="none"),
         optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2))
-    rep = run_fault_drill(run, mesh, total_steps=12, fail_at=7,
-                          ckpt_every=4)
-    print("scheduler events:")
-    for e in rep.events:
+
+    sc = Supercomputer()
+    faulted = sc.allocate((8, 8, 8))
+    reference = sc.allocate((8, 8, 8))
+    print(f"faulted run on {faulted.describe()} blocks {faulted.blocks}")
+    print(f"reference on   {reference.describe()} blocks {reference.blocks}")
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        ref = reference.train(run, 12, ckpt_dir=d2, ckpt_every=4,
+                              log_every=1)
+        sess = faulted.train(run, 12, ckpt_dir=d1, ckpt_every=4,
+                             fail_at=7, log_every=1)
+
+    print("\nmachine events:")
+    for e in sc.events:
         print("  ", e)
-    print(f"\nsteps run:        {rep.steps_run}")
-    print(f"restarts:         {rep.restarts}")
-    print(f"circuits moved:   {rep.circuits_moved} (in "
-          f"{rep.reroute_seconds * 1e3:.0f} ms — OCS MEMS switch time)")
-    print(f"final loss:       {rep.final_loss:.4f}")
-    print(f"matches clean run: {rep.losses_match_clean_run}")
+    print("\nsession interruptions:")
+    for ev in sess.interruptions:
+        print(f"   {ev.kind}: {ev.detail} ({ev.circuits_moved} circuits, "
+              f"{ev.downtime_s * 1e3:.0f} ms)")
+
+    restarts = sum(1 for m in sess.metrics_log if m.get("event"))
+    losses = {m["step"]: m["loss"] for m in sess.metrics_log if "loss" in m}
+    ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log
+                  if "loss" in m}
+    final = max(losses)
+    print(f"\nsteps run:         {sess.state.step}")
+    print(f"restarts:          {restarts}")
+    print(f"final loss:        {losses[final]:.4f}")
+    print(f"matches clean run: "
+          f"{bool(np.isclose(losses[final], ref_losses[final], rtol=1e-5))}")
+
+    faulted.free()
+    reference.free()
 
 
 if __name__ == "__main__":

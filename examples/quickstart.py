@@ -1,22 +1,26 @@
-"""Quickstart: train a small LM for 30 steps, checkpoint, and decode.
+"""Quickstart: allocate a slice from the supercomputer, train, then serve.
+
+Everything goes through the `repro.cluster` session API — no manual mesh,
+fabric, or scheduler wiring.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import tempfile
 
-import jax
 import numpy as np
 
+from repro.cluster import SliceSpec, Supercomputer
 from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
                            ShapeConfig, registry)
-from repro.models import api
-from repro.serve.engine import ServeEngine
-from repro.train.trainer import Trainer
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sc = Supercomputer()                       # 64 blocks = 4096 chips
+    sl = sc.allocate((8, 8, 8))                # 512-chip slice, any blocks
+    print(f"allocated {sl.describe()} on blocks {sl.blocks}")
+    print(f"  all-reduce(1 GiB) estimate: "
+          f"{sl.cost.all_reduce(2 ** 30) * 1e3:.1f} ms")
+
     run = RunConfig(
         model=registry.get_reduced("olmo-1b"),
         shape=ShapeConfig("quick", "train", 64, 8),
@@ -24,21 +28,23 @@ def main():
         optimizer=OptimizerConfig(lr=1e-3, warmup_steps=5))
 
     with tempfile.TemporaryDirectory() as ckpt:
-        trainer = Trainer(run, mesh, ckpt_dir=ckpt, ckpt_every=10)
-        state = trainer.train(30, log_every=5)
+        train = sl.train(run, 30, ckpt_dir=ckpt, ckpt_every=10, log_every=5)
         print("\ntraining log:")
-        for m in trainer.metrics_log:
+        for m in train.metrics_log:
             print(f"  step {m['step']:3d}  loss {m.get('loss', 0):.4f}")
 
         print("\nserving 4 requests on the trained weights:")
-        eng = ServeEngine(run.model, state.params, slots=2, max_len=96,
-                          prompt_len=16)
+        serve = sl.serve(run.model, train.params,
+                         SliceSpec(slots=2, max_len=96, prompt_len=16))
         for i in range(4):
-            eng.submit(np.arange(8) + i, max_new_tokens=8)
-        stats = eng.run()
+            serve.submit(np.arange(8) + i, max_new_tokens=8)
+        stats = serve.run()
         print(f"  {stats['requests_done']} requests, "
               f"{stats['tokens']} tokens, "
               f"{stats['tokens_per_s']:.1f} tok/s")
+
+    sl.free()
+    print(f"\nslice freed; machine utilization {sc.utilization():.2f}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Serve a small LM with batched requests through the ServeEngine.
+"""Serve a small LM with batched requests through a cluster serve session.
 
     PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --requests 8
 """
@@ -7,9 +7,9 @@ import argparse
 import jax
 import numpy as np
 
+from repro.cluster import SliceSpec, Supercomputer
 from repro.configs import registry
 from repro.models import api
-from repro.serve.engine import ServeEngine
 
 
 def main():
@@ -23,19 +23,25 @@ def main():
 
     cfg = registry.get_reduced(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
-                      prompt_len=16)
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
-        eng.submit(prompt, max_new_tokens=args.new_tokens)
-    stats = eng.run()
-    print(f"arch={args.arch} slots={args.slots}")
-    for k, v in stats.items():
-        print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
-    for r in eng.queue[:3]:
-        print(f"  req{r.rid}: prompt={list(r.prompt)[:6]}... "
-              f"-> {r.out_tokens[:8]}...")
+
+    sc = Supercomputer()
+    with sc.allocate((4, 4, 8)) as sl:
+        session = sl.serve(cfg, params,
+                           SliceSpec(slots=args.slots, max_len=128,
+                                     prompt_len=16))
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=rng.integers(4, 12))
+            session.submit(prompt, max_new_tokens=args.new_tokens)
+        stats = session.run()
+        print(f"arch={args.arch} slice={sl.describe()} slots={args.slots}")
+        for k, v in stats.items():
+            print(f"  {k}: {v:.3f}" if isinstance(v, float)
+                  else f"  {k}: {v}")
+        for r in session.engine.queue[:3]:
+            print(f"  req{r.rid}: prompt={list(r.prompt)[:6]}... "
+                  f"-> {r.out_tokens[:8]}...")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,18 @@
-"""Explore slice topologies: geometries, twisting, bisection, collective
-costs, goodput, and the autotopo search — the OCS's §2 benefits, interactive.
+"""Explore slice topologies through the `repro.cluster` API: geometries,
+twisting, bisection, collective costs, goodput, and the autotopo search —
+the OCS's §2 benefits, interactive.
+
+Each geometry is genuinely allocated on the machine (exercising OCS port
+accounting), probed via the slice's bound cost model, and freed.
 
     PYTHONPATH=src python examples/topology_explorer.py --chips 512
     PYTHONPATH=src python examples/topology_explorer.py --chips 128 --search
 """
 import argparse
 
-from repro.core.autotopo import ModelProfile, search
-from repro.core.costmodel import CollectiveCostModel, TPU_V4
-from repro.core.goodput import goodput_ocs, goodput_static
-from repro.core.topology import SliceTopology, geometries_for, is_twistable
+from repro.cluster import Supercomputer
+from repro.core.autotopo import ModelProfile
+from repro.core.topology import is_twistable
 
 
 def main():
@@ -18,41 +21,46 @@ def main():
     ap.add_argument("--search", action="store_true")
     args = ap.parse_args()
 
-    cm = CollectiveCostModel(TPU_V4)
+    sc = Supercomputer()
     print(f"geometries for {args.chips} chips "
           f"(slices are 4i x 4j x 4k, paper §2.5):")
     print(f"{'geometry':>12s} {'twist':>6s} {'bisec':>6s} {'diam':>5s} "
           f"{'AR(1GiB)':>9s} {'A2A(1GiB)':>10s}")
-    for dims in geometries_for(args.chips):
+    for dims in sc.geometries(args.chips):
         for tw in ([False, True] if is_twistable(dims) else [False]):
-            t = SliceTopology(dims, twisted=tw)
-            if t.num_chips > 1024 and tw:
+            if tw and dims[0] * dims[1] * dims[2] > 1024:
                 continue
-            ar = cm.all_reduce(t, 2 ** 30) * 1e3
-            a2a = (cm.all_to_all(t, 2 ** 30) * 1e3
-                   if t.num_chips <= 512 else float("nan"))
-            diam, _ = (t.diameter_and_avg_hops() if t.num_chips <= 512
-                       else (-1, 0))
-            print(f"{t.describe():>12s} {str(tw):>6s} "
-                  f"{t.bisection_links():>6d} {diam:>5d} {ar:>8.1f}m "
-                  f"{a2a:>9.1f}m")
+            with sc.allocate(dims, twisted=tw) as sl:
+                topo = sl.topology
+                ar = sl.cost.all_reduce(2 ** 30) * 1e3
+                a2a = (sl.cost.all_to_all(2 ** 30) * 1e3
+                       if sl.num_chips <= 512 else float("nan"))
+                diam, _ = (topo.diameter_and_avg_hops()
+                           if sl.num_chips <= 512 else (-1, 0))
+                print(f"{sl.describe():>12s} {str(tw):>6s} "
+                      f"{topo.bisection_links():>6d} {diam:>5d} "
+                      f"{ar:>8.1f}m {a2a:>9.1f}m")
 
     print(f"\ngoodput at this slice size (Fig 4):")
     for av in (0.99, 0.995, 0.999):
-        print(f"  availability {av}: OCS "
-              f"{goodput_ocs(args.chips, av, trials=1000):.2f}  static "
-              f"{goodput_static(args.chips, av, trials=200):.2f}")
+        g_ocs = sc.expected_goodput(args.chips, av, mode="ocs", trials=1000)
+        g_static = sc.expected_goodput(args.chips, av, mode="static",
+                                       trials=200)
+        print(f"  availability {av}: OCS {g_ocs:.2f}  static {g_static:.2f}")
 
     if args.search:
         prof = ModelProfile("explorer-llm", params=70e9, layers=80,
                             d_model=8192, seq_len=2048, global_batch=32)
         print("\nautotopo search (Table 3):")
-        for ev in search(prof, args.chips, top_k=5):
-            print(f"  {ev.geometry} {ev.spec.label()}: "
-                  f"{ev.step_time * 1e3:.1f} ms/step "
-                  f"(compute {ev.terms['compute'] * 1e3:.1f}m, "
-                  f"tp {ev.terms['tp'] * 1e3:.1f}m, "
-                  f"dp {ev.terms['dp'] * 1e3:.1f}m)")
+        with sc.allocate(args.chips) as sl:
+            print(f"  holding {sl.describe()}; best on THIS slice: "
+                  f"{sl.dryrun(prof).spec.label()}")
+            for ev in sl.autotopo(prof, top_k=5):
+                print(f"  {ev.geometry} {ev.spec.label()}: "
+                      f"{ev.step_time * 1e3:.1f} ms/step "
+                      f"(compute {ev.terms['compute'] * 1e3:.1f}m, "
+                      f"tp {ev.terms['tp'] * 1e3:.1f}m, "
+                      f"dp {ev.terms['dp'] * 1e3:.1f}m)")
 
 
 if __name__ == "__main__":

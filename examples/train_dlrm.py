@@ -11,7 +11,6 @@ interaction tower, Adam, checkpoints.
 import argparse
 import tempfile
 
-import jax
 
 from repro.configs import (DLRMConfig, EmbeddingTableConfig, ModelConfig,
                            OptimizerConfig, ParallelConfig, RunConfig,
@@ -44,8 +43,8 @@ def main():
 
     cfg = (registry.get_config("dlrm0") if args.scale == "full"
            else demo_config())
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
     run = RunConfig(
         model=cfg,
         shape=ShapeConfig("dlrm", "train", 1, args.batch),

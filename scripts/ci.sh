@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + quickstart smoke + cluster serve benchmark.
+#
+#   bash scripts/ci.sh            # full gate
+#   bash scripts/ci.sh --fast     # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== quickstart smoke (CPU) =="
+    python examples/quickstart.py
+
+    echo "== cluster serve benchmark -> BENCH_cluster.json =="
+    python - <<'PY'
+import sys
+sys.path.insert(0, ".")
+from benchmarks import cluster_session
+for name, us, derived in cluster_session.run():
+    print(f"{name},{us:.1f},{derived}")
+PY
+fi
+
+echo "CI OK"

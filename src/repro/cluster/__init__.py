@@ -1,0 +1,27 @@
+"""`repro.cluster` — one object model from the OCS fabric to workloads.
+
+    from repro.cluster import Supercomputer, SliceSpec
+
+    sc = Supercomputer()                 # 64 blocks = 4096 chips
+    sl = sc.allocate((8, 8, 8))          # any 4i x 4j x 4k, from any blocks
+    train = sl.train(run_cfg, 30)        # fault-tolerant training session
+    serve = sl.serve(run_cfg.model, train.params, SliceSpec(slots=4))
+    serve.submit(prompt); serve.run()
+    sl.free()
+
+Everything below this facade (`OCSFabric`, `SliceScheduler`,
+`CollectiveCostModel`, goodput, autotopo, `Trainer`, `ServeEngine`) remains
+importable for tests and benchmarks, but workloads should not need it.
+"""
+from repro.cluster.slices import (BoundCollectives, ServeSession, Slice,
+                                  SliceError, SliceEvent, SliceSession,
+                                  TrainSession)
+from repro.cluster.supercomputer import (CapacityError, JobTicket,
+                                         Supercomputer)
+from repro.serve.engine import SliceSpec
+
+__all__ = [
+    "BoundCollectives", "CapacityError", "JobTicket", "ServeSession",
+    "Slice", "SliceError", "SliceEvent", "SliceSession", "SliceSpec",
+    "Supercomputer", "TrainSession",
+]

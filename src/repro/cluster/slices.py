@@ -1,0 +1,377 @@
+"""Slice session handles — the user-facing half of `repro.cluster`.
+
+A `Slice` is what `Supercomputer.allocate` hands out: one OCS-programmed
+torus slice (paper §2.3/§2.5) carrying its `SliceTopology` plus everything a
+workload needs — a jax mesh, a topology-bound collective cost model, and
+session constructors:
+
+  * ``slice.train(run, steps)``     — fault-tolerant training on the slice,
+  * ``slice.serve(cfg, params)``    — a batched serving session,
+  * ``slice.dryrun(profile)``       — analytic step-time on THIS geometry,
+  * ``slice.autotopo(profile)``     — the §4 search over all geometries of
+                                      this chip count,
+  * ``slice.retwist(True)``         — §2.8 twist as OCS reprogramming.
+
+Sessions stay registered with their slice; when the machine swaps a failed
+block underneath the slice (§2.3) every active session receives the
+`SliceEvent`, so callers observe reconfigurations without touching the
+scheduler or the fabric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.autotopo import (Evaluation, ModelProfile, ParallelSpec,
+                                 estimate_step_time, search)
+from repro.core.ocs import SWITCH_TIME_S
+from repro.core.topology import SliceTopology, is_twistable
+from repro.parallel.context import LOCAL, ParallelContext
+from repro.serve.engine import ServeEngine, SliceSpec
+
+if TYPE_CHECKING:                                     # pragma: no cover
+    from repro.cluster.supercomputer import Supercomputer
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceEvent:
+    """One thing that happened to a slice after allocation."""
+    kind: str                   # "allocate" | "reconfigure" | "retwist" |
+                                # "straggler" | "lost" | "free"
+    detail: str
+    circuits_moved: int = 0
+    downtime_s: float = 0.0
+
+
+class SliceError(RuntimeError):
+    """Operation on a freed or lost slice."""
+
+
+# ---------------------------------------------------------------------------
+# Topology-bound cost model
+# ---------------------------------------------------------------------------
+
+class BoundCollectives:
+    """`CollectiveCostModel` with the slice topology pre-bound, so callers
+    ask ``slice.cost.all_reduce(bytes)`` without ever holding a topology."""
+
+    def __init__(self, model, topo: SliceTopology):
+        self._model = model
+        self._topo = topo
+
+    def all_reduce(self, bytes_per_chip: float,
+                   dims_subset: Optional[Sequence[int]] = None) -> float:
+        return self._model.all_reduce(self._topo, bytes_per_chip, dims_subset)
+
+    def all_gather(self, bytes_per_chip_out: float,
+                   dims_subset: Optional[Sequence[int]] = None) -> float:
+        return self._model.all_gather(self._topo, bytes_per_chip_out,
+                                      dims_subset)
+
+    reduce_scatter = all_gather
+
+    def all_to_all(self, bytes_per_chip: float) -> float:
+        return self._model.all_to_all(self._topo, bytes_per_chip)
+
+    def p2p(self, bytes_: float, hops: int = 1) -> float:
+        return self._model.p2p(bytes_, hops)
+
+
+# ---------------------------------------------------------------------------
+# Sessions
+# ---------------------------------------------------------------------------
+
+class SliceSession:
+    """Base session: registered with its slice, receives machine events."""
+
+    def __init__(self, slice_: "Slice"):
+        self.slice = slice_
+        self.interruptions: List[SliceEvent] = []
+        self.lost = False
+        self.closed = False
+        slice_._sessions.append(self)
+
+    def _on_event(self, ev: SliceEvent) -> None:
+        self.interruptions.append(ev)
+        if ev.kind in ("lost", "free"):
+            self.lost = ev.kind == "lost"
+            self.closed = True
+
+    def _check_live(self) -> None:
+        if self.lost:
+            raise SliceError("slice lost; session is dead")
+        if self.closed:
+            raise SliceError("session closed (slice freed?)")
+
+    @property
+    def stall_s(self) -> float:
+        """Accumulated reconfiguration downtime seen by this session."""
+        return sum(e.downtime_s for e in self.interruptions
+                   if np.isfinite(e.downtime_s))
+
+    def close(self) -> None:
+        self.closed = True
+        if self in self.slice._sessions:
+            self.slice._sessions.remove(self)
+
+
+class TrainSession(SliceSession):
+    """A `Trainer` bound to a slice: checkpoints, fail/restore, metrics.
+
+    ``run`` wires the supercomputer's scheduler and this slice's job id into
+    the trainer, so an injected block failure exercises the real OCS
+    swap-spare path and the event lands back here.
+    """
+
+    def __init__(self, slice_: "Slice", trainer):
+        super().__init__(slice_)
+        self.trainer = trainer
+        self.state = None
+
+    @property
+    def metrics_log(self) -> List[Dict[str, float]]:
+        return self.trainer.metrics_log
+
+    @property
+    def params(self):
+        return None if self.state is None else self.state.params
+
+    def run(self, num_steps: int, *, fail_at: Optional[int] = None,
+            log_every: int = 10, state=None):
+        self._check_live()
+        sc = self.slice._sc
+        self.state = self.trainer.train(
+            num_steps, state=state or self.state, fail_at=fail_at,
+            scheduler=sc.scheduler, job_id=self.slice.job_id,
+            log_every=log_every)
+        return self.state
+
+
+class ServeSession(SliceSession):
+    """A `ServeEngine` bound to a slice.
+
+    The engine's request API passes through; `run` stats are annotated with
+    the interruptions and stall time the underlying slice saw while the
+    session was live (a reconfigure costs the MEMS switch time, §2.2)."""
+
+    def __init__(self, slice_: "Slice", engine: ServeEngine):
+        super().__init__(slice_)
+        self.engine = engine
+
+    @property
+    def spec(self) -> SliceSpec:
+        return self.engine.spec
+
+    def submit(self, prompt, max_new_tokens: int = 32):
+        self._check_live()
+        return self.engine.submit(prompt, max_new_tokens=max_new_tokens)
+
+    def step(self) -> int:
+        return 0 if self.closed else self.engine.step()
+
+    def run(self, max_steps: int = 1000) -> Dict[str, float]:
+        if self.lost:
+            # same key set as a normal run, so failure-path callers can
+            # read standard stats without special-casing
+            return {"aborted": True, "requests_done": 0, "tokens": 0,
+                    "wall_s": 0.0, "tokens_per_s": 0.0, "mean_ttft_s": 0.0,
+                    "decode_steps": 0,
+                    "interruptions": len(self.interruptions),
+                    "reconfig_stall_s": self.stall_s}
+        self._check_live()
+        stats = dict(self.engine.run(max_steps))
+        stats["aborted"] = False
+        stats["interruptions"] = len(self.interruptions)
+        stats["reconfig_stall_s"] = self.stall_s
+        return stats
+
+
+# ---------------------------------------------------------------------------
+# The slice handle
+# ---------------------------------------------------------------------------
+
+class Slice:
+    """Session handle for one allocated torus slice.
+
+    Constructed by `Supercomputer.allocate` — not directly."""
+
+    def __init__(self, sc: "Supercomputer", job, *, mesh=None):
+        self._sc = sc
+        self._job = job
+        self._mesh = mesh
+        self._sessions: List[SliceSession] = []
+        self.status = "active"              # "active" | "lost" | "freed"
+        self.events: List[SliceEvent] = [SliceEvent(
+            "allocate", f"{job.dims_chips} twisted={job.twisted} "
+                        f"blocks={job.blocks}")]
+
+    # -- identity / geometry --------------------------------------------------
+
+    @property
+    def job_id(self) -> int:
+        return self._job.job_id
+
+    @property
+    def dims(self) -> Tuple[int, int, int]:
+        return self._job.dims_chips
+
+    @property
+    def twisted(self) -> bool:
+        return self._job.twisted
+
+    @property
+    def blocks(self) -> List[int]:
+        return list(self._job.blocks)
+
+    @property
+    def num_chips(self) -> int:
+        a, b, c = self.dims
+        return a * b * c
+
+    @property
+    def topology(self) -> SliceTopology:
+        return self._job.topology
+
+    @property
+    def cost(self) -> BoundCollectives:
+        """Collective cost model bound to the current topology."""
+        return BoundCollectives(self._sc.costs, self.topology)
+
+    def describe(self) -> str:
+        return self.topology.describe()
+
+    def __repr__(self):
+        return (f"Slice(job{self.job_id}, {self.describe()}, "
+                f"{self.status}, blocks={self.blocks})")
+
+    # -- mesh / parallel context ----------------------------------------------
+
+    @property
+    def mesh(self):
+        """The jax mesh compute on this slice uses.  At container scale this
+        is a (1, 1) local mesh; on real hardware it would span the slice."""
+        if self._mesh is None:
+            from repro.launch.mesh import make_local_mesh
+            self._mesh = make_local_mesh()
+        return self._mesh
+
+    def parallel_context(self, parallel=None) -> ParallelContext:
+        from repro.parallel import sharding as SH
+        if parallel is None:
+            return LOCAL
+        return SH.make_context(self.mesh, parallel)
+
+    # -- guards ---------------------------------------------------------------
+
+    def _check_active(self) -> None:
+        if self.status != "active":
+            raise SliceError(f"slice job{self.job_id} is {self.status}")
+
+    # -- workloads ------------------------------------------------------------
+
+    def train(self, run: RunConfig, num_steps: Optional[int] = None, *,
+              ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+              fail_at: Optional[int] = None, log_every: int = 10,
+              accum_steps: Optional[int] = None) -> TrainSession:
+        """Train `run` on this slice.  With ``num_steps`` the session runs to
+        completion before returning; without, call ``session.run`` yourself."""
+        self._check_active()
+        from repro.train.trainer import Trainer
+        trainer = Trainer(run, self.mesh, ckpt_dir=ckpt_dir,
+                          ckpt_every=ckpt_every, accum_steps=accum_steps)
+        session = TrainSession(self, trainer)
+        if num_steps is not None:
+            session.run(num_steps, fail_at=fail_at, log_every=log_every)
+        return session
+
+    def serve(self, model_cfg: ModelConfig, params,
+              spec: Optional[SliceSpec] = None, *,
+              ctx: Optional[ParallelContext] = None) -> ServeSession:
+        """Open a serving session on this slice."""
+        self._check_active()
+        engine = ServeEngine(model_cfg, params, spec or SliceSpec(),
+                             ctx=ctx or LOCAL)
+        return ServeSession(self, engine)
+
+    def dryrun(self, profile: ModelProfile,
+               spec: Optional[ParallelSpec] = None, *,
+               mfu: float = 0.55) -> Evaluation:
+        """Analytic step time for `profile` on THIS slice's geometry.
+
+        With ``spec`` the given partitioning is evaluated; without, the best
+        partitioning for this geometry is searched (§4 restricted to the
+        slice in hand)."""
+        self._check_active()
+        if spec is not None:
+            ev = estimate_step_time(profile, self.dims, spec,
+                                    hw=self._sc.hw, twisted=self.twisted,
+                                    mfu=mfu)
+            if ev is None:
+                raise ValueError(
+                    f"{spec.label()} does not map onto {self.dims}")
+            return ev
+        evs = search(profile, self.num_chips, hw=self._sc.hw,
+                     geometries=[self.dims], twisted=self.twisted, top_k=1)
+        if not evs:
+            raise ValueError(f"no partitioning of {profile.name} maps onto "
+                             f"{self.dims}")
+        return evs[0]
+
+    def autotopo(self, profile: ModelProfile, *, top_k: int = 5,
+                 allow_twist: bool = True) -> List[Evaluation]:
+        """Full §4 search over every geometry of this slice's chip count —
+        'should I have asked for a different shape?'"""
+        self._check_active()
+        return search(profile, self.num_chips, hw=self._sc.hw,
+                      top_k=top_k, allow_twist=allow_twist)
+
+    # -- reconfiguration ------------------------------------------------------
+
+    def retwist(self, twisted: bool) -> int:
+        """(Un)twist in place — pure OCS reprogramming, §2.8.  Returns the
+        number of circuits that moved."""
+        self._check_active()
+        if twisted and not is_twistable(self.dims):
+            raise ValueError(f"{self.dims} is not twistable")
+        if twisted == self.twisted:
+            return 0
+        new_cfg, changed = self._sc.fabric.retwist(self._job.config, twisted)
+        self._job.config = new_cfg
+        self._job.twisted = twisted
+        self._notify(SliceEvent(
+            "retwist", f"twisted={twisted}", circuits_moved=changed,
+            downtime_s=SWITCH_TIME_S if changed else 0.0))
+        return changed
+
+    def swap_straggler(self, slow_block: int) -> Optional[SliceEvent]:
+        """Replace a slow-but-healthy block with a spare (§2.3)."""
+        self._check_active()
+        res = self._sc.scheduler.swap_straggler(self.job_id, slow_block)
+        if res is None:
+            return None
+        moved, secs = res
+        ev = SliceEvent("straggler", f"block{slow_block} swapped out",
+                        circuits_moved=moved, downtime_s=secs)
+        self._notify(ev)
+        return ev
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def _notify(self, ev: SliceEvent) -> None:
+        self.events.append(ev)
+        for s in list(self._sessions):
+            s._on_event(ev)
+
+    def free(self) -> None:
+        """Release blocks and OCS ports back to the machine."""
+        if self.status == "active":
+            self._sc._release(self)
+
+    def __enter__(self) -> "Slice":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.free()

@@ -1,0 +1,247 @@
+"""`Supercomputer` — the machine-level facade of `repro.cluster`.
+
+One object owns the whole paper-§2 stack: the `OCSFabric` (port accounting +
+circuit programming), the `SliceScheduler` (any-blocks-anywhere allocation,
+spare swapping), the `CollectiveCostModel`, and the Figure-4 goodput
+arithmetic.  Users ask it for `Slice` handles and never touch the plumbing:
+
+    sc = Supercomputer()                      # 64 blocks = 4096 chips
+    sl = sc.allocate((8, 8, 8))               # or sc.allocate(512)
+    sess = sl.train(run_cfg, steps)           # / sl.serve(cfg, params)
+    sl.free()
+
+`submit` + `run_pending` form a minimal job queue so train/serve jobs beyond
+current capacity wait their turn, and `fail_block` propagates the §2.3
+swap-a-spare reconfiguration into whatever slice (and live sessions) owned
+the failed block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.cluster.slices import Slice, SliceEvent
+from repro.core.costmodel import CollectiveCostModel, HardwareParams, TPU_V4
+from repro.core.goodput import goodput_ocs, goodput_static
+from repro.core.scheduler import SliceScheduler
+from repro.core.topology import geometries_for, is_twistable
+
+Geometry = Union[int, Tuple[int, int, int]]
+
+
+class CapacityError(RuntimeError):
+    """Not enough healthy free blocks for the requested slice."""
+
+
+class _NotifyingScheduler(SliceScheduler):
+    """SliceScheduler that reports failure handling back to the facade, so
+    events reach `Slice` handles even when a component (e.g. the trainer's
+    fault hook) drives the scheduler directly."""
+
+    def __init__(self, *args, on_failure=None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._on_failure = on_failure
+
+    def fail_block(self, block: int):
+        res = super().fail_block(block)
+        if self._on_failure is not None:
+            self._on_failure(block, res)
+        return res
+
+
+@dataclasses.dataclass
+class JobTicket:
+    """One queued unit of work: a geometry request plus a function that gets
+    the allocated `Slice` and returns the job's result."""
+    ticket_id: int
+    dims: Tuple[int, int, int]
+    twisted: bool
+    fn: Callable[[Slice], Any]
+    tag: str = ""
+    status: str = "queued"          # "queued" | "running" | "done" | "failed"
+    result: Any = None
+    error: Optional[str] = None
+
+
+class Supercomputer:
+    """Facade over one OCS-reconfigurable machine (default: 4096 chips)."""
+
+    def __init__(self, num_blocks: int = 64, *,
+                 hw: HardwareParams = TPU_V4, contiguous: bool = False):
+        self.scheduler = _NotifyingScheduler(
+            num_blocks, contiguous=contiguous, on_failure=self._on_failure)
+        self.hw = hw
+        self.costs = CollectiveCostModel(hw)
+        self.slices: Dict[int, Slice] = {}      # job_id -> live Slice
+        self.queue: List[JobTicket] = []
+        self._next_ticket = 0
+
+    @property
+    def fabric(self):
+        return self.scheduler.fabric
+
+    @property
+    def num_blocks(self) -> int:
+        return self.scheduler.num_blocks
+
+    @property
+    def events(self) -> List[str]:
+        """Machine-level event log (allocations, failures, re-routes)."""
+        return self.scheduler.events
+
+    # -- geometry helpers ------------------------------------------------------
+
+    @staticmethod
+    def geometries(num_chips: int) -> List[Tuple[int, int, int]]:
+        """All 4i×4j×4k slice shapes with this chip count (§2.5)."""
+        return geometries_for(num_chips)
+
+    def _resolve_geometry(self, geometry: Geometry,
+                          twisted: bool) -> Tuple[int, int, int]:
+        if isinstance(geometry, int):
+            cands = geometries_for(geometry)
+            if twisted:
+                cands = [g for g in cands if is_twistable(g)]
+            if not cands:
+                raise ValueError(f"no 4i*4j*4k geometry for {geometry} chips"
+                                 + (" (twisted)" if twisted else ""))
+            # most cube-like shape: best bisection per §2.8's default choice
+            return min(cands, key=lambda g: (max(g) / min(g), sum(g)))
+        dims = tuple(geometry)
+        assert len(dims) == 3, dims
+        return dims
+
+    # -- allocation ------------------------------------------------------------
+
+    def allocate(self, geometry: Geometry, *, twisted: bool = False,
+                 mesh=None, required: bool = True) -> Optional[Slice]:
+        """Allocate a slice.  `geometry` is a (a, b, c) chip shape or a chip
+        count (the most cube-like legal shape is picked).  Raises
+        `CapacityError` when `required` and the machine cannot place it."""
+        dims = self._resolve_geometry(geometry, twisted)
+        job = self.scheduler.allocate(dims, twisted=twisted)
+        if job is None:
+            if required:
+                raise CapacityError(
+                    f"cannot place {dims} slice: "
+                    f"{len(self.scheduler.free & self.scheduler.healthy)} "
+                    f"healthy free blocks")
+            return None
+        sl = Slice(self, job, mesh=mesh)
+        self.slices[job.job_id] = sl
+        return sl
+
+    def _release(self, sl: Slice) -> None:
+        self.scheduler.release(sl.job_id)
+        self.slices.pop(sl.job_id, None)
+        sl.status = "freed"
+        sl._notify(SliceEvent("free", f"released blocks {sl.blocks}"))
+
+    def utilization(self) -> float:
+        return self.scheduler.utilization()
+
+    # -- failures --------------------------------------------------------------
+
+    def fail_block(self, block: int):
+        """Fail a block machine-wide; the owning slice (if any) is re-routed
+        onto a spare or, with no spares, marked lost — and every live session
+        on it is notified.  Returns the scheduler's (job_id, moved, secs)."""
+        return self.scheduler.fail_block(block)
+
+    def repair_block(self, block: int) -> None:
+        self.scheduler.repair_block(block)
+
+    def _on_failure(self, block: int, result) -> None:
+        if result is None:
+            return                          # idle block, nobody to notify
+        job_id, moved, secs = result
+        sl = self.slices.get(job_id)
+        if sl is None:
+            return
+        if secs == float("inf"):
+            # no spare (or static cabling): the scheduler already killed the
+            # job; the slice and its sessions are lost until repair.
+            sl.status = "lost"
+            self.slices.pop(job_id, None)
+            sl._notify(SliceEvent(
+                "lost", f"block{block} failed, no spare", downtime_s=secs))
+        else:
+            sl._notify(SliceEvent(
+                "reconfigure", f"block{block} -> spare",
+                circuits_moved=moved, downtime_s=secs))
+
+    # -- job queue -------------------------------------------------------------
+
+    def submit(self, geometry: Geometry, fn: Callable[[Slice], Any], *,
+               twisted: bool = False, tag: str = "") -> JobTicket:
+        """Queue `fn` to run on a slice of `geometry` once one can be placed.
+        Tickets run in `run_pending` (FIFO with backfill)."""
+        dims = self._resolve_geometry(geometry, twisted)
+        if twisted and not is_twistable(dims):
+            raise ValueError(f"{dims} is not twistable")
+        need = (dims[0] // 4) * (dims[1] // 4) * (dims[2] // 4)
+        if need > self.num_blocks:
+            raise ValueError(f"{dims} needs {need} blocks; machine has "
+                             f"{self.num_blocks}")
+        t = JobTicket(self._next_ticket, dims, twisted, fn, tag=tag)
+        self._next_ticket += 1
+        self.queue.append(t)
+        return t
+
+    def run_pending(self) -> List[JobTicket]:
+        """Drain the queue: allocate, run, free — repeating until no queued
+        ticket can be placed.  Smaller later jobs backfill around a blocked
+        head-of-line job (the §2.5 scheduling benefit)."""
+        finished: List[JobTicket] = []
+        progress = True
+        while progress:
+            progress = False
+            for t in list(self.queue):
+                try:
+                    sl = self.allocate(t.dims, twisted=t.twisted,
+                                       required=False)
+                except ValueError as e:     # bad geometry: fail the ticket,
+                    self.queue.remove(t)    # keep the rest draining
+                    t.status, t.error = "failed", f"{type(e).__name__}: {e}"
+                    finished.append(t)
+                    progress = True
+                    continue
+                if sl is None:
+                    continue
+                self.queue.remove(t)
+                t.status = "running"
+                try:
+                    t.result = t.fn(sl)
+                    t.status = "done"
+                except Exception as e:      # keep the queue draining
+                    t.error = f"{type(e).__name__}: {e}"
+                    t.status = "failed"
+                finally:
+                    sl.free()
+                finished.append(t)
+                progress = True
+        return finished
+
+    # -- fleet arithmetic ------------------------------------------------------
+
+    def expected_goodput(self, slice_chips: int, host_availability: float, *,
+                         mode: Optional[str] = None, trials: int = 2000,
+                         seed: int = 0) -> float:
+        """Figure-4 goodput: expected machine fraction doing useful work at
+        the given CPU-host availability.  ``mode`` defaults to this machine's
+        wiring ("ocs", or "static" when built with contiguous=True)."""
+        mode = mode or ("static" if self.scheduler.contiguous else "ocs")
+        fn = {"ocs": goodput_ocs, "static": goodput_static}[mode]
+        return fn(slice_chips, host_availability, trials=trials, seed=seed)
+
+    def overview(self) -> Dict[str, Any]:
+        free = len(self.scheduler.free & self.scheduler.healthy)
+        return {
+            "num_blocks": self.num_blocks,
+            "healthy_blocks": len(self.scheduler.healthy),
+            "free_blocks": free,
+            "utilization": self.utilization(),
+            "live_slices": {jid: sl.describe()
+                            for jid, sl in self.slices.items()},
+            "queued_tickets": len(self.queue),
+        }

@@ -19,7 +19,7 @@ from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import CollectiveCostModel, HardwareParams, TPU_V4
-from repro.core.topology import SliceTopology, geometries_for
+from repro.core.topology import SliceTopology, geometries_for, is_twistable
 
 
 @dataclass(frozen=True)
@@ -208,14 +208,30 @@ def search(profile: ModelProfile, num_chips: int, *,
            hw: HardwareParams = TPU_V4,
            max_pipeline: int = 16,
            allow_twist: bool = True,
-           top_k: int = 5) -> List[Evaluation]:
-    """Enumerate geometries × partition specs; return the top_k by step time."""
+           top_k: int = 5,
+           geometries: Optional[Sequence[Tuple[int, int, int]]] = None,
+           twisted: Optional[bool] = None) -> List[Evaluation]:
+    """Enumerate geometries × partition specs; return the top_k by step time.
+
+    ``geometries`` restricts the search to the given slice shapes (the
+    `Slice.dryrun` path: "what is the best partitioning on the slice I
+    already hold?"); ``twisted`` forces the twist state instead of trying
+    both where legal.
+    """
     results: List[Evaluation] = []
-    for dims in geometries_for(num_chips):
-        twists = [False]
-        if allow_twist:
-            from repro.core.topology import is_twistable
-            if is_twistable(dims):
+    if geometries is None:
+        geoms = geometries_for(num_chips)
+    else:
+        geoms = [tuple(g) for g in geometries
+                 if g[0] * g[1] * g[2] == num_chips]
+    for dims in geoms:
+        if twisted is not None:
+            if twisted and not is_twistable(dims):
+                continue
+            twists = [twisted]
+        else:
+            twists = [False]
+            if allow_twist and is_twistable(dims):
                 twists.append(True)
         for pp in [p for p in (1, 2, 4, 8, 16, 32) if p <= max_pipeline]:
             if num_chips % pp:

@@ -30,7 +30,7 @@ import numpy as np
 from repro.configs.base import EmbeddingTableConfig
 from repro.embeddings.dedup import dedup_ids
 from repro.embeddings.sharding import Placement, plan_placement
-from repro.parallel.context import LOCAL, ParallelContext
+from repro.parallel.context import LOCAL, ParallelContext, shard_map
 
 P = jax.sharding.PartitionSpec
 
@@ -228,7 +228,7 @@ def _rowsharded_psum(table, ids, ctx: ParallelContext, *, cols):
             combined = combined.astype(jnp.bfloat16)  # §Perf: half traffic
         return jax.lax.psum(combined, axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=ctx.mesh,
         in_specs=(P(axis, None), P(bspec, None)),
         out_specs=P(bspec, None, None), check_vma=False)
@@ -284,7 +284,7 @@ def _rowsharded_a2a(table, ids, ctx: ParallelContext, *, cols,
         occ = uvecs[inv]                                 # broadcast to ids
         return _segment_combine(occ.reshape(Bl, Vl, D), ids_loc, cols)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=ctx.mesh,
         in_specs=(P(axis, None), P(batch_both, None)),
         out_specs=P(batch_both, None, None), check_vma=False)

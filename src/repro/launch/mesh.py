@@ -19,19 +19,39 @@ import jax
 from repro.core.topology import SliceTopology
 
 
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Version-portable ``jax.make_mesh``.
+
+    Newer jax wants explicit ``axis_types`` (Auto); 0.4.x has no AxisType and
+    no ``axis_types`` kwarg.  Everything downstream only needs a plain mesh
+    with named axes, so fall back silently.
+    """
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def mesh_scope(mesh):
+    """Context manager activating `mesh`: ``jax.set_mesh`` where it exists,
+    the legacy ``with mesh:`` trace context otherwise."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(shape: Tuple[int, ...] = (1, 1),
                     axes: Tuple[str, ...] = ("data", "model")):
     """Mesh over however many devices exist (tests/smoke)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_to_slice(multi_pod: bool = False,

@@ -1,4 +1,4 @@
-"""CLI serving driver.
+"""CLI serving driver (cluster session API).
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 8
 """
@@ -8,9 +8,9 @@ import json
 import jax
 import numpy as np
 
+from repro.cluster import SliceSpec, Supercomputer
 from repro.configs import registry
 from repro.models import api
-from repro.serve.engine import ServeEngine
 
 
 def main():
@@ -22,18 +22,22 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slice", dest="slice_chips", type=int, default=256)
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
     cfg = registry.get_reduced(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                      prompt_len=args.prompt_len)
-    rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        eng.submit(rng.integers(0, cfg.vocab_size, size=8),
-                   max_new_tokens=args.new_tokens)
-    print(json.dumps(eng.run(), indent=2))
+    sc = Supercomputer()
+    with sc.allocate(args.slice_chips) as sl:
+        session = sl.serve(cfg, params,
+                           SliceSpec(slots=args.slots, max_len=args.max_len,
+                                     prompt_len=args.prompt_len))
+        rng = np.random.default_rng(0)
+        for _ in range(args.requests):
+            session.submit(rng.integers(0, cfg.vocab_size, size=8),
+                           max_new_tokens=args.new_tokens)
+        print(json.dumps(session.run(), indent=2))
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ are what the dry-run lowers; on this CPU container use --reduced.
 import argparse
 import json
 
-import jax
 
 from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
                            ShapeConfig, registry)
@@ -37,8 +36,8 @@ def main():
 
     cfg = (registry.get_reduced(args.arch) if args.reduced
            else registry.get_config(args.arch))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
     run = RunConfig(
         model=cfg,
         shape=ShapeConfig("cli", "train", args.seq, args.batch),

@@ -16,6 +16,8 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.context import shard_map
+
 P = jax.sharding.PartitionSpec
 
 
@@ -70,7 +72,7 @@ def pipeline_apply(layer_fn: Callable, params_stacked, x, *, mesh,
             jnp.where(stage == S - 1, out, jnp.zeros_like(out)), stage_axis)
         return out.reshape(x_local.shape)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(), check_vma=False)

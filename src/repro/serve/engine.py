@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -22,6 +23,23 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.parallel.context import LOCAL, ParallelContext, activate
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceSpec:
+    """Serving-session shape: the static-compile envelope of one engine.
+
+    One value object instead of loose ``slots/max_len/prompt_len`` kwargs so
+    slice handles (`repro.cluster`) can pass serving configuration around,
+    hash it, and log it.
+    """
+    slots: int = 4                  # decode batch width (static shape)
+    max_len: int = 256              # KV-cache length per slot
+    prompt_len: int = 32            # padded prefill length
+    greedy: bool = True
+
+    def __post_init__(self):
+        assert self.slots >= 1 and 0 < self.prompt_len <= self.max_len, self
 
 
 @dataclasses.dataclass
@@ -37,22 +55,38 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, prompt_len: int = 32,
-                 ctx: ParallelContext = LOCAL, greedy: bool = True):
+    def __init__(self, cfg: ModelConfig, params,
+                 spec: Optional[SliceSpec] = None, *,
+                 ctx: ParallelContext = LOCAL,
+                 slots: Optional[int] = None,
+                 max_len: Optional[int] = None,
+                 prompt_len: Optional[int] = None,
+                 greedy: Optional[bool] = None):
+        legacy = {k: v for k, v in dict(
+            slots=slots, max_len=max_len, prompt_len=prompt_len,
+            greedy=greedy).items() if v is not None}
+        if legacy:
+            warnings.warn(
+                "ServeEngine(slots=/max_len=/prompt_len=/greedy=) is "
+                "deprecated; pass a SliceSpec", DeprecationWarning,
+                stacklevel=2)
+            spec = dataclasses.replace(spec or SliceSpec(), **legacy)
+        spec = spec or SliceSpec()
         self.cfg = cfg
         self.params = params
-        self.slots = slots
-        self.max_len = max_len
-        self.prompt_len = prompt_len
+        self.spec = spec
+        self.slots = spec.slots
+        self.max_len = spec.max_len
+        self.prompt_len = spec.prompt_len
         self.ctx = ctx
-        self.greedy = greedy
+        self.greedy = spec.greedy
         self.queue: List[Request] = []
-        self.active: List[Optional[Request]] = [None] * slots
+        self.active: List[Optional[Request]] = [None] * spec.slots
 
         def _prefill(params, batch):
             with activate(ctx):
-                return api.prefill(cfg, params, batch, ctx, max_len=max_len)
+                return api.prefill(cfg, params, batch, ctx,
+                                   max_len=spec.max_len)
 
         def _decode(params, cache, tokens):
             with activate(ctx):
@@ -61,7 +95,7 @@ class ServeEngine:
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self.cache = None
-        self.last_tokens = np.zeros((slots,), np.int32)
+        self.last_tokens = np.zeros((spec.slots,), np.int32)
 
     # -- request lifecycle ----------------------------------------------------
 

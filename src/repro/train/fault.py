@@ -1,14 +1,17 @@
 """Fault-injection harness: checkpoint/restart + OCS re-routing end-to-end.
 
-Simulates the paper's §2.3 availability story at container scale:
-  1. a job trains on an OCS-scheduled slice, checkpointing periodically;
+Simulates the paper's §2.3 availability story at container scale on top of
+the `repro.cluster` session API:
+  1. a job trains on a `Supercomputer`-allocated slice, checkpointing
+     periodically;
   2. a block (or its CPU hosts) fails mid-run;
-  3. the scheduler swaps in a spare block (circuits move in ~10 ms);
+  3. the machine swaps in a spare block (circuits move in ~10 ms) and the
+     slice's live session records the reconfiguration event;
   4. the trainer restores the last checkpoint and continues;
   5. (static-cabling mode: the job instead dies and waits for repair).
 
-Also exercises straggler mitigation (swap a slow block) and elastic restore
-(same checkpoint, different mesh shape).
+``run_fault_drill(run, mesh, ...)`` is kept as a thin compatibility wrapper
+over the cluster API for existing call sites (tests/test_system.py).
 """
 from __future__ import annotations
 
@@ -17,12 +20,10 @@ import shutil
 import tempfile
 from typing import Dict, List, Optional
 
-import jax
 import numpy as np
 
+from repro.cluster import Supercomputer
 from repro.configs.base import RunConfig
-from repro.core.scheduler import SliceScheduler
-from repro.train.trainer import Trainer, TrainerState
 
 
 @dataclasses.dataclass
@@ -36,48 +37,48 @@ class FaultDrillReport:
     events: List[str]
 
 
-def run_fault_drill(run: RunConfig, mesh, *, total_steps: int = 12,
+def run_fault_drill(run: RunConfig, mesh=None, *, total_steps: int = 12,
                     fail_at: int = 7, ckpt_every: int = 5,
                     ckpt_dir: Optional[str] = None) -> FaultDrillReport:
     """Train, kill a block mid-run, re-route, restore, finish — then verify
     the final state matches an uninterrupted run bit-for-bit (deterministic
     data + deterministic restore)."""
     tmp = ckpt_dir or tempfile.mkdtemp(prefix="repro_fault_")
-    scheduler = SliceScheduler()
-    job = scheduler.allocate((8, 8, 8))          # 512-chip slice, 8 blocks
+    ref_dir = tmp + "_ref"
+    sc = Supercomputer()
+    faulted_slice = sc.allocate((8, 8, 8), mesh=mesh)   # 512 chips, 8 blocks
+    ref_slice = sc.allocate((8, 8, 8), mesh=mesh)       # coexisting session
 
     # --- clean reference run
-    ref_dir = tmp + "_ref"
-    t_ref = Trainer(run, mesh, ckpt_dir=ref_dir, ckpt_every=ckpt_every)
-    ref_state = t_ref.train(total_steps, log_every=1)
-    ref_losses = {m["step"]: m["loss"] for m in t_ref.metrics_log
+    ref = ref_slice.train(run, total_steps, ckpt_dir=ref_dir,
+                          ckpt_every=ckpt_every, log_every=1)
+    ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log
                   if "loss" in m}
 
-    # --- faulted run
-    trainer = Trainer(run, mesh, ckpt_dir=tmp, ckpt_every=ckpt_every)
-    moved = 0
-    secs = 0.0
-    state = trainer.train(total_steps, fail_at=fail_at,
-                          scheduler=scheduler, job_id=job.job_id,
-                          log_every=1)
-    for ev in scheduler.events:
-        if "re-routed" in ev:
-            moved = int(ev.split("(")[1].split(" ")[0])
-            secs = float(ev.split(", ")[1].split("ms")[0]) / 1e3
-    restarts = sum(1 for m in trainer.metrics_log if m.get("event"))
-    fl = {m["step"]: m["loss"] for m in trainer.metrics_log if "loss" in m}
+    # --- faulted run: block failure injected at `fail_at`
+    sess = faulted_slice.train(run, total_steps, ckpt_dir=tmp,
+                               ckpt_every=ckpt_every, fail_at=fail_at,
+                               log_every=1)
+    reconfigs = [e for e in sess.interruptions if e.kind == "reconfigure"]
+    moved = reconfigs[0].circuits_moved if reconfigs else 0
+    secs = reconfigs[0].downtime_s if reconfigs else 0.0
+    restarts = sum(1 for m in sess.metrics_log if m.get("event"))
+    fl = {m["step"]: m["loss"] for m in sess.metrics_log if "loss" in m}
     final_key = max(fl)
     match = np.isclose(fl[final_key], ref_losses.get(final_key, np.nan),
                        rtol=1e-5)
+    events = list(sc.events)
 
+    ref_slice.free()
+    faulted_slice.free()
     shutil.rmtree(tmp, ignore_errors=True)
     shutil.rmtree(ref_dir, ignore_errors=True)
     return FaultDrillReport(
-        steps_run=state.step,
+        steps_run=sess.state.step,
         final_loss=float(fl[final_key]),
         restarts=restarts,
         circuits_moved=moved,
         reroute_seconds=secs,
         losses_match_clean_run=bool(match),
-        events=list(scheduler.events),
+        events=events,
     )

@@ -23,6 +23,7 @@ from repro.configs.base import (ModelConfig, OptimizerConfig, ParallelConfig,
 from repro.core.scheduler import SliceScheduler
 from repro.data.synthetic import Dataset
 from repro.launch import steps as STEPS
+from repro.launch.mesh import mesh_scope
 from repro.models import api
 from repro.optim import adam as OPT
 from repro.parallel import sharding as SH
@@ -47,7 +48,7 @@ class Trainer:
         self.dataset = Dataset(run.model, run.shape, seed=run.seed)
         self.metrics_log: List[Dict[str, float]] = []
 
-        with jax.set_mesh(mesh):
+        with mesh_scope(mesh):
             args, in_sh, out_sh, step = STEPS.shapes_and_shardings(
                 run.model, run.shape, run.parallel, run.optimizer, self.ctx)
             if accum_steps is not None:
@@ -75,7 +76,7 @@ class Trainer:
 
     def init_state(self) -> TrainerState:
         key = jax.random.PRNGKey(self.run.seed)
-        with jax.set_mesh(self.mesh):
+        with mesh_scope(self.mesh):
             params = jax.jit(
                 lambda: api.init_params(self.run.model, key, self.ctx),
                 out_shardings=self._in_sh[0])()
@@ -137,7 +138,7 @@ class Trainer:
                         {"step": step, "event": 1.0})
                     continue
             batch = self._put_batch(step)
-            with jax.set_mesh(self.mesh):
+            with mesh_scope(self.mesh):
                 params, opt, metrics = self.train_step(
                     state.params, state.opt_state, batch)
             state = TrainerState(params, opt, step + 1)

@@ -1,0 +1,78 @@
+"""Property-test compatibility layer.
+
+Uses the real `hypothesis` when installed (the `repro[test]` extra pins it);
+otherwise provides a deterministic mini-shim covering the small strategy
+surface these tests use (sampled_from / integers / floats / lists / tuples),
+so the suite still collects and exercises every property with seeded random
+examples instead of failing at import.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 16):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.example(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strats))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(0x5EED)
+                for _ in range(n):
+                    fn(*args, *(s.example(rng) for s in strats), **kwargs)
+            # hide the strategy-filled trailing params from pytest, which
+            # would otherwise look for fixtures with those names
+            params = list(inspect.signature(fn).parameters.values())
+            wrapper.__signature__ = inspect.Signature(
+                params[:len(params) - len(strats)])
+            del wrapper.__wrapped__
+            wrapper._max_examples = getattr(fn, "_max_examples",
+                                            _DEFAULT_EXAMPLES)
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "st"]

@@ -1,0 +1,267 @@
+"""`repro.cluster` session API: allocate -> train -> serve, slice reuse
+after free(), job queue, and block-failure propagation into live sessions."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (CapacityError, SliceError, SliceSpec,
+                           Supercomputer)
+from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
+                           ShapeConfig, registry)
+from repro.core.autotopo import ModelProfile, ParallelSpec
+from repro.models import api
+
+
+def _run(arch="olmo-1b", gb=2, T=16):
+    return RunConfig(
+        model=registry.get_reduced(arch),
+        shape=ShapeConfig("t", "train", T, gb),
+        parallel=ParallelConfig(remat="none"),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2))
+
+
+@pytest.fixture(scope="module")
+def served_params():
+    cfg = registry.get_reduced("olmo-1b")
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+class TestAllocation:
+    def test_allocate_by_dims_and_chips(self):
+        sc = Supercomputer()
+        sl = sc.allocate((4, 8, 8))
+        assert sl.dims == (4, 8, 8) and sl.num_chips == 256
+        cube = sc.allocate(512)              # picks the max-bisection cube
+        assert cube.dims == (8, 8, 8)
+        assert sc.utilization() == pytest.approx(12 / 64)
+
+    def test_reuse_after_free(self):
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((8, 8, 8))          # whole machine
+        with pytest.raises(CapacityError):
+            sc.allocate((4, 4, 4))
+        blocks = sl.blocks
+        sl.free()
+        assert sl.status == "freed"
+        with pytest.raises(SliceError):
+            sl.dryrun(ModelProfile("x", 1e9, 12, 1024, 128, 64))
+        # same blocks and OCS ports are allocatable again
+        sl2 = sc.allocate((8, 8, 8))
+        assert sl2.blocks == blocks
+        assert sc.utilization() == pytest.approx(1.0)
+
+    def test_context_manager_frees(self):
+        sc = Supercomputer()
+        with sc.allocate((4, 4, 4)) as sl:
+            assert sc.utilization() > 0
+        assert sl.status == "freed" and sc.utilization() == 0.0
+
+    def test_twisted_allocation_and_retwist(self):
+        sc = Supercomputer()
+        sl = sc.allocate((4, 4, 8), twisted=True)
+        assert sl.topology.twisted and sl.describe() == "4x4x8_T"
+        moved = sl.retwist(False)
+        assert moved > 0 and not sl.twisted
+        assert sl.retwist(False) == 0        # no-op
+        with pytest.raises(ValueError):
+            sc.allocate((4, 4, 4)).retwist(True)   # not twistable
+
+
+class TestAnalytics:
+    def test_dryrun_uses_slice_geometry(self):
+        sc = Supercomputer()
+        sl = sc.allocate((4, 4, 8))
+        prof = ModelProfile("p", params=1e9, layers=12, d_model=1024,
+                            seq_len=128, global_batch=64)
+        ev = sl.dryrun(prof)
+        assert ev.geometry == (4, 4, 8) and ev.step_time > 0
+        pinned = sl.dryrun(prof, ParallelSpec(1, 4, 4, 8))
+        assert pinned.spec.total == sl.num_chips
+
+    def test_autotopo_searches_all_geometries(self):
+        sc = Supercomputer()
+        sl = sc.allocate((4, 4, 8))
+        prof = ModelProfile("p", params=1e9, layers=12, d_model=1024,
+                            seq_len=128, global_batch=64)
+        evs = sl.autotopo(prof, top_k=4)
+        assert evs and evs[0].step_time <= evs[-1].step_time
+        assert {e.geometry for e in evs} <= set(sc.geometries(128))
+
+    def test_bound_cost_model(self):
+        sc = Supercomputer()
+        sl = sc.allocate((4, 4, 8))
+        topo = sl.topology
+        assert sl.cost.all_reduce(2 ** 30) == pytest.approx(
+            sc.costs.all_reduce(topo, 2 ** 30))
+        assert sl.cost.all_to_all(2 ** 20) == pytest.approx(
+            sc.costs.all_to_all(topo, 2 ** 20))
+
+    def test_expected_goodput_modes(self):
+        sc = Supercomputer()
+        ocs = sc.expected_goodput(1024, 0.99, trials=500)
+        static = sc.expected_goodput(1024, 0.99, mode="static", trials=100)
+        assert ocs > static
+
+
+class TestFailurePropagation:
+    def test_failure_reroutes_and_notifies_session(self, served_params):
+        cfg, params = served_params
+        sc = Supercomputer()
+        sl = sc.allocate((8, 8, 8))
+        session = sl.serve(cfg, params,
+                           SliceSpec(slots=2, max_len=32, prompt_len=8))
+        for i in range(3):
+            session.submit(np.arange(4) + i, max_new_tokens=4)
+        sc.fail_block(sl.blocks[0])          # swapped for a spare
+        assert sl.status == "active"
+        assert [e.kind for e in session.interruptions] == ["reconfigure"]
+        assert session.interruptions[0].circuits_moved > 0
+        stats = session.run()
+        assert not stats["aborted"]
+        assert stats["requests_done"] == 3
+        assert stats["interruptions"] == 1
+        assert stats["reconfig_stall_s"] > 0
+
+    def test_failure_without_spare_loses_slice(self, served_params):
+        cfg, params = served_params
+        sc = Supercomputer(num_blocks=1)
+        sl = sc.allocate((4, 4, 4))
+        session = sl.serve(cfg, params,
+                           SliceSpec(slots=1, max_len=32, prompt_len=8))
+        sc.fail_block(sl.blocks[0])
+        assert sl.status == "lost"
+        assert session.lost
+        with pytest.raises(SliceError):
+            session.submit(np.arange(4))
+        stats = session.run()
+        assert stats["aborted"]
+        # failure-path stats expose the same keys as a normal run
+        for k in ("requests_done", "tokens", "wall_s", "tokens_per_s",
+                  "mean_ttft_s", "decode_steps"):
+            assert k in stats
+
+    def test_sessions_unusable_after_free(self, served_params):
+        cfg, params = served_params
+        sc = Supercomputer()
+        sl = sc.allocate((4, 4, 4))
+        serve = sl.serve(cfg, params,
+                         SliceSpec(slots=1, max_len=32, prompt_len=8))
+        train = sl.train(_run())
+        sl.free()
+        assert serve.closed and train.closed and not serve.lost
+        with pytest.raises(SliceError):
+            serve.submit(np.arange(4))
+        with pytest.raises(SliceError):
+            serve.run()
+        with pytest.raises(SliceError):
+            train.run(2)
+
+    def test_idle_block_failure_touches_no_slice(self):
+        sc = Supercomputer()
+        sl = sc.allocate((4, 4, 4))
+        free_block = max(sc.scheduler.free)
+        sc.fail_block(free_block)
+        assert sl.status == "active" and len(sl.events) == 1
+
+    def test_straggler_swap_event(self):
+        sc = Supercomputer()
+        sl = sc.allocate((8, 8, 8))
+        slow = sl.blocks[2]
+        ev = sl.swap_straggler(slow)
+        assert ev.kind == "straggler" and slow not in sl.blocks
+
+
+class TestJobQueue:
+    def test_fifo_drain(self):
+        sc = Supercomputer(num_blocks=2)
+        for i in range(3):
+            sc.submit((4, 4, 8), lambda s, i=i: (i, s.describe()))
+        done = sc.run_pending()
+        assert [t.result for t in done] == [
+            (0, "4x4x8"), (1, "4x4x8"), (2, "4x4x8")]
+        assert not sc.queue and sc.utilization() == 0.0
+
+    def test_backfill_around_blocked_head(self):
+        sc = Supercomputer(num_blocks=2)
+        hold = sc.allocate((4, 4, 4))
+        sc.submit((4, 4, 8), lambda s: "big")      # needs both blocks
+        sc.submit((4, 4, 4), lambda s: "small")    # fits now
+        done = sc.run_pending()
+        assert [t.result for t in done] == ["small"]
+        hold.free()
+        assert [t.result for t in sc.run_pending()] == ["big"]
+
+    def test_submit_rejects_bad_geometry(self):
+        sc = Supercomputer(num_blocks=2)
+        with pytest.raises(ValueError):
+            sc.submit((8, 8, 8), lambda s: None, twisted=True)
+        with pytest.raises(ValueError):
+            sc.submit((16, 16, 16), lambda s: None)   # > machine capacity
+        assert not sc.queue
+
+    def test_failed_job_keeps_queue_draining(self):
+        sc = Supercomputer(num_blocks=2)
+        sc.submit((4, 4, 4), lambda s: 1 / 0)
+        sc.submit((4, 4, 4), lambda s: "ok")
+        done = sc.run_pending()
+        assert done[0].status == "failed" and "ZeroDivisionError" in done[0].error
+        assert done[1].result == "ok"
+        assert sc.utilization() == 0.0             # failed job's slice freed
+
+
+class TestTrainServe:
+    def test_train_then_serve_on_one_slice(self, tmp_path):
+        sc = Supercomputer()
+        sl = sc.allocate((4, 4, 4))
+        run = _run()
+        train = sl.train(run, 4, ckpt_dir=str(tmp_path), ckpt_every=2,
+                         log_every=2)
+        assert train.state.step == 4
+        losses = [m["loss"] for m in train.metrics_log if "loss" in m]
+        assert losses
+        session = sl.serve(run.model, train.params,
+                           SliceSpec(slots=2, max_len=32, prompt_len=8))
+        session.submit(np.arange(4), max_new_tokens=4)
+        stats = session.run()
+        assert stats["requests_done"] == 1 and stats["tokens"] == 4
+        sl.free()
+
+    def test_block_failure_during_training_session(self, tmp_path):
+        """The §2.3 story through the facade: fail mid-run, swap a spare,
+        restore from checkpoint, finish — session records the event."""
+        sc = Supercomputer()
+        sl = sc.allocate((8, 8, 8))
+        sess = sl.train(_run(), 6, ckpt_dir=str(tmp_path), ckpt_every=2,
+                        fail_at=4, log_every=1)
+        assert sess.state.step == 6
+        assert [e.kind for e in sess.interruptions] == ["reconfigure"]
+        assert sess.interruptions[0].circuits_moved > 0
+        assert sl.status == "active"
+        assert all(b in sc.scheduler.healthy for b in sl.blocks)
+        restarts = sum(1 for m in sess.metrics_log if m.get("event"))
+        assert restarts == 1
+
+
+class TestServeEngineShim:
+    def test_legacy_kwargs_warn_and_map_to_spec(self, served_params):
+        cfg, params = served_params
+        from repro.serve.engine import ServeEngine
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            eng = ServeEngine(cfg, params, slots=2, max_len=48,
+                              prompt_len=8)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        assert eng.spec == SliceSpec(slots=2, max_len=48, prompt_len=8)
+        assert eng.slots == 2 and eng.max_len == 48
+
+    def test_spec_construction_no_warning(self, served_params):
+        cfg, params = served_params
+        from repro.serve.engine import ServeEngine
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            eng = ServeEngine(cfg, params, SliceSpec(slots=3))
+        assert not [x for x in w
+                    if issubclass(x.category, DeprecationWarning)]
+        assert eng.slots == 3

@@ -1,6 +1,6 @@
 """Collective cost model + SparseCore timing model vs the paper's numbers."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.costmodel import (CollectiveCostModel, TPU_V3, TPU_V4,

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import OptimizerConfig
 from repro.optim import adam as OPT
@@ -105,8 +105,8 @@ class TestCheckpoint:
 
     def test_elastic_restore_resharded(self, rng):
         """Restore applies new shardings (single device: degenerate mesh)."""
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("data",))
         tree = {"w": jax.random.normal(rng, (8, 4))}
         like = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
         sh = {"w": jax.sharding.NamedSharding(

@@ -14,8 +14,8 @@ from repro.models import api
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh()
 
 
 def _run(arch="olmo-1b", gb=4, T=32):

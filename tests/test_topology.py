@@ -1,7 +1,7 @@
 """Topology invariants + the paper's Figure 6 / Table 2 / §2.9 claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.topology import (SliceTopology, geometries_for, is_twistable)
 
