@@ -11,6 +11,7 @@ BENCHES = [
     "fig6_twisted_alltoall",
     "fig8_bisection",
     "fig9_sparsecore",
+    "sparsecore_pipeline",   # pipeline v2 -> BENCH_sparsecore.json
     "fig10_panas",
     "fig12_v4_vs_v3",
     "table3_autotopo",

@@ -1,10 +1,15 @@
 """End-to-end driver: train a DLRM with the SparseCore embedding engine.
 
-The paper's own workload (DLRM0: sparse embedding stack + dense tower).
+The paper's own workload (DLRM0: sparse embedding stack + dense tower), run
+through the unified cluster API: allocate a slice on the `Supercomputer`,
+open a training session on it, and let the pipelined multi-group embedding
+executor (fused descriptor-stream lookups, software-pipelined exchanges)
+drive the sparse stack — the default since the SparseCore pipeline v2.
+
 ``--scale full`` uses the real 20B-embedding config (needs a TPU pod);
 ``--scale demo`` (default) is a container-sized version with the same
-structure: multiple multivalent zipf-skewed tables, dedup'd lookups, dense
-interaction tower, Adam, checkpoints.
+structure: multiple multivalent zipf-skewed tables over several widths,
+dedup'd lookups, dense interaction tower, Adam, checkpoints.
 
     PYTHONPATH=src python examples/train_dlrm.py --steps 150
 """
@@ -12,16 +17,20 @@ import argparse
 import tempfile
 
 
+from repro.cluster import Supercomputer
 from repro.configs import (DLRMConfig, EmbeddingTableConfig, ModelConfig,
                            OptimizerConfig, ParallelConfig, RunConfig,
                            ShapeConfig, registry)
-from repro.train.trainer import Trainer
 
 
-def demo_config(tables: int = 12, vocab: int = 5000, dim: int = 16):
+def demo_config(tables: int = 12, vocab: int = 5000):
+    """Zipf-ish demo tables spread over three widths so the fused
+    descriptor stream covers several width-groups."""
+    dims = [16, 8, 32]
     specs = tuple(
         EmbeddingTableConfig(
-            name=f"table_{i:02d}", vocab_size=vocab * (1 + i % 3), dim=dim,
+            name=f"table_{i:02d}", vocab_size=vocab * (1 + i % 3),
+            dim=dims[i % 3],
             avg_valency=[1.0, 4.0, 16.0][i % 3],
             max_valency=[1, 8, 32][i % 3],
             combiner="sum" if i % 2 == 0 else "mean")
@@ -39,27 +48,31 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--scale", choices=["demo", "full"], default="demo")
+    ap.add_argument("--pergroup", action="store_true",
+                    help="disable the pipelined executor (legacy dataflow)")
     args = ap.parse_args()
 
     cfg = (registry.get_config("dlrm0") if args.scale == "full"
            else demo_config())
-    from repro.launch.mesh import make_local_mesh
-    mesh = make_local_mesh()
     run = RunConfig(
         model=cfg,
         shape=ShapeConfig("dlrm", "train", 1, args.batch),
-        parallel=ParallelConfig(remat="none"),
+        parallel=ParallelConfig(remat="none",
+                                emb_pipeline=not args.pergroup),
         optimizer=OptimizerConfig(lr=3e-4, warmup_steps=20))
 
-    with tempfile.TemporaryDirectory() as ckpt:
-        trainer = Trainer(run, mesh, ckpt_dir=ckpt, ckpt_every=50)
-        trainer.train(args.steps, log_every=10)
+    sc = Supercomputer(num_blocks=8)
+    with tempfile.TemporaryDirectory() as ckpt, \
+            sc.allocate((4, 4, 4)) as slice_:
+        print(f"slice: {slice_.describe()}")
+        session = slice_.train(run, ckpt_dir=ckpt, ckpt_every=50)
+        session.run(args.steps, log_every=10)
         print("\nstep   bce-loss")
-        for m in trainer.metrics_log:
+        for m in session.metrics_log:
             if "loss" in m:
                 print(f"{m['step']:5d}  {m['loss']:.4f}")
-        first = next(m["loss"] for m in trainer.metrics_log if "loss" in m)
-        last = [m["loss"] for m in trainer.metrics_log if "loss" in m][-1]
+        losses = [m["loss"] for m in session.metrics_log if "loss" in m]
+        first, last = losses[0], losses[-1]
         print(f"\nloss {first:.4f} -> {last:.4f} "
               f"({'improved' if last < first else 'NO IMPROVEMENT'})")
 

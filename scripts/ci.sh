@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + quickstart smoke + cluster serve benchmark.
+# CI entry point: tier-1 tests (+ coverage floor when pytest-cov is
+# available) + quickstart smoke + benchmarks, with BENCH_*.json archived.
 #
 #   bash scripts/ci.sh            # full gate
 #   bash scripts/ci.sh --fast     # tests only
@@ -9,7 +10,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 echo "== tier-1 tests =="
-python -m pytest -x -q
+# Coverage floor: the container image ships neither pytest-cov nor
+# coverage, so the floor could not be measured when this stage landed —
+# 80 is a provisional start; the first pytest-cov-equipped run should
+# replace it with the measured baseline and ratchet from there.  Plain
+# pytest remains the hard gate either way.
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+    python -m pytest -x -q --cov=repro --cov-report=term \
+        --cov-fail-under=80
+else
+    echo "(pytest-cov not installed; running without the coverage floor)"
+    python -m pytest -x -q
+fi
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== quickstart smoke (CPU) =="
@@ -23,6 +35,14 @@ from benchmarks import cluster_session
 for name, us, derived in cluster_session.run():
     print(f"{name},{us:.1f},{derived}")
 PY
+
+    echo "== sparsecore pipeline benchmark -> BENCH_sparsecore.json =="
+    python benchmarks/sparsecore_pipeline.py
+
+    echo "== archive benchmark artifacts =="
+    mkdir -p artifacts
+    cp BENCH_*.json artifacts/
+    ls -l artifacts/
 fi
 
 echo "CI OK"

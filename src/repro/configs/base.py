@@ -223,6 +223,7 @@ class ParallelConfig:
     emb_wire_bf16: bool = False        # bf16 vectors on the ICI wire
     emb_capacity_factor: float = 2.0   # all-to-all send slot provisioning
     emb_method: str = "auto"           # "auto" | "a2a" | "psum"
+    emb_pipeline: bool = True          # fused multi-group pipelined executor
 
 
 @dataclass(frozen=True)

@@ -59,11 +59,25 @@ def embedding_traffic(dlrm: DLRMConfig, batch_per_chip: float, *,
             "tables": float(len(dlrm.tables))}
 
 
+def num_width_groups(dlrm: DLRMConfig) -> int:
+    """Distinct table widths = fused descriptor-stream launches per step."""
+    return len({t.dim for t in dlrm.tables})
+
+
 def sc_step_time(dlrm: DLRMConfig, global_batch: int,
                  topo: SliceTopology, hw: HardwareParams = TPU_V4, *,
-                 sc: SCParams = SCParams(), dedup_factor: float = 0.7
-                 ) -> Dict[str, float]:
-    """Embedding step time with SparseCores (seconds, per phase + total)."""
+                 sc: SCParams = SCParams(), dedup_factor: float = 0.7,
+                 fused_issue: bool = False, pipelined: bool = True,
+                 cache_hit_rate: float = 0.0) -> Dict[str, float]:
+    """Embedding step time with SparseCores (seconds, per phase + total).
+
+    ``fused_issue``: the pipelined executor's fused multi-group launch — one
+    CISC instruction issue per width-group instead of per table.
+    ``pipelined``: stages overlap (the slowest governs); False serialises
+    Fetch/scVPU/ICI, the pre-SparseCore dataflow.
+    ``cache_hit_rate``: fraction of deduplicated lookups served by the
+    replicated hot-id cache, which never enter the all-to-all.
+    """
     n = topo.num_chips
     bpc = global_batch / n
     tr = embedding_traffic(dlrm, bpc, dedup_factor=dedup_factor,
@@ -76,13 +90,18 @@ def sc_step_time(dlrm: DLRMConfig, global_batch: int,
     vpu_rate = (hw.sparsecores_per_chip * sc.tiles * sc.simd_lanes
                 * hw.clock_hz)
     vpu = vpu_ops / vpu_rate
-    # model-parallel tables: ids out + vectors back, fwd and bwd (§3.4)
-    a2a_bytes = 2.0 * tr["gather_bytes"] * (1.0 - 1.0 / n)
+    # model-parallel tables: ids out + vectors back, fwd and bwd (§3.4);
+    # cache hits are served from the replicated hot rows, never exchanged
+    a2a_bytes = (2.0 * tr["gather_bytes"] * (1.0 - 1.0 / n)
+                 * (1.0 - cache_hit_rate))
     ici = cm.all_to_all(topo, a2a_bytes)
-    # CISC issue streams parallelise across the chip's SparseCores
-    fixed = tr["tables"] * sc.instr_overhead_s * (4.0 / hw.sparsecores_per_chip)
+    # CISC issue streams parallelise across the chip's SparseCores; the
+    # fused descriptor stream amortises one issue across a whole width-group
+    issues = float(num_width_groups(dlrm)) if fused_issue else tr["tables"]
+    fixed = issues * sc.instr_overhead_s * (4.0 / hw.sparsecores_per_chip)
     # dataflow pipeline: phases overlap; the slowest stage governs
-    total = max(hbm, vpu, ici) + fixed
+    stages = (max(hbm, vpu, ici) if pipelined else hbm + vpu + ici)
+    total = stages + fixed
     return {"hbm": hbm, "vpu": vpu, "ici": ici, "fixed": fixed,
             "total": total}
 
@@ -114,11 +133,12 @@ def tc_step_time(dense_params: float, global_batch: int, n_chips: int,
 def dlrm_step_time(cfg: ModelConfig, global_batch: int, topo: SliceTopology,
                    hw: HardwareParams = TPU_V4, *, placement: str = "sc",
                    dense_params: float = 100e6,
-                   dedup_factor: float = 0.7) -> Dict[str, float]:
+                   dedup_factor: float = 0.7, **sc_kwargs
+                   ) -> Dict[str, float]:
     """End-to-end DLRM step: max(SparseTime, DenseTime) (Fig 10 caption)."""
     if placement == "sc":
         sparse = sc_step_time(cfg.dlrm, global_batch, topo, hw,
-                              dedup_factor=dedup_factor)["total"]
+                              dedup_factor=dedup_factor, **sc_kwargs)["total"]
     else:
         sparse = cpu_step_time(cfg.dlrm, global_batch, topo)["total"]
     dense = tc_step_time(dense_params, global_batch, topo.num_chips, hw)

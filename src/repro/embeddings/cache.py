@@ -1,0 +1,120 @@
+"""Hot-id embedding cache — an LFU layer over deduplicated ids (§3.4-§3.5).
+
+Production DLRM id streams are Zipf-skewed: a small set of rows absorbs most
+lookups.  The SparseCore dataflow still pays the id/vector all-to-all for
+every deduplicated id each step; this cache keeps the hottest rows replicated
+on every shard so their lookups short-circuit the exchange entirely — only
+cache *misses* ride the all-to-all (and, with ``capacity_scale`` < 1, the
+statically provisioned exchange buffers shrink to match).
+
+Design (host-side state, functional on-device use):
+  * ``observe``   — decayed per-group frequency counts over the ids of a step
+    (LFU with aging, so yesterday's hot rows decay out);
+  * ``refresh``   — snapshot the top-``capacity`` rows per group out of the
+    (possibly sharded) parameter arrays into replicated ``(ids, rows)``
+    buffers.  Ids are sorted ascending and padded with an int32 sentinel so
+    shard-local hit tests are a single ``searchsorted``;
+  * ``entries``   — the per-group ``(ids (C,), rows (C, D))`` device arrays
+    the engine threads into its lookup (as *arguments*, never closures, so a
+    refresh does not recompile the train step).
+
+Gradient contract: the forward may serve slightly stale cached rows, but the
+backward is exact — the engine wraps the cached lookup in a ``custom_vjp``
+whose backward differentiates the *uncached* dataflow, so every gradient is
+scattered back to the authoritative sharded rows (see engine._cached_vjp).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# sorts after every real row id; searchsorted never matches it
+SENTINEL = np.int32(2 ** 31 - 1)
+
+
+class HotIdCache:
+    """Per-group LFU over deduplicated row ids."""
+
+    def __init__(self, capacity: int = 64, *, decay: float = 0.9,
+                 capacity_scale: float = 1.0):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.decay = decay
+        # Scales the all-to-all send capacity the engine provisions when this
+        # cache is active (< 1.0 models the miss-only exchange buffers).
+        # CONTRACT: the caller owns provisioning — if the hit rate sags (id
+        # distribution shifts between refreshes) and per-shard misses exceed
+        # the shrunken capacity, the surplus lands in the drop bucket and
+        # reads back as zero vectors, exactly like the uncached path's
+        # over-capacity drops but on a tighter budget.  Keep 1.0 (the
+        # default) unless the workload's miss rate is known; the backward
+        # always uses full capacity, so gradients never drop.
+        self.capacity_scale = capacity_scale
+        self._counts: Dict[str, Dict[int, float]] = {}
+        self._entries: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        self.hits = 0.0
+        self.lookups = 0.0
+
+    # -- statistics ----------------------------------------------------------
+
+    def observe(self, group: str, ids) -> None:
+        """Fold one step's (already offset-adjusted) id batch into the LFU
+        counts.  ``ids``: any int array; negatives are padding."""
+        flat = np.asarray(ids).reshape(-1)
+        flat = flat[flat >= 0]
+        if flat.size == 0:
+            return
+        counts = self._counts.setdefault(group, {})
+        for k in list(counts):
+            counts[k] *= self.decay
+        uniq, freq = np.unique(flat, return_counts=True)
+        for u, f in zip(uniq.tolist(), freq.tolist()):
+            counts[u] = counts.get(u, 0.0) + float(f)
+        if len(counts) > 8 * self.capacity:      # bound host memory
+            keep = sorted(counts, key=counts.get, reverse=True)
+            for k in keep[8 * self.capacity:]:
+                del counts[k]
+        # running hit-rate estimate against the current entry set
+        ids_arr, _ = self._entries.get(group, (None, None))
+        if ids_arr is not None:
+            cached = np.asarray(ids_arr)
+            self.hits += float(np.isin(flat, cached[cached != SENTINEL]).sum())
+        self.lookups += float(flat.size)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1.0)
+
+    # -- snapshot ------------------------------------------------------------
+
+    def refresh(self, group: str, table) -> None:
+        """Snapshot the top-``capacity`` rows of ``table`` (the group's
+        (R, D) parameter array) for the hottest ids seen so far."""
+        counts = self._counts.get(group, {})
+        hot = sorted(counts, key=counts.get, reverse=True)[: self.capacity]
+        ids = np.full((self.capacity,), SENTINEL, np.int32)
+        ids[: len(hot)] = np.asarray(sorted(hot), np.int32)
+        rows = jnp.take(table, jnp.minimum(jnp.asarray(ids),
+                                           table.shape[0] - 1), axis=0)
+        rows = jnp.where((jnp.asarray(ids) != SENTINEL)[:, None], rows, 0.0)
+        self._entries[group] = (jnp.asarray(ids), rows)
+
+    def refresh_all(self, coll, params) -> None:
+        """Refresh every *observed* width-group of an ``EmbeddingCollection``
+        (groups the executor never routes through the a2a exchange have no
+        counts and get no snapshot)."""
+        for dim, g in sorted(coll.groups.items()):
+            if g.name in self._counts:
+                self.refresh(g.name, params[g.name])
+
+    # -- device view ---------------------------------------------------------
+
+    def entries(self, group: str
+                ) -> Optional[Tuple[jnp.ndarray, jnp.ndarray]]:
+        return self._entries.get(group)
+
+    def arrays(self) -> Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]:
+        """group name -> (ids (C,) sorted i32 w/ sentinel pad, rows (C, D))."""
+        return dict(self._entries)

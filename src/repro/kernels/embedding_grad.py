@@ -1,12 +1,19 @@
-"""Pallas TPU kernel: embedding gradient scatter (the SC Flush unit, §3.5).
+"""Pallas TPU kernels: embedding gradient scatter (the SC Flush unit, §3.5).
 
 "The Flush Unit writes updated parameters to HBM during the backward pass."
 
-Contract: ids are UNIQUE (the engine always deduplicates before the backward
-all-to-all, paper §3.4) and sorted ascending with -1 padding at the tail.
-Each grid step DMAs one gradient row VMEM→HBM into the (aliased) table-shaped
-gradient buffer; untouched rows keep their zero initialisation via
-input/output aliasing.
+``scatter_kernel_call``: ids are UNIQUE (the engine always deduplicates
+before the backward all-to-all, paper §3.4) and sorted ascending with -1
+padding at the tail.  Each grid step DMAs one gradient row VMEM→HBM into the
+(aliased) table-shaped gradient buffer; untouched rows keep their zero
+initialisation via input/output aliasing.
+
+``fused_scatter_kernel_call``: the backward of the fused multi-group lookup —
+the same (rows, slots) descriptor stream drives one grid over every table,
+read-modify-writing each descriptor's upstream slot gradient into its fused
+row.  Descriptor rows may repeat (interpret mode runs the grid sequentially,
+so read-after-write accumulation is exact; on real hardware duplicate rows
+would be serialised per HBM channel by the Flush unit).
 """
 from __future__ import annotations
 
@@ -47,3 +54,51 @@ def scatter_kernel_call(grads: jax.Array, ids: jax.Array, vocab: int, *,
         interpret=interpret,
     )
     return fn(ids, grads, dtable0)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-group gradient scatter
+# ---------------------------------------------------------------------------
+
+def _fused_scatter_kernel(rows_ref, slots_ref, gout_ref, zeros_ref, out_ref):
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    del zeros_ref  # present only to seed the aliased output with zeros
+    valid = rows_ref[b, s] >= 0
+
+    @pl.when(valid)
+    def _():
+        out_ref[0, :] += gout_ref[0, 0, :].astype(out_ref.dtype)
+
+
+def fused_scatter_kernel_call(gout: jax.Array, rows: jax.Array,
+                              slots: jax.Array, vocab: int, *,
+                              interpret: bool = True) -> jax.Array:
+    """gout (B, K, Dm) slot grads (pre-scaled for mean combiners); rows (B, S)
+    absolute fused row ids (-1 invalid); slots (S,) i32 slot per descriptor
+    column -> (R, Dm) accumulated gradient over the fused row space."""
+    B, K, Dm = gout.shape
+    S = rows.shape[1]
+    dtable0 = jnp.zeros((vocab, Dm), gout.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, S),
+        in_specs=[
+            pl.BlockSpec((1, 1, Dm),
+                         lambda b, s, rows, slots: (b, slots[s], 0)),
+            pl.BlockSpec((1, Dm),
+                         lambda b, s, rows, slots:
+                         (jnp.maximum(rows[b, s], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Dm),
+                               lambda b, s, rows, slots:
+                               (jnp.maximum(rows[b, s], 0), 0)),
+    )
+    fn = pl.pallas_call(
+        _fused_scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((vocab, Dm), gout.dtype),
+        input_output_aliases={3: 0},   # alias the zero table (arg idx incl.
+        interpret=interpret,           # the two prefetched descriptor args)
+    )
+    return fn(rows, slots, gout, dtable0)

@@ -7,11 +7,20 @@ This is the SparseCore Fetch-unit/scVPU analogue (paper §3.5, Figure 7):
   * the VMEM accumulator is the Spmem tile slice,
   * the multiply-accumulate combine is the scVPU / cross-channel reduce.
 
-Two entry points:
+Three entry points:
   * ``gather_kernel_call``  — (V, D), (B, Vl) -> (B, Vl, D) row gather.
   * ``lookup_kernel_call``  — (V, D), (B, Vl) -> (B, D) fused gather+combine
     (sum or mean over the valency axis) without materialising (B, Vl, D) —
     the win over the XLA gather+reduce path.
+  * ``fused_lookup_kernel_call`` — ONE launch over every table: the fused
+    row space (R, Dm) is the concatenation of all width-groups (rows padded
+    to a common lane width Dm) and the scalar-prefetched descriptor stream
+    ``rows (B, S)`` / ``slots (S,)`` plays the SC Fetch unit's per-table
+    descriptor list.  Each grid step DMAs one absolute row and accumulates
+    it into the output slot of the table that owns descriptor column ``s``;
+    the accumulator flushes when the slot id changes.  This amortises one
+    CISC-instruction issue (one ``pallas_call``) across the whole table
+    batch instead of paying it per width-group.
 
 Invalid ids (< 0) contribute zero.  On real TPU hardware D should be padded
 to a multiple of 128 lanes; interpret mode (CPU validation) has no such
@@ -119,3 +128,75 @@ def lookup_kernel_call(table: jax.Array, ids: jax.Array, *,
         interpret=interpret,
     )
     return fn(ids, table)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-group lookup (one grid over every table)
+# ---------------------------------------------------------------------------
+
+def _fused_lookup_kernel(rows_ref, slots_ref, means_ref, table_ref, out_ref,
+                         acc_ref, cnt_ref, *, n_desc: int):
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    slot = slots_ref[s]
+    # descriptor columns are sorted by slot, so each output slot is a
+    # contiguous run of grid steps: reset at the run head, flush at its tail
+    prev_same = jnp.where(s > 0, slots_ref[jnp.maximum(s - 1, 0)] == slot,
+                          False)
+
+    @pl.when(jnp.logical_not(prev_same))
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    valid = rows_ref[b, s] >= 0
+
+    @pl.when(valid)
+    def _():
+        acc_ref[...] += table_ref[0, :].astype(jnp.float32)
+        cnt_ref[...] += 1.0
+
+    last = jnp.where(s < n_desc - 1,
+                     slots_ref[jnp.minimum(s + 1, n_desc - 1)] != slot, True)
+
+    @pl.when(last)
+    def _():
+        acc = acc_ref[...]
+        acc = jnp.where(means_ref[slot] > 0,
+                        acc / jnp.maximum(cnt_ref[0], 1.0), acc)
+        out_ref[0, 0, :] = acc.astype(out_ref.dtype)
+
+
+def fused_lookup_kernel_call(table: jax.Array, rows: jax.Array,
+                             slots: jax.Array, means: jax.Array, *,
+                             interpret: bool = True) -> jax.Array:
+    """One launch over every table of a fused row space.
+
+    table (R, Dm); rows (B, S) absolute fused row ids (-1 invalid);
+    slots (S,) i32 non-decreasing output-slot id per descriptor column;
+    means (K,) i32, 1 where slot k mean-combines -> (B, K, Dm) combined.
+    """
+    R, Dm = table.shape
+    B, S = rows.shape
+    K = means.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, S),
+        in_specs=[
+            pl.BlockSpec((1, Dm),
+                         lambda b, s, rows, slots, means:
+                         (jnp.maximum(rows[b, s], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Dm),
+                               lambda b, s, rows, slots, means:
+                               (b, slots[s], 0)),
+        scratch_shapes=[pltpu.VMEM((Dm,), jnp.float32),
+                        pltpu.VMEM((1,), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_fused_lookup_kernel, n_desc=S),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Dm), table.dtype),
+        interpret=interpret,
+    )
+    return fn(rows, slots, means, table)

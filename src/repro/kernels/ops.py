@@ -14,8 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as REF
-from repro.kernels.embedding_grad import scatter_kernel_call
-from repro.kernels.embedding_lookup import gather_kernel_call, lookup_kernel_call
+from repro.kernels.embedding_grad import (fused_scatter_kernel_call,
+                                          scatter_kernel_call)
+from repro.kernels.embedding_lookup import (fused_lookup_kernel_call,
+                                            gather_kernel_call,
+                                            lookup_kernel_call)
 from repro.kernels.flash_attention import flash_attention as _flash
 
 
@@ -37,6 +40,46 @@ def embedding_lookup(table, ids, combiner: str = "sum"):
 @functools.partial(jax.jit, static_argnames=("vocab",))
 def embedding_scatter(grads, ids, vocab: int):
     return scatter_kernel_call(grads, ids, vocab, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-group lookup: forward = fused Fetch/combine kernel, backward =
+# fused Flush scatter kernel (exact, including mean-combiner rescaling)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fused_lookup(table, rows, slots, means):
+    """Differentiable one-launch multi-table lookup.
+
+    table (R, Dm) fused row space; rows (B, S) absolute fused row ids;
+    slots (S,) slot per descriptor column; means (K,) mean flags
+    -> (B, K, Dm).  Gradients flow to ``table`` only.
+    """
+    return fused_lookup_kernel_call(table, rows, slots, means,
+                                    interpret=_interpret())
+
+
+def _fused_lookup_fwd(table, rows, slots, means):
+    out = fused_lookup(table, rows, slots, means)
+    return out, (table, rows, slots, means)
+
+
+def _fused_lookup_bwd(res, g):
+    table, rows, slots, means = res
+    vocab, dtype = table.shape[0], table.dtype
+    K = means.shape[0]
+    valid = (rows >= 0).astype(jnp.float32)                 # (B, S)
+    onehot = jax.nn.one_hot(slots, K, dtype=jnp.float32)    # (S, K)
+    cnt = valid @ onehot                                    # (B, K)
+    scale = jnp.where(means[None, :] > 0,
+                      1.0 / jnp.maximum(cnt, 1.0), 1.0)
+    g_scaled = (g.astype(jnp.float32) * scale[..., None]).astype(dtype)
+    dtable = fused_scatter_kernel_call(g_scaled, rows, slots, vocab,
+                                       interpret=_interpret())
+    return dtable.astype(dtype), None, None, None
+
+
+fused_lookup.defvjp(_fused_lookup_fwd, _fused_lookup_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(

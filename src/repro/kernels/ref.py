@@ -36,6 +36,40 @@ def embedding_scatter_ref(grads: jax.Array, ids: jax.Array,
         jnp.where(valid, grads, 0.0))
 
 
+def fused_lookup_ref(table: jax.Array, rows: jax.Array, slots: jax.Array,
+                     means: jax.Array) -> jax.Array:
+    """Oracle for the fused multi-group lookup kernel.
+
+    table (R, Dm); rows (B, S) absolute fused row ids (-1 invalid);
+    slots (S,) i32 output slot per descriptor column; means (K,) i32 mean
+    flags -> (B, K, Dm) combined slot vectors.
+    """
+    K = means.shape[0]
+    valid = rows >= 0
+    vecs = jnp.take(table, jnp.maximum(rows, 0), axis=0).astype(jnp.float32)
+    vecs = jnp.where(valid[..., None], vecs, 0.0)          # (B, S, Dm)
+    onehot = jax.nn.one_hot(slots, K, dtype=jnp.float32)   # (S, K)
+    out = jnp.einsum("bsd,sk->bkd", vecs, onehot)
+    cnt = jnp.einsum("bs,sk->bk", valid.astype(jnp.float32), onehot)
+    denom = jnp.where(means[None, :] > 0, jnp.maximum(cnt, 1.0), 1.0)
+    return (out / denom[..., None]).astype(table.dtype)
+
+
+def fused_scatter_ref(gout: jax.Array, rows: jax.Array, slots: jax.Array,
+                      vocab: int) -> jax.Array:
+    """Oracle for the fused multi-group gradient scatter.
+
+    gout (B, K, Dm) slot grads (pre-scaled for mean combiners) -> (R, Dm).
+    """
+    B, K, Dm = gout.shape
+    g_desc = jnp.take(gout, slots, axis=1)                  # (B, S, Dm)
+    valid = (rows >= 0)[..., None]
+    g_desc = jnp.where(valid, g_desc, 0.0)
+    flat = jnp.maximum(rows, 0).reshape(-1)
+    return jnp.zeros((vocab, Dm), gout.dtype).at[flat].add(
+        g_desc.reshape(-1, Dm))
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,

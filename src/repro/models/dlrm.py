@@ -21,7 +21,10 @@ from repro.parallel.context import LOCAL, ParallelContext
 
 def collection_for(cfg: ModelConfig, num_shards: int = 1
                    ) -> EmbeddingCollection:
-    return EmbeddingCollection(cfg.dlrm.tables, num_shards)
+    # pipeline-v2 layout: locally-resident tables live in one fused
+    # descriptor-addressed row space (no per-step re-concatenation)
+    return EmbeddingCollection(cfg.dlrm.tables, num_shards,
+                               fused_storage=True)
 
 
 def _mlp_init(key, dims, in_dim):
@@ -60,12 +63,19 @@ def init_params(cfg: ModelConfig, key, num_shards: int = 1) -> Dict[str, Any]:
 
 def sparse_forward(cfg: ModelConfig, p, batch, ctx: ParallelContext = LOCAL,
                    *, coll: Optional[EmbeddingCollection] = None,
-                   method: str = "auto", use_kernel: bool = False):
-    """SC side: returns concatenated per-table embeddings (B, sum_dims)."""
+                   method: str = "auto", use_kernel: bool = False,
+                   fused: Optional[bool] = None, cache=None):
+    """SC side: returns concatenated per-table embeddings (B, sum_dims).
+
+    ``fused=None`` follows ``ctx.emb_pipeline`` (default on): one fused
+    descriptor-stream launch over the local tables and software-pipelined
+    multi-group exchanges for the sharded ones.  ``cache`` threads a
+    ``HotIdCache`` (or its arrays) into the a2a path.
+    """
     coll = coll or collection_for(cfg, ctx.model_axis_size)
     feats = {t.name: batch[f"cat_{t.name}"] for t in cfg.dlrm.tables}
     emb = coll.lookup(p["tables"], feats, ctx, method=method,
-                      use_kernel=use_kernel)
+                      use_kernel=use_kernel, fused=fused, cache=cache)
     return jnp.concatenate([emb[t.name].astype(jnp.bfloat16)
                             for t in cfg.dlrm.tables], axis=-1)
 
@@ -81,18 +91,20 @@ def dense_forward(cfg: ModelConfig, p, batch, sparse_vec):
 
 def forward(cfg: ModelConfig, p, batch, ctx: ParallelContext = LOCAL,
             *, coll: Optional[EmbeddingCollection] = None,
-            method: str = "auto", use_kernel: bool = False, **_):
+            method: str = "auto", use_kernel: bool = False,
+            fused: Optional[bool] = None, cache=None, **_):
     logits = dense_forward(
         cfg, p, batch,
         sparse_forward(cfg, p, batch, ctx, coll=coll, method=method,
-                       use_kernel=use_kernel))
+                       use_kernel=use_kernel, fused=fused, cache=cache))
     return logits, jnp.zeros((), jnp.float32)
 
 
 def loss_fn(cfg: ModelConfig, p, batch, ctx: ParallelContext = LOCAL,
             *, coll: Optional[EmbeddingCollection] = None,
-            method: str = "auto"):
-    logits, aux = forward(cfg, p, batch, ctx, coll=coll, method=method)
+            method: str = "auto", fused: Optional[bool] = None, cache=None):
+    logits, aux = forward(cfg, p, batch, ctx, coll=coll, method=method,
+                          fused=fused, cache=cache)
     labels = batch["labels"].astype(jnp.float32)
     loss = jnp.mean(
         jnp.maximum(logits, 0) - logits * labels

@@ -30,6 +30,10 @@ class ParallelContext:
     emb_wire_bf16: bool = False
     emb_capacity_factor: float = 2.0
     emb_method: str = "auto"
+    # pipelined multi-group executor: fuse same-width groups into one
+    # descriptor-stream launch and software-pipeline the per-group id/vector
+    # exchanges (False = legacy one-launch-per-group dataflow)
+    emb_pipeline: bool = True
 
     def axis_size(self, name: Optional[str]) -> int:
         if name is None or self.mesh is None:

@@ -9,12 +9,17 @@ the MXU work instead of serialising before it.
 ``overlapped_matmul_rs``: y = reduce_scatter(x @ w) with the same rotation on
 the output side.
 
+``software_pipeline``: the generic two-stage double-buffer the SparseCore
+embedding executor uses — stage A (id all-to-all) of item k+1 is issued
+before stage B (gather + combine) of item k consumes its buffer, so the
+collective rides under the previous group's compute.
+
 Used by the §Perf hillclimb for TP layers; correctness is tested against the
 naive gather-then-matmul in tests/test_overlap.py.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +27,28 @@ import jax.numpy as jnp
 from repro.parallel.context import lax_axis_size
 
 P = jax.sharding.PartitionSpec
+
+
+def software_pipeline(stage_a: Callable, stage_b: Callable,
+                      items: Sequence) -> List:
+    """Run ``[stage_b(stage_a(x), x) for x in items]`` software-pipelined.
+
+    Double-buffered issue order: stage A of item k+1 is emitted *before*
+    stage B of item k, so when stage A ends in a collective (the embedding
+    id all-to-all) and stage B is compute (owner gather + combine), the
+    compiler can overlap item k+1's communication with item k's compute.
+    Pure reordering — results are identical to the sequential loop.
+    """
+    items = list(items)
+    if not items:
+        return []
+    out = []
+    buf = stage_a(items[0])
+    for k, item in enumerate(items):
+        nxt = stage_a(items[k + 1]) if k + 1 < len(items) else None
+        out.append(stage_b(buf, item))
+        buf = nxt
+    return out
 
 
 def overlapped_matmul_ag(x_shard, w, axis: str):

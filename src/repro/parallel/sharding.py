@@ -207,4 +207,5 @@ def make_context(mesh, pcfg: ParallelConfig) -> ParallelContext:
         emb_wire_bf16=pcfg.emb_wire_bf16,
         emb_capacity_factor=pcfg.emb_capacity_factor,
         emb_method=pcfg.emb_method,
+        emb_pipeline=pcfg.emb_pipeline,
     )

@@ -1,4 +1,5 @@
-"""Embedding engine: dedup properties, placement planning, local == oracle."""
+"""Embedding engine: dedup properties, placement planning, local == oracle,
+fused descriptor layout invariants, pipelined executor parity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,9 +7,11 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import EmbeddingTableConfig
+from repro.embeddings.cache import HotIdCache
 from repro.embeddings.dedup import dedup_ids, dedup_ratio
-from repro.embeddings.engine import (EmbeddingCollection, lookup_reference,
-                                     materialize_tables)
+from repro.embeddings.engine import (EmbeddingCollection,
+                                     PipelinedEmbeddingExecutor,
+                                     lookup_reference, materialize_tables)
 from repro.embeddings.sharding import Placement, plan_placement
 
 
@@ -39,6 +42,21 @@ class TestDedup:
         ids = jnp.asarray([3] * 30 + [5] * 30 + list(range(4)), jnp.int32)
         assert float(dedup_ratio(ids)) > 0.8
 
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(min_value=-1, max_value=50), min_size=1,
+                    max_size=64))
+    def test_idempotence(self, raw):
+        """dedup of an already-deduplicated stream is a fixed point."""
+        ids = jnp.asarray(raw, jnp.int32)
+        uniq, _, num = dedup_ids(ids)
+        uniq2, inv2, num2 = dedup_ids(uniq)
+        np.testing.assert_array_equal(np.asarray(uniq2), np.asarray(uniq))
+        assert int(num2) == int(num)
+        # the inverse of a sorted unique stream is the identity on the
+        # valid prefix
+        n = int(num)
+        np.testing.assert_array_equal(np.asarray(inv2[:n]), np.arange(n))
+
 
 class TestPlacementPlanner:
     def _t(self, name, vocab, dim):
@@ -64,6 +82,59 @@ class TestPlacementPlanner:
     def test_single_shard_replicates(self):
         plan = plan_placement([self._t("x", 10 ** 9, 64)], num_shards=1)
         assert plan["x"].strategy == "replicate"
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(min_value=100,
+                                          max_value=800_000_000),
+                              st.sampled_from([8, 16, 32, 64, 128])),
+                    min_size=1, max_size=12),
+           st.sampled_from([1, 2, 4, 8, 16]))
+    def test_plan_invariants(self, sizes, num_shards):
+        """Full coverage, valid strategies, in-range shard owners, and
+        shard-aligned row-shard padding for any table set."""
+        tables = [self._t(f"t{i}", v, d) for i, (v, d) in enumerate(sizes)]
+        plan = plan_placement(tables, num_shards)
+        assert set(plan) == {t.name for t in tables}      # full coverage
+        for t in tables:
+            p = plan[t.name]
+            assert p.strategy in ("replicate", "row", "table", "column")
+            if p.strategy == "table":
+                assert 0 <= p.shard < num_shards          # no overlap: one
+            if p.strategy == "row":                       # owner per table
+                assert p.padded_vocab >= t.vocab_size
+                assert p.padded_vocab % num_shards == 0   # shard-aligned
+            if num_shards == 1:
+                assert p.strategy == "replicate"
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.integers(min_value=64, max_value=4096),
+                              st.sampled_from([8, 16, 32])),
+                    min_size=1, max_size=8),
+           st.sampled_from([2, 4, 8]))
+    def test_group_layout_invariants(self, sizes, num_shards):
+        """Grouped storage: slot ranges are disjoint, cover every table
+        row, and every group is padded shard-aligned."""
+        import repro.embeddings.sharding as ESH
+        saved = ESH.REPLICATE_BYTES, ESH.TABLE_SHARD_BYTES
+        ESH.REPLICATE_BYTES = ESH.TABLE_SHARD_BYTES = 0
+        try:
+            tables = [self._t(f"t{i}", v, d)
+                      for i, (v, d) in enumerate(sizes)]
+            coll = EmbeddingCollection(tables, num_shards)
+            seen = set()
+            for dim, g in coll.groups.items():
+                assert g.total_rows % num_shards == 0     # shard-aligned
+                spans = sorted((s.offset, s.offset + s.spec.vocab_size,
+                                s.spec.name) for s in g.slots)
+                prev_end = 0
+                for a, b, name in spans:
+                    assert a == prev_end                  # no gap/overlap
+                    prev_end = b
+                    seen.add(name)
+                assert prev_end <= g.total_rows           # fits the pad
+            assert seen == {t.name for t in tables}       # full coverage
+        finally:
+            ESH.REPLICATE_BYTES, ESH.TABLE_SHARD_BYTES = saved
 
 
 class TestEngineLocal:
@@ -127,3 +198,118 @@ class TestEngineLocal:
                                 feats)
         for k in out:
             np.testing.assert_allclose(out[k], want[k], rtol=1e-6)
+
+
+class TestFusedExecutor:
+    """The pipeline-v2 fused descriptor layout + executor facade."""
+
+    def _setup(self, key):
+        specs = [
+            EmbeddingTableConfig("a", 120, 8, 4.0, 4, "sum"),
+            EmbeddingTableConfig("b", 500, 8, 2.0, 2, "mean"),
+            EmbeddingTableConfig("c", 60, 16, 1.0, 1, "sum"),
+            EmbeddingTableConfig("d", 90, 16, 4.0, 4, "mean"),
+        ]
+        coll = EmbeddingCollection(specs, num_shards=1, fused_storage=True)
+        params = coll.init(key)
+        feats = {
+            "a": jax.random.randint(key, (5, 4), -1, 120, jnp.int32),
+            "b": jax.random.randint(jax.random.fold_in(key, 1), (5, 2), -1,
+                                    500, jnp.int32),
+            "c": jax.random.randint(jax.random.fold_in(key, 2), (5, 1), 0,
+                                    60, jnp.int32),
+            "d": jax.random.randint(jax.random.fold_in(key, 3), (5, 4), -1,
+                                    90, jnp.int32),
+        }
+        return specs, coll, params, feats
+
+    def test_fused_storage_layout(self, rng):
+        specs, coll, params, feats = self._setup(rng)
+        # per-width local row spaces instead of per-table arrays
+        assert set(params) == {"local_d8", "local_d16"}
+        # table_view reconstructs every table exactly
+        mats = materialize_tables(coll, params)
+        assert set(mats) == {"a", "b", "c", "d"}
+        assert mats["a"].shape == (120, 8)
+        assert mats["d"].shape == (90, 16)
+
+    def test_fused_matches_oracle(self, rng):
+        specs, coll, params, feats = self._setup(rng)
+        out = coll.lookup(params, feats, fused=True)
+        want = lookup_reference(materialize_tables(coll, params), specs,
+                                feats)
+        for k in want:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(want[k]), rtol=1e-6,
+                                       atol=1e-7)
+
+    def test_fused_kernel_matches_xla(self, rng):
+        specs, coll, params, feats = self._setup(rng)
+        k = coll.lookup(params, feats, fused=True, use_kernel=True)
+        x = coll.lookup(params, feats, fused=True, use_kernel=False)
+        for name in x:
+            np.testing.assert_allclose(np.asarray(k[name]),
+                                       np.asarray(x[name]), rtol=1e-5,
+                                       atol=1e-6)
+
+    def test_fused_grads_match_legacy(self, rng):
+        """Autodiff through the fused path == through the per-table path
+        (same fused_storage params, legacy dataflow)."""
+        specs, coll, params, feats = self._setup(rng)
+
+        def loss(p, fused):
+            o = coll.lookup(p, feats, fused=fused)
+            return sum(jnp.sum(v ** 2) for v in o.values())
+
+        gf = jax.grad(lambda p: loss(p, True))(params)
+        gl = jax.grad(lambda p: loss(p, False))(params)
+        for k in gf:
+            np.testing.assert_allclose(np.asarray(gf[k]),
+                                       np.asarray(gl[k]), rtol=1e-5,
+                                       atol=1e-7)
+
+    def test_fused_kernel_grads_match(self, rng):
+        """The fused Pallas custom_vjp (Flush-unit scatter) agrees with
+        autodiff of the XLA path at the collection level."""
+        specs, coll, params, feats = self._setup(rng)
+
+        def loss(p, use_kernel):
+            o = coll.lookup(p, feats, fused=True, use_kernel=use_kernel)
+            return sum(jnp.sum(v ** 2) for v in o.values())
+
+        gk = jax.grad(lambda p: loss(p, True))(params)
+        gx = jax.grad(lambda p: loss(p, False))(params)
+        for k in gk:
+            np.testing.assert_allclose(np.asarray(gk[k]),
+                                       np.asarray(gx[k]), rtol=1e-5,
+                                       atol=1e-6)
+
+    def test_executor_facade_and_cache_state(self, rng):
+        specs, coll, params, feats = self._setup(rng)
+        cache = HotIdCache(capacity=8)
+        ex = PipelinedEmbeddingExecutor(coll, cache=cache)
+        out = ex.lookup(params, feats)
+        want = lookup_reference(materialize_tables(coll, params), specs,
+                                feats)
+        for k in want:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(want[k]), rtol=1e-6,
+                                       atol=1e-7)
+        # LFU bookkeeping is host-side and does not disturb the lookup
+        ex.step(params, feats)
+        out2 = ex.lookup(params, feats)
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(out2[k]))
+
+    def test_hot_id_cache_lfu(self):
+        cache = HotIdCache(capacity=2, decay=0.5)
+        cache.observe("g", np.asarray([1, 1, 1, 2, 2, 3, -1]))
+        table = jnp.arange(40, dtype=jnp.float32).reshape(10, 4)
+        cache.refresh("g", table)
+        ids, rows = cache.entries("g")
+        kept = sorted(int(x) for x in np.asarray(ids)
+                      if x != np.iinfo(np.int32).max)
+        assert kept == [1, 2]                      # top-2 by frequency
+        np.testing.assert_allclose(np.asarray(rows[0]),
+                                   np.asarray(table[kept[0]]))

@@ -1,0 +1,68 @@
+"""Regression tripwire for the ServeEngine legacy-kwarg shim.
+
+PR 1 redesigned ``ServeEngine`` around the ``SliceSpec`` value object and
+kept ``slots/max_len/prompt_len/greedy`` kwargs as a DeprecationWarning
+shim scheduled for removal (~PR 4).  These tests pin the shim's contract —
+the warning fires AND the resulting engine is indistinguishable from one
+built with the equivalent ``SliceSpec`` — so the removal PR trips here and
+must update call sites deliberately instead of silently changing behavior.
+"""
+import warnings
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.models import api
+from repro.serve.engine import ServeEngine, SliceSpec
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = registry.get_reduced("olmo-1b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestLegacyKwargShim:
+    def test_deprecation_warning_fires(self, small_model):
+        cfg, params = small_model
+        with pytest.warns(DeprecationWarning,
+                          match="deprecated; pass a SliceSpec"):
+            ServeEngine(cfg, params, slots=2, max_len=64, prompt_len=16)
+
+    def test_each_legacy_kwarg_warns(self, small_model):
+        cfg, params = small_model
+        for kw in (dict(slots=2), dict(max_len=64), dict(prompt_len=16),
+                   dict(greedy=False)):
+            with pytest.warns(DeprecationWarning):
+                ServeEngine(cfg, params, **kw)
+
+    def test_behavior_matches_slicespec(self, small_model):
+        """The shim must produce exactly the engine a SliceSpec produces."""
+        cfg, params = small_model
+        with pytest.warns(DeprecationWarning):
+            legacy = ServeEngine(cfg, params, slots=2, max_len=64,
+                                 prompt_len=16, greedy=True)
+        spec = SliceSpec(slots=2, max_len=64, prompt_len=16, greedy=True)
+        modern = ServeEngine(cfg, params, spec)
+        assert legacy.spec == modern.spec == spec
+        for attr in ("slots", "max_len", "prompt_len", "greedy"):
+            assert getattr(legacy, attr) == getattr(modern, attr)
+
+    def test_legacy_kwargs_override_given_spec(self, small_model):
+        """Explicit legacy kwargs layer on top of a passed spec (the
+        dataclasses.replace contract of the shim)."""
+        cfg, params = small_model
+        base = SliceSpec(slots=4, max_len=128, prompt_len=32)
+        with pytest.warns(DeprecationWarning):
+            eng = ServeEngine(cfg, params, base, slots=2)
+        assert eng.spec == SliceSpec(slots=2, max_len=128, prompt_len=32)
+
+    def test_slicespec_path_is_warning_free(self, small_model):
+        cfg, params = small_model
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            eng = ServeEngine(cfg, params, SliceSpec(slots=1, max_len=32,
+                                                     prompt_len=8))
+        assert eng.spec.slots == 1
