@@ -1,6 +1,9 @@
 """Serve a small LM with batched requests through a cluster serve session.
 
     PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --requests 8
+
+``--chunk`` picks the multi-step decode width (tokens per device dispatch);
+1 is the per-token path with identical greedy output.
 """
 import argparse
 
@@ -19,6 +22,7 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = registry.get_reduced(args.arch)
@@ -28,7 +32,7 @@ def main():
     with sc.allocate((4, 4, 8)) as sl:
         session = sl.serve(cfg, params,
                            SliceSpec(slots=args.slots, max_len=128,
-                                     prompt_len=16))
+                                     prompt_len=16, chunk=args.chunk))
         rng = np.random.default_rng(0)
         for i in range(args.requests):
             prompt = rng.integers(0, cfg.vocab_size,

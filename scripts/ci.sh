@@ -27,14 +27,11 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== quickstart smoke (CPU) =="
     python examples/quickstart.py
 
-    echo "== cluster serve benchmark -> BENCH_cluster.json =="
-    python - <<'PY'
-import sys
-sys.path.insert(0, ".")
-from benchmarks import cluster_session
-for name, us, derived in cluster_session.run():
-    print(f"{name},{us:.1f},{derived}")
-PY
+    echo "== serve stage: fast-path benchmark -> BENCH_cluster.json =="
+    # before/after harness: per-token vs chunked decode on the PR-1 config;
+    # exits nonzero on the 1.5x-vs-PR-1 throughput gate or if chunked
+    # greedy outputs diverge from the per-token path
+    python benchmarks/cluster_session.py --quick
 
     echo "== sparsecore pipeline benchmark -> BENCH_sparsecore.json =="
     python benchmarks/sparsecore_pipeline.py

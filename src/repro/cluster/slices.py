@@ -178,7 +178,9 @@ class ServeSession(SliceSession):
             # read standard stats without special-casing
             return {"aborted": True, "requests_done": 0, "tokens": 0,
                     "wall_s": 0.0, "tokens_per_s": 0.0, "mean_ttft_s": 0.0,
-                    "decode_steps": 0,
+                    "p50_ttft_s": 0.0, "p95_ttft_s": 0.0,
+                    "decode_steps": 0, "chunk": self.engine.spec.chunk,
+                    "p50_chunk_s": 0.0, "p95_chunk_s": 0.0,
                     "interruptions": len(self.interruptions),
                     "reconfig_stall_s": self.stall_s}
         self._check_live()

@@ -1,3 +1,14 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Shared kernel-launch policy: ``None`` auto-detects by backend —
+    compile natively on TPU, fall back to interpret mode elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

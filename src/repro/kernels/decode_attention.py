@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: paged decode attention (single query per slot).
+
+The serving decode hot spot: every slot holds ONE fresh query token and a KV
+cache whose *valid* length differs per slot (continuous batching admits and
+retires requests independently).  A dense decode attention scans all
+``max_len`` cache rows for every slot; this kernel gathers only each slot's
+valid prefix — a per-slot ``seq_lens`` vector rides in scalar-prefetch SMEM
+and KV blocks entirely past a slot's length are skipped with ``pl.when``, so
+a freshly admitted slot costs ``ceil(len/bk)`` block reads no matter how long
+the compile-time cache envelope is.
+
+Semantics are shared with ``flash_attention``: flash-style online softmax
+over KV blocks, GQA by per-head index mapping (no KV duplication), sliding
+windows, and gemma2-style logit soft-capping.  ``ref.paged_decode_attention_
+ref`` is the dense XLA oracle and serving fallback for non-TPU backends.
+
+Tiling: grid (B, H, nk); the single query row (1, d) stays resident; k/v
+blocks (bk, d) stream through VMEM; m/l/acc live in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, window: Optional[int],
+                   softcap: Optional[float], bk: int, nk: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sl = sl_ref[b]                                   # valid rows for slot b
+    k0 = j * bk
+    # block-level skip: anything in [k0, k0+bk) visible to the query row?
+    reachable = k0 < sl
+    if window is not None:
+        # query position is sl-1; the window keeps kv_pos > qpos - window
+        reachable = jnp.logical_and(
+            reachable, (sl - 1) - (k0 + bk - 1) < window)
+
+    @pl.when(reachable)
+    def _():
+        q = q_ref[0].astype(jnp.float32) * scale     # (1, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (1, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        allow = kpos < sl
+        if window is not None:
+            allow = jnp.logical_and(allow, (sl - 1) - kpos < window)
+        s = jnp.where(allow, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * allow
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v_ref.dtype), v_ref[0, :, 0],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel_call(
+        q: jax.Array, k: jax.Array, v: jax.Array, seq_lens: jax.Array, *,
+        window: Optional[int] = None,
+        softcap: Optional[float] = None,
+        scale: Optional[float] = None,
+        bk: int = 128,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """q (B, H, d); k, v (B, S, KH, d); seq_lens (B,) int32 -> (B, H, d).
+
+    ``seq_lens[b]`` counts the valid cache rows of slot b INCLUDING the
+    just-written current token (the query attends to kv_pos < seq_lens[b]).
+    GQA handled by per-head index mapping (H % KH == 0).  The cache length S
+    is padded to a multiple of ``bk``; padded rows sit past every seq_len and
+    are never touched.
+    """
+    B, H, d = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = d ** -0.5
+    bk = min(bk, S)
+    if S % bk:
+        pad = bk - S % bk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    nk = S // bk
+    seq_lens = seq_lens.astype(jnp.int32)
+
+    kern = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap,
+        bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, h, j, sl: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, j, sl: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, j, sl: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, h, j, sl: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
+        interpret=resolve_interpret(interpret),
+    )
+    return fn(seq_lens, q, k, v)

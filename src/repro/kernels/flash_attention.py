@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -87,11 +89,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     softcap: Optional[float] = None,
                     scale: Optional[float] = None,
                     bq: int = 128, bk: int = 256,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q (B, H, T, d); k, v (B, KH, S, d) -> (B, H, T, d).
 
     GQA handled by per-head index mapping (H % KH == 0); no KV duplication.
+    ``interpret=None`` auto-detects: native compile on TPU, interpret mode
+    on host backends (kernels.resolve_interpret).
     """
+    interpret = resolve_interpret(interpret)
     B, H, T, d = q.shape
     KH, S = k.shape[1], k.shape[2]
     G = H // KH

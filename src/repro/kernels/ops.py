@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as REF
+from repro.kernels import resolve_interpret
+from repro.kernels.decode_attention import paged_decode_attention_kernel_call
 from repro.kernels.embedding_grad import (fused_scatter_kernel_call,
                                           scatter_kernel_call)
 from repro.kernels.embedding_lookup import (fused_lookup_kernel_call,
@@ -23,7 +25,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return resolve_interpret(None)
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -90,4 +92,30 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     scale: Optional[float] = None,
                     bq: int = 128, bk: int = 256):
     return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
-                  scale=scale, bq=bq, bk=bk, interpret=_interpret())
+                  scale=scale, bq=bq, bk=bk, interpret=None)
+
+
+def paged_decode_attention(q, k, v, seq_lens, *,
+                           window=None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           bk: int = 128,
+                           impl: str = "auto"):
+    """Serving decode attention dispatcher.
+
+    q (B, H, d); k, v (B, S, KH, d); seq_lens (B,) valid rows per slot
+    -> (B, H, d).  ``impl``: "pallas" launches the paged kernel (native on
+    TPU, interpret elsewhere), "xla" the dense reference, "auto" picks the
+    kernel only on TPU — interpret-mode Pallas is far too slow for a decode
+    hot loop, and the dense XLA form is what host backends lower well.
+    The Pallas path needs a STATIC window (block skipping); a traced window
+    (scanned per-layer schedule) falls back to XLA.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas" and (window is None or isinstance(window, int)):
+        return paged_decode_attention_kernel_call(
+            q, k, v, seq_lens, window=window, softcap=softcap, scale=scale,
+            bk=bk, interpret=None)
+    return REF.paged_decode_attention_ref(
+        q, k, v, seq_lens, window=window, softcap=softcap, scale=scale)

@@ -70,6 +70,42 @@ def fused_scatter_ref(gout: jax.Array, rows: jax.Array, slots: jax.Array,
         g_desc.reshape(-1, Dm))
 
 
+def paged_decode_attention_ref(q, k, v, seq_lens, *,
+                               window=None,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Dense oracle (and non-TPU serving fallback) for the paged decode
+    attention kernel.
+
+    q (B, H, d); k, v (B, S, KH, d); seq_lens (B,) int32 valid rows per slot
+    (query attends kv_pos < seq_lens[b]; query position is seq_lens[b]-1)
+    -> (B, H, d).  ``window`` may be a python int, None, or a traced scalar
+    (per-layer window schedules are scanned as data).  Slots with
+    seq_len == 0 return zeros, matching the kernel.
+    """
+    B, H, d = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = d ** -0.5
+    qr = q.reshape(B, KH, G, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(S, dtype=jnp.int32)[None, :]          # (1, S)
+    lens = seq_lens.astype(jnp.int32)[:, None]              # (B, 1)
+    allow = kpos < lens
+    if window is not None:
+        allow &= (lens - 1) - kpos < jnp.asarray(window, jnp.int32)
+    allow_b = allow[:, None, None, :]                       # (B, 1, 1, S)
+    s = jnp.where(allow_b, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * allow_b
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgs,bskd->bkgd", p / l, v.astype(jnp.float32))
+    return o.reshape(B, H, d).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,

@@ -1,6 +1,9 @@
-"""CLI serving driver (cluster session API).
+"""CLI serving driver (cluster session API, serve fast path).
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 8
+
+``--chunk`` sets the multi-step decode width (tokens advanced per device
+dispatch); ``--chunk 1`` is the per-token path with identical greedy output.
 """
 import argparse
 import json
@@ -22,6 +25,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per device dispatch (1 = per-token)")
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature sampling instead of greedy decode")
     ap.add_argument("--slice", dest="slice_chips", type=int, default=256)
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
@@ -32,7 +39,9 @@ def main():
     with sc.allocate(args.slice_chips) as sl:
         session = sl.serve(cfg, params,
                            SliceSpec(slots=args.slots, max_len=args.max_len,
-                                     prompt_len=args.prompt_len))
+                                     prompt_len=args.prompt_len,
+                                     greedy=not args.sample,
+                                     chunk=args.chunk))
         rng = np.random.default_rng(0)
         for _ in range(args.requests):
             session.submit(rng.integers(0, cfg.vocab_size, size=8),

@@ -62,6 +62,46 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return TF.init_cache(cfg, batch, max_len)
 
 
+# -- serve fast path --------------------------------------------------------
+# Incremental continuous batching: admit ONE request by prefilling ONLY its
+# slot (prefill_slot), then advance every live slot `num_steps` tokens per
+# dispatch with per-slot cache lengths (decode_n).  The whisper enc-dec stack
+# has its own cache layout and stays on the legacy full-batch path.
+
+
+def prefill_slot(cfg: ModelConfig, p, batch, cache, slot,
+                 ctx: ParallelContext = LOCAL, *,
+                 max_len: Optional[int] = None, **kw):
+    """Prefill newly admitted request(s) and write their KV/state rows into
+    batch rows ``slot`` of the live ``cache`` — active slots are never
+    recomputed.  ``batch`` holds n prompts and ``slot`` n slot indices (a
+    scalar admits one); a whole admission wave is one dispatch.
+    Returns (last_logits (n, V), cache)."""
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "incremental admission is transformer-cache only; serve whisper "
+            "through the legacy full-batch path")
+    logits, slot_cache = TF.prefill(cfg, p, batch, ctx, max_len=max_len,
+                                    **kw)
+    return logits, TF.cache_insert(cache, slot_cache, slot)
+
+
+def cache_insert(cache, slot_cache, slot):
+    return TF.cache_insert(cache, slot_cache, slot)
+
+
+def decode_n(cfg: ModelConfig, p, cache, tokens, seq_lens, budget,
+             ctx: ParallelContext = LOCAL, *, num_steps: int, **kw):
+    """Multi-step on-device decode with per-slot lengths/budgets; see
+    transformer.decode_n."""
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "decode_n is transformer-cache only; serve whisper through the "
+            "legacy per-token path")
+    return TF.decode_n(cfg, p, cache, tokens, seq_lens, budget, ctx,
+                       num_steps=num_steps, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Batches: concrete (smoke/tests) and spec-only (dry-run)
 # ---------------------------------------------------------------------------

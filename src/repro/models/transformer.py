@@ -511,6 +511,49 @@ def prefill(cfg: ModelConfig, p, batch: Dict[str, Any],
 # Decode step
 # ---------------------------------------------------------------------------
 
+def _decode_layer(cfg: ModelConfig, lp, win, x, kc, vc, sst, scv, ctx, *,
+                  attn_fn, bspec, moe_cf=None, active=None):
+    """Shared per-layer decode body for the legacy and paged decode paths.
+
+    ``attn_fn(lp, h, kc, vc, win) -> (h, kc, vc)`` supplies the path's
+    attention (shared-position dense vs per-slot paged); ``active`` (B,)
+    bool, when given, freezes the recurrent state of done slots (paged
+    done-masking).  Returns (x, (kc, vc, state, conv))."""
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    state = conv = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, kc, vc = attn_fn(lp, h, kc, vc, win)
+    elif cfg.family == "ssm":
+        o, state, conv = SSM.ssd_step(cfg, lp["ssm"], h[:, 0], sst, scv)
+        h = o[:, None, :]
+    else:  # hybrid
+        ha, kc, vc = attn_fn(lp, h, kc, vc, win)
+        o, state, conv = SSM.ssd_step(cfg, lp["ssm"], h[:, 0], sst, scv)
+        hs = o[:, None, :]
+        h = 0.5 * (ha * (1.0 + lp["alpha_attn"].astype(ha.dtype))
+                   + hs * (1.0 + lp["alpha_ssm"].astype(ha.dtype)))
+    if state is not None and active is not None:
+        B = x.shape[0]
+        keep = active.reshape((B,) + (1,) * (state.ndim - 1))
+        state = jnp.where(keep, state, sst)
+        conv = jnp.where(active.reshape((B,) + (1,) * (conv.ndim - 1)),
+                         conv, scv)
+    if cfg.post_norm:
+        h = L.apply_norm(cfg, lp["post_ln1"], h)
+    x = x + h
+    if cfg.family != "ssm":
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        if cfg.family == "moe":
+            h, _ = _ffn_part(cfg, lp, h, ctx, decode=True,
+                             batch_spec=bspec, seq_spec=None, moe_cf=moe_cf)
+        else:
+            h = L.mlp_apply(cfg, lp["mlp"], h)
+        if cfg.post_norm:
+            h = L.apply_norm(cfg, lp["post_ln2"], h)
+        x = x + h
+    return x, (kc, vc, state, conv)
+
+
 def decode_step(cfg: ModelConfig, p, cache: Cache, tokens,
                 ctx: ParallelContext = LOCAL, *, kv_chunk: int = 2048,
                 moe_cf=None):
@@ -556,34 +599,9 @@ def decode_step(cfg: ModelConfig, p, cache: Cache, tokens,
 
     def body(x, xs):
         lp, win, kc, vc, sst, scv = xs
-        h = L.apply_norm(cfg, lp["ln1"], x)
-        state = conv = None
-        if cfg.family in ("dense", "moe", "vlm"):
-            h, kc, vc = attn_decode(lp, h, kc, vc, win)
-        elif cfg.family == "ssm":
-            o, state, conv = SSM.ssd_step(cfg, lp["ssm"], h[:, 0], sst, scv)
-            h = o[:, None, :]
-        else:  # hybrid
-            ha, kc, vc = attn_decode(lp, h, kc, vc, win)
-            o, state, conv = SSM.ssd_step(cfg, lp["ssm"], h[:, 0], sst, scv)
-            hs = o[:, None, :]
-            h = 0.5 * (ha * (1.0 + lp["alpha_attn"].astype(ha.dtype))
-                       + hs * (1.0 + lp["alpha_ssm"].astype(ha.dtype)))
-        if cfg.post_norm:
-            h = L.apply_norm(cfg, lp["post_ln1"], h)
-        x = x + h
-        if cfg.family != "ssm":
-            h = L.apply_norm(cfg, lp["ln2"], x)
-            if cfg.family == "moe":
-                h, _ = _ffn_part(cfg, lp, h, ctx, decode=True,
-                                 batch_spec=bspec, seq_spec=None,
-                                 moe_cf=moe_cf)
-            else:
-                h = L.mlp_apply(cfg, lp["mlp"], h)
-            if cfg.post_norm:
-                h = L.apply_norm(cfg, lp["post_ln2"], h)
-            x = x + h
-        return x, (kc, vc, state, conv)
+        return _decode_layer(cfg, lp, win, x, kc, vc, sst, scv, ctx,
+                             attn_fn=attn_decode, bspec=bspec,
+                             moe_cf=moe_cf)
 
     dummy = jnp.zeros((num_moe_layers(cfg) if cfg.family == "moe"
                        else cfg.num_layers,), jnp.float32)
@@ -606,3 +624,223 @@ def decode_step(cfg: ModelConfig, p, cache: Cache, tokens,
     x = L.apply_norm(cfg, p["final_norm"], x)
     logits = unembed(cfg, p, x)
     return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Serve fast path: per-slot cache insertion + paged multi-step decode
+# ---------------------------------------------------------------------------
+# Continuous batching keeps ONE batch-wide cache alive across admissions;
+# slots differ in valid length.  `cache_insert` writes a freshly prefilled
+# (batch=1) slot cache into its batch row; `decode_step_paged` advances every
+# slot one token at ITS OWN position (per-slot seq_lens replaces the shared
+# cache.pos); `decode_n` scans that step on-device so the host syncs once per
+# chunk instead of once per token.
+
+
+def cache_insert(cache: Cache, slot_cache: Cache, slot) -> Cache:
+    """Write the (batch=n) ``slot_cache`` into batch rows ``slot`` of
+    ``cache``.  ``slot`` is a scalar or an (n,) vector of slot indices (a
+    whole admission wave lands in ONE dispatch); scalars/traced values both
+    work, so one jitted admission program serves every slot."""
+    slots = jnp.atleast_1d(jnp.asarray(slot, jnp.int32))
+
+    def ins(dst, src, axis):
+        src = src.astype(dst.dtype)
+        if axis == 0:
+            return dst.at[slots].set(src)
+        return dst.at[:, slots].set(src)
+
+    new = Cache(pos=jnp.maximum(cache.pos, slot_cache.pos))
+    if cache.k is not None:
+        new.k = ins(cache.k, slot_cache.k, 1)
+        new.v = ins(cache.v, slot_cache.v, 1)
+    if cache.ssm is not None:
+        new.ssm = ins(cache.ssm, slot_cache.ssm, 1)
+        new.conv = ins(cache.conv, slot_cache.conv, 1)
+    if cache.prefix_k is not None:
+        new.prefix_k = [ins(d, s, 0) for d, s in
+                        zip(cache.prefix_k, slot_cache.prefix_k)]
+        new.prefix_v = [ins(d, s, 0) for d, s in
+                        zip(cache.prefix_v, slot_cache.prefix_v)]
+    return new
+
+
+def _decode_attn_impl(ctx: ParallelContext) -> str:
+    return {"auto": "auto", "paged": "pallas", "dense": "xla"}[
+        getattr(ctx, "decode_attn", "auto")]
+
+
+def decode_step_paged(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens,
+                      active, ctx: ParallelContext = LOCAL, *, moe_cf=None):
+    """One decode step with PER-SLOT cache lengths (continuous batching).
+
+    tokens (B,) int32 — previous token per slot;
+    seq_lens (B,) int32 — valid cached tokens per slot (the new token is
+    written at this row, then attended);
+    active (B,) bool — slots past their budget keep their cache, state, and
+    seq_len frozen (their lane still computes, output is discarded upstream).
+
+    Returns (logits (B, V), cache, seq_lens + active).  Attention runs
+    through ``ops.paged_decode_attention`` — the Pallas paged kernel on TPU,
+    the dense XLA reference elsewhere (ctx.decode_attn overrides).
+    """
+    from repro.kernels import ops as OPS
+
+    a = cfg.attention
+    B = tokens.shape[0]
+    seq_lens = seq_lens.astype(jnp.int32)
+    act_i = active.astype(jnp.int32)
+    x = embed_tokens(cfg, p, tokens[:, None])            # (B, 1, D)
+    q_pos = hint(seq_lens[:, None], "batch", None)       # per-slot positions
+    bspec = (ctx.batch_axes or None) if ctx.has_mesh else None
+    impl = _decode_attn_impl(ctx)
+    kv_block = getattr(ctx, "decode_kv_block", 128)
+
+    def attn_paged(lp, h, kc, vc, win):
+        q, k, v = L.attention_qkv(lp["attn"], h, a, q_pos)
+        S = kc.shape[1]
+        # per-slot KV write at each slot's own next row.  Frozen slots write
+        # a garbage row one past their (frozen) valid length — never read,
+        # and overwritten by the next admission's cache_insert.
+        idx = jnp.minimum(seq_lens, S - 1)
+
+        def wr(dst_b, new_b, i):
+            return jax.lax.dynamic_update_slice(
+                dst_b, new_b.astype(dst_b.dtype), (i, 0, 0))
+
+        kc = jax.vmap(wr)(kc, k, idx)
+        vc = jax.vmap(wr)(vc, v, idx)
+        lens_now = jnp.minimum(seq_lens + 1, S)
+        o = OPS.paged_decode_attention(
+            q[:, 0], kc, vc, lens_now, window=win,
+            softcap=a.logit_softcap, scale=a.attn_scale, bk=kv_block,
+            impl=impl)
+        return L.attention_out(lp["attn"], o[:, None]), kc, vc
+
+    new_prefix_k, new_prefix_v = [], []
+    for i, blk in enumerate(p.get("dense_prefix", [])):
+        h = L.apply_norm(cfg, blk["ln1"], x)
+        h, kc, vc = attn_paged(blk, h, cache.prefix_k[i], cache.prefix_v[i],
+                               None)
+        new_prefix_k.append(kc)
+        new_prefix_v.append(vc)
+        x = x + h
+        h = L.apply_norm(cfg, blk["ln2"], x)
+        x = x + L.mlp_apply(cfg, blk["mlp"], h)
+
+    windows = jnp.asarray(window_schedule(cfg)[
+        (cfg.moe.dense_layers if cfg.family == "moe" and cfg.moe else 0):])
+
+    def body(x, xs):
+        lp, win, kc, vc, sst, scv = xs
+        return _decode_layer(cfg, lp, win, x, kc, vc, sst, scv, ctx,
+                             attn_fn=attn_paged, bspec=bspec,
+                             moe_cf=moe_cf, active=active)
+
+    dummy = jnp.zeros((num_moe_layers(cfg) if cfg.family == "moe"
+                       else cfg.num_layers,), jnp.float32)
+    xs = (p["layers"],
+          cache.k if cache.k is not None else dummy,
+          cache.v if cache.v is not None else dummy,
+          cache.ssm if cache.ssm is not None else dummy,
+          cache.conv if cache.conv is not None else dummy)
+    if can_qchunk(cfg):
+        # regroup the stack so every scan position has a STATIC window
+        # (the prefill/forward qchunked trick) — with a static window the
+        # attention dispatcher can launch the Pallas paged kernel; a traced
+        # window would force the dense XLA fallback on every layer.
+        g = attn_group_size(cfg)
+        xs_g = jax.tree.map(
+            lambda t: t.reshape((t.shape[0] // g, g) + t.shape[1:]), xs)
+
+        def gbody(x, xs_):
+            lp_g, kcg, vcg, sstg, scvg = xs_
+            acc = None
+            for idx in range(g):
+                lp = jax.tree.map(lambda t: t[idx], lp_g)
+                win = static_window_for(cfg, idx, g)
+                x, ys = body(x, (lp, win, kcg[idx], vcg[idx],
+                                 sstg[idx], scvg[idx]))
+                ys = jax.tree.map(lambda t: t[None] if t is not None else t,
+                                  ys, is_leaf=lambda t: t is None)
+                acc = ys if acc is None else jax.tree.map(
+                    lambda a_, b_: (jnp.concatenate([a_, b_])
+                                    if a_ is not None else None),
+                    acc, ys, is_leaf=lambda t: t is None)
+            return x, acc
+
+        x, grouped = jax.lax.scan(gbody, x, xs_g)
+        ks, vs, states, convs = jax.tree.map(
+            lambda t: (t.reshape((-1,) + t.shape[2:])
+                       if t is not None else None),
+            grouped, is_leaf=lambda t: t is None)
+    else:
+        x, (ks, vs, states, convs) = jax.lax.scan(
+            body, x, (xs[0], windows) + xs[1:])
+
+    new_cache = Cache(
+        k=ks if cache.k is not None else None,
+        v=vs if cache.v is not None else None,
+        ssm=states if cache.ssm is not None else None,
+        conv=convs if cache.conv is not None else None,
+        prefix_k=new_prefix_k or None,
+        prefix_v=new_prefix_v or None,
+        pos=jnp.maximum(cache.pos, jnp.max(seq_lens + act_i)),
+    )
+    x = L.apply_norm(cfg, p["final_norm"], x)
+    logits = unembed(cfg, p, x)
+    return logits[:, 0], new_cache, seq_lens + act_i
+
+
+def decode_n(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens, budget,
+             ctx: ParallelContext = LOCAL, *, num_steps: int,
+             greedy: bool = True, key=None, temperature: float = 1.0,
+             salt=None, moe_cf=None):
+    """Advance all slots up to ``num_steps`` tokens in ONE dispatch.
+
+    A ``lax.scan`` over ``decode_step_paged`` with on-device token selection
+    (argmax, or temperature sampling when ``greedy=False``) and per-slot
+    done-masking: slot b decodes exactly ``budget[b]`` tokens, then its
+    cache/seq_len freeze and its emitted token repeats.  The host syncs once
+    per chunk instead of once per token.
+
+    Chunking is numerics-neutral: the scan body is the same program the
+    per-token path runs, so greedy outputs are bitwise identical for any
+    ``num_steps`` split of the same (tokens, seq_lens, budget) trajectory.
+    (Across a serving session, MoE capacity coupling can still observe
+    admission timing — see serve/engine.py.)  Sampling keys are folded per
+    (salt, position) —
+    ``salt`` (B,) int32 is a per-request value (the engine passes the
+    request id; default: the slot index), constant for a request's lifetime
+    — so sampled outputs are chunk-invariant AND decorrelated across slots
+    and across requests reusing a slot.
+
+    Returns (toks (num_steps, B) int32, cache, seq_lens, last_tokens).
+    """
+    budget = jnp.asarray(budget, jnp.int32)
+    if not greedy and key is None:
+        raise ValueError("sampling decode (greedy=False) needs a PRNG key")
+    salt = (jnp.asarray(salt, jnp.int32) if salt is not None
+            else jnp.arange(budget.shape[0], dtype=jnp.int32))
+
+    def select(logits, lens):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lg = logits / jnp.asarray(max(temperature, 1e-6), logits.dtype)
+        keys = jax.vmap(lambda b, s: jax.random.fold_in(
+            jax.random.fold_in(key, b), s))(salt, lens)
+        return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+
+    def step(carry, _):
+        cache, toks, lens, produced = carry
+        active = produced < budget
+        logits, cache, lens = decode_step_paged(
+            cfg, p, cache, toks, lens, active, ctx, moe_cf=moe_cf)
+        nxt = jnp.where(active, select(logits, lens), toks)
+        return (cache, nxt, lens, produced + active.astype(jnp.int32)), nxt
+
+    init = (cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(seq_lens, jnp.int32), jnp.zeros_like(budget))
+    (cache, last, seq_lens, _), toks = jax.lax.scan(
+        step, init, None, length=num_steps)
+    return toks, cache, seq_lens, last

@@ -34,6 +34,12 @@ class ParallelContext:
     # descriptor-stream launch and software-pipeline the per-group id/vector
     # exchanges (False = legacy one-launch-per-group dataflow)
     emb_pipeline: bool = True
+    # serve fast path (§serve): decode attention backend — "auto" picks the
+    # Pallas paged kernel on TPU and the dense XLA reference elsewhere;
+    # "paged"/"dense" force one side.  decode_kv_block is the paged kernel's
+    # KV block size (rows streamed per VMEM tile).
+    decode_attn: str = "auto"
+    decode_kv_block: int = 128
 
     def axis_size(self, name: Optional[str]) -> int:
         if name is None or self.mesh is None:

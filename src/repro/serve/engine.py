@@ -1,20 +1,43 @@
-"""Batched serving engine: continuous prefill + decode over a request queue.
+"""Batched serving engine: incremental continuous batching + chunked decode.
 
 Production-shaped but container-sized: requests arrive with prompts, get
-batched into fixed-size decode slots (static shapes for jit), prefill fills
-the KV cache per slot, and a decode loop advances all active slots one token
-per step, retiring finished requests and admitting queued ones.
+batched into fixed-size decode slots (static shapes for jit), and a decode
+loop advances all active slots, retiring finished requests and admitting
+queued ones.
 
-Batching discipline: one prefill program (padded prompt length) + one decode
-program (full slot batch), both jit'd once — the static-shape serving pattern
-TPU serving stacks use.
+The fast path (every transformer-cache family):
+  * **Incremental admission** — admitting a request prefills ONLY its slot
+    (``api.prefill_slot``: a batch-1 prefill whose KV/state rows are written
+    into the live batch cache), so admitting request k+1 never recomputes
+    request k.  Per-slot valid lengths live in a device-resident ``seq_lens``
+    vector instead of the cache's shared scalar position.
+  * **Paged decode attention** — each step gathers only a slot's valid cache
+    prefix (``kernels/decode_attention``: Pallas paged kernel on TPU, dense
+    XLA reference elsewhere) instead of scanning the full ``max_len`` dense
+    cache.
+  * **Multi-step on-device decode** — ``api.decode_n`` scans ``chunk`` steps
+    per dispatch with on-device argmax/sampling and per-slot done-masking,
+    so the device→host sync happens once per chunk, not once per token.
+    Chunking is numerics-neutral: greedy outputs are bitwise identical for
+    any chunk size (the property benchmarks/cluster_session.py pins) for
+    every family whose per-token compute is batch-lane independent.  The
+    one caveat is MoE capacity coupling: admission lands on chunk
+    boundaries, so chunk size can shift WHEN a freed slot's lane flips from
+    a frozen repeat-token to a fresh request, and a saturated expert's
+    token-drop choice sees those lane contents (identical admission
+    schedules — e.g. uniform budgets — are still bitwise stable).
+
+Batching discipline: one batch-1 prefill program + one chunked decode
+program, both jit'd once — the static-shape serving pattern TPU serving
+stacks use.  The whisper enc-dec family keeps the legacy full-batch
+prefill + per-token loop (its cache layout has no per-slot insert yet).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 import warnings
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,18 +55,27 @@ class SliceSpec:
     One value object instead of loose ``slots/max_len/prompt_len`` kwargs so
     slice handles (`repro.cluster`) can pass serving configuration around,
     hash it, and log it.
+
+    ``chunk`` is the serve fast-path knob: decode tokens advanced per device
+    dispatch (1 = legacy per-token host loop, same numerics).
     """
     slots: int = 4                  # decode batch width (static shape)
     max_len: int = 256              # KV-cache length per slot
     prompt_len: int = 32            # padded prefill length
     greedy: bool = True
+    chunk: int = 8                  # decode steps per dispatch
 
     def __post_init__(self):
         assert self.slots >= 1 and 0 < self.prompt_len <= self.max_len, self
+        assert self.chunk >= 1, self
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
+    """One serving request.  ``eq=False`` keeps identity semantics: a
+    generated ``__eq__`` would compare ``np.ndarray`` prompts elementwise,
+    so membership tests (``r in engine.active``) could raise on value-equal
+    requests."""
     rid: int
     prompt: np.ndarray              # (prompt_len,) int32
     max_new_tokens: int
@@ -52,6 +84,10 @@ class Request:
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 class ServeEngine:
@@ -80,22 +116,72 @@ class ServeEngine:
         self.prompt_len = spec.prompt_len
         self.ctx = ctx
         self.greedy = spec.greedy
-        self.queue: List[Request] = []
+        self.queue: List[Request] = []        # every request, for stats
+        self.pending: List[Request] = []      # submitted, not yet admitted
         self.active: List[Optional[Request]] = [None] * spec.slots
-
-        def _prefill(params, batch):
-            with activate(ctx):
-                return api.prefill(cfg, params, batch, ctx,
-                                   max_len=spec.max_len)
-
-        def _decode(params, cache, tokens):
-            with activate(ctx):
-                return api.decode_step(cfg, params, cache, tokens, ctx)
-
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode, donate_argnums=(1,))
         self.cache = None
-        self.last_tokens = np.zeros((spec.slots,), np.int32)
+        self.last_tokens = jnp.zeros((spec.slots,), jnp.int32)
+        self.seq_lens = jnp.zeros((spec.slots,), jnp.int32)
+        # per-slot sampling salt = rid of the request occupying the slot,
+        # so distinct requests reusing a slot draw decorrelated streams
+        self.sample_salt = jnp.zeros((spec.slots,), jnp.int32)
+        self.chunk_lat_s: List[float] = []
+        self._steps = 0
+        self._sample_key = jax.random.PRNGKey(spec.slots)
+        # whisper's enc-dec cache has no per-slot insert; it keeps the
+        # legacy full-batch prefill + per-token decode loop
+        self._fast = cfg.family != "audio"
+
+        if self._fast:
+            def _admit(params, cache, batch, slots_, rids, seq_lens, last,
+                       salt):
+                with activate(ctx):
+                    logits, cache = api.prefill_slot(
+                        cfg, params, batch, cache, slots_, ctx,
+                        max_len=spec.max_len)
+                # cached rows include the vision prefix for VLMs — the
+                # text-token count alone would mask out valid prompt KV
+                prefilled = (batch["tokens"].shape[1]
+                             + (cfg.vision_prefix or 0))
+                if spec.greedy:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                else:
+                    # first token follows the same (salt, position) key
+                    # scheme as decode_n; decode positions start at
+                    # prefilled+1, so the streams never collide
+                    keys = jax.vmap(lambda b: jax.random.fold_in(
+                        jax.random.fold_in(self._sample_key, b),
+                        prefilled))(rids)
+                    nxt = jax.vmap(jax.random.categorical)(
+                        keys, logits).astype(jnp.int32)
+                seq_lens = seq_lens.at[slots_].set(prefilled)
+                last = last.at[slots_].set(nxt)
+                salt = salt.at[slots_].set(rids)
+                return nxt, cache, seq_lens, last, salt
+
+            def _decode(params, cache, tokens, seq_lens, budget, key, salt,
+                        num_steps):
+                with activate(ctx):
+                    return api.decode_n(
+                        cfg, params, cache, tokens, seq_lens, budget, ctx,
+                        num_steps=num_steps, greedy=spec.greedy, key=key,
+                        salt=salt)
+
+            self._admit_fn = jax.jit(_admit, donate_argnums=(1,))
+            self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
+                                      static_argnums=(7,))
+        else:
+            def _prefill(params, batch):
+                with activate(ctx):
+                    return api.prefill(cfg, params, batch, ctx,
+                                       max_len=spec.max_len)
+
+            def _decode(params, cache, tokens):
+                with activate(ctx):
+                    return api.decode_step(cfg, params, cache, tokens, ctx)
+
+            self._prefill = jax.jit(_prefill)
+            self._decode = jax.jit(_decode, donate_argnums=(1,))
 
     # -- request lifecycle ----------------------------------------------------
 
@@ -103,22 +189,173 @@ class ServeEngine:
         r = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=max_new_tokens, t_submit=time.time())
         self.queue.append(r)
+        self.pending.append(r)
         return r
 
+    def _extra_inputs(self, n: int) -> Dict[str, Any]:
+        extra: Dict[str, Any] = {}
+        if self.cfg.family == "vlm":
+            extra["patches"] = jnp.zeros(
+                (n, self.cfg.vision_prefix, self.cfg.vision_dim),
+                jnp.float32)
+        return extra
+
     def _admit(self) -> bool:
-        """Fill empty slots from the queue; (re)prefill as one batch."""
-        waiting = [r for r in self.queue if not r.done
-                   and r not in self.active]
+        """Fill empty slots from the queue: the whole admission wave is ONE
+        batched prefill dispatch writing only the admitted slots' cache rows
+        — active slots are never recomputed.  The wave is padded to a fixed
+        width of ``slots`` (static shapes: exactly one compiled admission
+        program); padding rows carry an out-of-bounds slot index, so their
+        scatter updates are dropped on-device."""
+        if not self._fast:
+            return self._admit_full()
+        if not self.pending:                   # O(1) fast-out per chunk
+            return False
+        free = [i for i, a in enumerate(self.active)
+                if a is None or a.done]
+        n = min(len(self.pending), len(free))
+        if n == 0:
+            return False
+        if self.cache is None:
+            self.cache = api.init_cache(self.cfg, self.slots, self.max_len)
+        admitted = self.pending[:n]
+        del self.pending[:n]
+        slots = np.full((self.slots,), self.slots, np.int32)  # OOB sentinel
+        slots[:n] = free[:n]
+        prompts = np.zeros((self.slots, self.prompt_len), np.int32)
+        for row, (slot, r) in enumerate(zip(slots[:n], admitted)):
+            self.active[slot] = r
+            seq = r.prompt[-self.prompt_len:]
+            prompts[row, -len(seq):] = seq
+        rids = np.zeros((self.slots,), np.int32)
+        rids[:n] = [r.rid for r in admitted]
+        batch = {"tokens": jnp.asarray(prompts),
+                 **self._extra_inputs(self.slots)}
+        nxt, self.cache, self.seq_lens, self.last_tokens, self.sample_salt = \
+            self._admit_fn(self.params, self.cache, batch,
+                           jnp.asarray(slots), jnp.asarray(rids),
+                           self.seq_lens, self.last_tokens,
+                           self.sample_salt)
+        nxt = np.asarray(nxt)
+        now = time.time()
+        for row, r in enumerate(admitted):
+            r.out_tokens.append(int(nxt[row]))
+            r.t_first = now
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+                r.t_done = now
+        return True
+
+    def _budgets(self) -> np.ndarray:
+        """Decode tokens still owed per slot.  Requests longer than the
+        ``max_len`` cache envelope degrade exactly like the legacy engine:
+        the KV write clamps to the last row while tokens keep flowing."""
+        b = np.zeros((self.slots,), np.int32)
+        for i, r in enumerate(self.active):
+            if r is None or r.done:
+                continue
+            b[i] = max(0, r.max_new_tokens - len(r.out_tokens))
+        return b
+
+    def _decode_chunk(self, num_steps: int) -> None:
+        """One device dispatch advancing every live slot up to ``num_steps``
+        tokens; host-side bookkeeping runs once on the returned chunk."""
+        budgets = self._budgets()
+        t0 = time.perf_counter()
+        toks, self.cache, self.seq_lens, self.last_tokens = self._decode_fn(
+            self.params, self.cache, self.last_tokens, self.seq_lens,
+            jnp.asarray(budgets), self._sample_key, self.sample_salt,
+            num_steps)
+        toks = np.asarray(toks)                      # (num_steps, B) — syncs
+        self.chunk_lat_s.append(time.perf_counter() - t0)
+        self._steps += num_steps
+        now = time.time()
+        for i, r in enumerate(self.active):
+            got = int(min(budgets[i], num_steps))
+            if r is None or r.done or got == 0:
+                continue
+            r.out_tokens.extend(int(t) for t in toks[:got, i])
+            if budgets[i] <= got:                    # budget met this chunk
+                r.done = True
+                r.t_done = now
+
+    def _n_active(self) -> int:
+        return sum(1 for r in self.active
+                   if r is not None and not r.done)
+
+    def step(self) -> int:
+        """One decode step over all slots; returns #active requests.
+
+        Per-token compatibility surface: a chunk of exactly one step, so the
+        numerics match ``run`` at any chunk size.  Like ``run``, the fast
+        path admits before every step so free slots never starve while
+        others are mid-request.
+        """
+        if self._fast:
+            self._admit()
+            if self._n_active() == 0:
+                return 0
+            self._decode_chunk(1)
+            return self._n_active()
+        if self._n_active() == 0 and not self._admit():
+            return 0
+        return self._step_legacy()
+
+    def run(self, max_steps: int = 1000) -> Dict[str, float]:
+        """Serve until the queue drains; returns latency/throughput stats."""
+        self.chunk_lat_s = []
+        self._steps = 0
+        t0 = time.time()
+        if self._fast:
+            while self._steps < max_steps:
+                self._admit()
+                if self._n_active() == 0:
+                    break
+                # always dispatch the full chunk: num_steps is static, so a
+                # data-dependent remainder would recompile the decode
+                # program mid-serve (budgets absorb any overshoot)
+                self._decode_chunk(self.spec.chunk)
+        else:
+            while self._steps < max_steps:
+                if self.step() == 0:
+                    if not any(not r.done for r in self.queue):
+                        break
+                    if not self._admit():
+                        break
+        wall = time.time() - t0
+        done = [r for r in self.queue if r.done]
+        produced = sum(len(r.out_tokens) for r in done)
+        # latency stats cover only THIS run's completions — a prior warmup
+        # run's compile-tainted TTFT must not pollute the percentiles
+        # (requests_done/tokens stay cumulative over the queue, as pinned)
+        ttfts = [r.t_first - r.t_submit for r in done
+                 if r.t_first and r.t_done and r.t_done >= t0]
+        return {
+            "requests_done": len(done),
+            "tokens": produced,
+            "wall_s": wall,
+            "tokens_per_s": produced / max(wall, 1e-9),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "p50_ttft_s": _pct(ttfts, 50),
+            "p95_ttft_s": _pct(ttfts, 95),
+            "decode_steps": self._steps,
+            "chunk": self.spec.chunk if self._fast else 1,
+            "p50_chunk_s": _pct(self.chunk_lat_s, 50),
+            "p95_chunk_s": _pct(self.chunk_lat_s, 95),
+        }
+
+    # -- legacy full-batch path (whisper enc-dec cache) -----------------------
+
+    def _admit_full(self) -> bool:
+        """Legacy admission: (re)prefill the whole slot batch."""
         free = [i for i, a in enumerate(self.active) if a is None
                 or a.done]
-        if not waiting or not free:
+        if not self.pending or not free:
             return False
-        # Build a full prompt batch: existing actives re-prefill their
-        # prompt+generated context (simple, static-shape discipline).
         for i in free:
-            if not waiting:
+            if not self.pending:
                 break
-            self.active[i] = waiting.pop(0)
+            self.active[i] = self.pending.pop(0)
         prompts = np.zeros((self.slots, self.prompt_len), np.int32)
         for i, r in enumerate(self.active):
             if r is None:
@@ -128,66 +365,40 @@ class ServeEngine:
             seq = seq[-self.prompt_len:]
             prompts[i, -len(seq):] = seq
         batch = {"tokens": jnp.asarray(prompts)}
-        if self.cfg.family == "vlm":
-            batch["patches"] = jnp.zeros(
-                (self.slots, self.cfg.vision_prefix, self.cfg.vision_dim),
-                jnp.float32)
         if self.cfg.family == "audio":
             batch["frames"] = jnp.zeros(
                 (self.slots, self.prompt_len, self.cfg.d_model), jnp.float32)
         logits, self.cache = self._prefill(self.params, batch)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        now = time.time()
         for i, r in enumerate(self.active):
             if r is not None and not r.done:
                 r.out_tokens.append(int(nxt[i]))
                 if r.t_first is None:
-                    r.t_first = time.time()
-        self.last_tokens = nxt
+                    r.t_first = now
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    r.t_done = now
+        self.last_tokens = jnp.asarray(nxt)
         return True
 
-    def step(self) -> int:
-        """One decode step over all slots; returns #active requests."""
-        if self.cache is None:
-            if not self._admit():
-                return 0
+    def _step_legacy(self) -> int:
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_tokens))
+            self.params, self.cache, self.last_tokens)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.chunk_lat_s.append(time.perf_counter() - t0)
+        self._steps += 1
         n_active = 0
+        now = time.time()
         for i, r in enumerate(self.active):
             if r is None or r.done:
                 continue
             r.out_tokens.append(int(nxt[i]))
             if len(r.out_tokens) >= r.max_new_tokens:
                 r.done = True
-                r.t_done = time.time()
+                r.t_done = now
             else:
                 n_active += 1
-        self.last_tokens = nxt
+        self.last_tokens = jnp.asarray(nxt)
         return n_active
-
-    def run(self, max_steps: int = 1000) -> Dict[str, float]:
-        """Serve until the queue drains; returns latency/throughput stats."""
-        produced = 0
-        steps = 0
-        t0 = time.time()
-        while steps < max_steps:
-            active = self.step()
-            steps += 1
-            if active == 0:
-                if not any(not r.done for r in self.queue):
-                    break
-                if not self._admit():
-                    break
-        wall = time.time() - t0
-        done = [r for r in self.queue if r.done]
-        produced = sum(len(r.out_tokens) for r in done)
-        ttfts = [r.t_first - r.t_submit for r in done if r.t_first]
-        return {
-            "requests_done": len(done),
-            "tokens": produced,
-            "wall_s": wall,
-            "tokens_per_s": produced / max(wall, 1e-9),
-            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
-            "decode_steps": steps,
-        }

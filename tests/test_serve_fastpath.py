@@ -1,0 +1,225 @@
+"""Serve fast path: incremental admission, chunked on-device decode, and
+the continuous-batching invariants.
+
+Covers the PR-3 contract:
+  * ``Request`` has identity equality (``eq=False``) — value-equal numpy
+    prompts must never crash membership tests during admission;
+  * chunked decode is numerics-neutral: greedy outputs are bitwise identical
+    for every ``chunk``, including the per-token path (chunk=1) and the
+    ``step()`` compatibility surface;
+  * admission/retirement invariants under randomized schedules (property
+    test): no token loss, no decode of retired slots, FIFO admission.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import registry
+from repro.models import api
+from repro.serve.engine import Request, ServeEngine, SliceSpec
+
+
+_MODEL = {}
+
+
+def _model():
+    """Module-memoized reduced model (plain function, not a fixture, so the
+    hypothesis-shim property tests can use it too)."""
+    if not _MODEL:
+        cfg = registry.get_reduced("olmo-1b")
+        _MODEL["m"] = (cfg, api.init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODEL["m"]
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return _model()
+
+
+class TestRequestIdentity:
+    def test_eq_is_identity_not_value(self):
+        """dataclass(eq=False): value-equal requests stay distinct and
+        membership tests never hit ambiguous ndarray comparison."""
+        a = Request(rid=0, prompt=np.arange(4), max_new_tokens=4)
+        b = Request(rid=1, prompt=np.arange(4), max_new_tokens=4)
+        assert a != b and a == a
+        assert a in [a, b] and b in [a, b]
+        assert Request(rid=2, prompt=np.arange(4),
+                       max_new_tokens=4) not in [a, b]
+
+    def test_no_generated_eq(self):
+        """Pin eq=False: the dataclass must not synthesize an elementwise
+        ``__eq__`` (it would raise on value-equal ndarray prompts)."""
+        assert Request.__eq__ is object.__eq__
+        assert Request.__hash__ is object.__hash__
+
+    def test_duplicate_prompts_serve_cleanly(self, small_model):
+        """The admission scan (`r not in self.active`) used to be able to
+        raise on value-equal prompts; serving two identical prompts must
+        work and both must finish."""
+        cfg, params = small_model
+        eng = ServeEngine(cfg, params, SliceSpec(slots=1, max_len=32,
+                                                 prompt_len=8))
+        r1 = eng.submit(np.arange(6), max_new_tokens=4)
+        r2 = eng.submit(np.arange(6), max_new_tokens=4)
+        stats = eng.run()
+        assert stats["requests_done"] == 2
+        assert r1.done and r2.done
+        assert r1.out_tokens == r2.out_tokens   # same prompt, greedy
+
+
+def _serve_outputs(small_model, chunk):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, SliceSpec(
+        slots=2, max_len=48, prompt_len=8, chunk=chunk))
+    reqs = [eng.submit(np.arange(5) + i, max_new_tokens=7)
+            for i in range(5)]
+    stats = eng.run()
+    assert stats["requests_done"] == 5 and stats["tokens"] == 35
+    return [tuple(r.out_tokens) for r in reqs]
+
+
+@pytest.fixture(scope="module")
+def per_token_outputs(small_model):
+    return _serve_outputs(small_model, chunk=1)
+
+
+class TestChunkEquivalence:
+    @pytest.mark.parametrize("chunk", [2, 3, 8, 32])
+    def test_greedy_outputs_bitwise_identical(self, small_model,
+                                              per_token_outputs, chunk):
+        assert _serve_outputs(small_model, chunk) == per_token_outputs
+
+    def test_step_matches_run(self, small_model):
+        """The per-token step() surface is the chunk=1 program."""
+        cfg, params = small_model
+        outs = []
+        for use_step in (False, True):
+            eng = ServeEngine(cfg, params, SliceSpec(
+                slots=2, max_len=32, prompt_len=8, chunk=4))
+            reqs = [eng.submit(np.arange(4) + i, max_new_tokens=5)
+                    for i in range(3)]
+            if use_step:
+                while any(not r.done for r in reqs):
+                    eng.step()
+            else:
+                eng.run()
+            outs.append([tuple(r.out_tokens) for r in reqs])
+        assert outs[0] == outs[1]
+
+    def test_sampling_chunk_invariant(self, small_model):
+        """Sampled decode folds the key per (request, position), so outputs
+        are chunk-invariant too (same engine seed)."""
+        cfg, params = small_model
+        outs = []
+        for chunk in (1, 4):
+            eng = ServeEngine(cfg, params, SliceSpec(
+                slots=2, max_len=32, prompt_len=8, greedy=False,
+                chunk=chunk))
+            reqs = [eng.submit(np.arange(4) + i, max_new_tokens=6)
+                    for i in range(2)]
+            eng.run()
+            outs.append([tuple(r.out_tokens) for r in reqs])
+        assert outs[0] == outs[1]
+
+    def test_sampling_applies_to_first_token(self, small_model):
+        """greedy=False must sample the admission-produced first token too
+        (not silently argmax it), drawing with the documented
+        fold_in(fold_in(key, rid), position) scheme so it composes with
+        decode_n's (salt, position) stream without collisions."""
+        import jax.numpy as jnp
+
+        cfg, params = small_model
+        eng = ServeEngine(cfg, params, SliceSpec(
+            slots=1, max_len=32, prompt_len=8, greedy=False, chunk=2))
+        r = eng.submit(np.arange(6), max_new_tokens=1)
+        eng.run()
+        prompt = np.zeros((1, 8), np.int32)
+        prompt[0, -6:] = np.arange(6)
+        logits, _ = api.prefill(cfg, params,
+                                {"tokens": jnp.asarray(prompt)}, max_len=32)
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(1), r.rid), 8)
+        want = int(jax.random.categorical(key, logits[0]))
+        assert r.out_tokens[0] == want
+
+
+class TestContinuousBatchingInvariants:
+    """Property tests over randomized request schedules."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(1, 3),                       # slots
+           st.lists(st.tuples(st.integers(1, 9),    # prompt len
+                              st.integers(1, 7)),   # max_new_tokens
+                    min_size=1, max_size=7))
+    def test_no_token_loss_and_fifo(self, slots, reqspecs):
+        cfg, params = _model()
+        eng = ServeEngine(cfg, params, SliceSpec(
+            slots=slots, max_len=32, prompt_len=8, chunk=4))
+        reqs = [eng.submit(np.arange(plen, dtype=np.int32) % cfg.vocab_size,
+                           max_new_tokens=mnt)
+                for plen, mnt in reqspecs]
+        stats = eng.run()
+        # no token loss: every request completed with exactly its budget
+        assert stats["requests_done"] == len(reqs)
+        for r in reqs:
+            assert r.done and len(r.out_tokens) == r.max_new_tokens
+            assert r.t_first is not None and r.t_done is not None
+            assert r.t_done >= r.t_first >= r.t_submit
+        # FIFO admission: first-token times are non-decreasing in
+        # submission order
+        firsts = [r.t_first for r in reqs]
+        assert firsts == sorted(firsts)
+        # retired slots stay retired: every active slot entry is done
+        assert all(r is None or r.done for r in eng.active)
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(2, 4))
+    def test_no_decode_of_retired_slots(self, chunk):
+        """A retired request's token list must never grow after t_done —
+        the done-mask freezes its slot while others continue."""
+        cfg, params = _model()
+        eng = ServeEngine(cfg, params, SliceSpec(
+            slots=2, max_len=32, prompt_len=8, chunk=chunk))
+        short = eng.submit(np.arange(4), max_new_tokens=2)
+        long = eng.submit(np.arange(4) + 1, max_new_tokens=11)
+        snapshot = None
+        while not (short.done and long.done):
+            eng.step()
+            if short.done and snapshot is None:
+                snapshot = list(short.out_tokens)
+        assert short.out_tokens == snapshot
+        assert len(short.out_tokens) == 2 and len(long.out_tokens) == 11
+
+    def test_late_submission_reuses_retired_slot(self, small_model):
+        """Submitting after a drain admits into retired slots without
+        touching live state."""
+        cfg, params = small_model
+        eng = ServeEngine(cfg, params, SliceSpec(slots=1, max_len=32,
+                                                 prompt_len=8, chunk=4))
+        r1 = eng.submit(np.arange(4), max_new_tokens=3)
+        eng.run()
+        assert r1.done
+        r2 = eng.submit(np.arange(4) + 2, max_new_tokens=5)
+        stats = eng.run()
+        assert r2.done and len(r2.out_tokens) == 5
+        assert stats["requests_done"] == 2     # cumulative over the queue
+
+
+class TestStatsSurface:
+    def test_run_reports_percentiles_and_chunk(self, small_model):
+        cfg, params = small_model
+        eng = ServeEngine(cfg, params, SliceSpec(slots=2, max_len=32,
+                                                 prompt_len=8, chunk=4))
+        for i in range(3):
+            eng.submit(np.arange(4) + i, max_new_tokens=4)
+        stats = eng.run()
+        for k in ("p50_ttft_s", "p95_ttft_s", "p50_chunk_s", "p95_chunk_s",
+                  "mean_ttft_s", "tokens_per_s", "decode_steps"):
+            assert k in stats, k
+        assert stats["chunk"] == 4
+        assert stats["p95_ttft_s"] >= stats["p50_ttft_s"] >= 0.0
+        assert stats["p95_chunk_s"] >= stats["p50_chunk_s"] > 0.0

@@ -67,9 +67,10 @@ class TestFaultTolerance:
 class TestServing:
     def test_engine_drains_queue(self):
         cfg = registry.get_reduced("olmo-1b")
-        from repro.serve.engine import ServeEngine
+        from repro.serve.engine import ServeEngine, SliceSpec
         params = api.init_params(cfg, jax.random.PRNGKey(0))
-        eng = ServeEngine(cfg, params, slots=2, max_len=48, prompt_len=8)
+        eng = ServeEngine(cfg, params,
+                          SliceSpec(slots=2, max_len=48, prompt_len=8))
         reqs = [eng.submit(np.arange(4) + i, max_new_tokens=6)
                 for i in range(4)]
         stats = eng.run()
@@ -79,12 +80,12 @@ class TestServing:
 
     def test_greedy_decode_deterministic(self):
         cfg = registry.get_reduced("olmo-1b")
-        from repro.serve.engine import ServeEngine
+        from repro.serve.engine import ServeEngine, SliceSpec
         params = api.init_params(cfg, jax.random.PRNGKey(0))
         outs = []
         for _ in range(2):
-            eng = ServeEngine(cfg, params, slots=1, max_len=32,
-                              prompt_len=8)
+            eng = ServeEngine(cfg, params,
+                              SliceSpec(slots=1, max_len=32, prompt_len=8))
             r = eng.submit(np.arange(6), max_new_tokens=5)
             eng.run()
             outs.append(tuple(r.out_tokens))
