@@ -1,0 +1,263 @@
+"""Fleet serving benchmark -> BENCH_fleet.json.
+
+Three scenarios over `repro.fleet`:
+
+  * **scaling** (measured timing, gated) — the same uniform burst served by
+    1 replica and by a 2-replica fleet.  Replicas are independent slices of
+    the machine, so their chunks overlap on the virtual fleet clock; the
+    2-replica aggregate tokens/s must clear ``GATE_X`` (1.8x) of the single
+    replica, i.e. routing overhead may cost at most 10%.  Chunk costs are
+    the real measured wall latencies of the PR-3 fast path.
+  * **failure** (deterministic timing) — static 2-replica fleet vs an
+    autoscaled fleet on the same bursty trace and the same fail plan: the
+    machine's spare is burned early, then a serving block dies mid-flight —
+    no spare, the slice is LOST, and the service re-routes its in-flight
+    requests to the survivor (re-prefilling the already-decoded tokens).
+    The acceptance bar: ZERO lost requests and SLO attainment > 0 in both
+    fleets.  The repaired block then comes back; only the autoscaled fleet
+    re-allocates it, so its goodput-under-failures beats the static pool's.
+  * **autoscale** (deterministic timing) — a bursty trace on a 1..3-replica
+    autoscaler showing at least one scale-up and one drain+scale-down.
+
+Deterministic timing (fixed virtual chunk cost) is used for the control
+scenarios so their dynamics are machine-independent; tokens decoded are
+real in every scenario.
+
+    python benchmarks/fleet_serving.py            # full run + gates
+    python benchmarks/fleet_serving.py --quick    # CI-sized run + gates
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+
+from repro.cluster import SliceSpec, Supercomputer
+from repro.configs import registry
+from repro.core.goodput import served_goodput
+from repro.fleet import (AutoscalerConfig, FleetService, TrafficSpec,
+                         generate, uniform_burst)
+from repro.models import api
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_fleet.json"
+
+ARCH = "olmo-1b"
+GEOMETRY = (4, 4, 4)
+SPEC = SliceSpec(slots=4, max_len=64, prompt_len=16, chunk=8)
+GATE_X = 1.8
+NEW_TOKENS = 16
+CHUNK_S = 0.05                       # virtual chunk cost, control scenarios
+
+
+def _model():
+    cfg = registry.get_reduced(ARCH)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def scenario_scaling(cfg, params, requests: int):
+    """Uniform burst through 1 vs 2 replicas, measured chunk latencies."""
+    out = {}
+    for n in (1, 2):
+        sc = Supercomputer(num_blocks=8)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=GEOMETRY,
+                           initial_replicas=n, timing="measured")
+        svc.warmup()
+        reqs = uniform_burst(requests, new_tokens=NEW_TOKENS,
+                             prompt_len=8, seed=n)
+        rep = svc.run(reqs)
+        assert rep.completed == requests and rep.dropped == 0, rep
+        out[n] = rep
+    speedup = (out[2].aggregate_tokens_per_s
+               / max(out[1].aggregate_tokens_per_s, 1e-9))
+    return {
+        "requests": requests,
+        "new_tokens_per_request": NEW_TOKENS,
+        "single_tokens_per_s": out[1].aggregate_tokens_per_s,
+        "fleet2_tokens_per_s": out[2].aggregate_tokens_per_s,
+        "speedup_x": round(speedup, 2),
+        "single_p50_ttft_s": out[1].p50_ttft_s,
+        "single_p95_ttft_s": out[1].p95_ttft_s,
+        "fleet2_p50_ttft_s": out[2].p50_ttft_s,
+        "fleet2_p95_ttft_s": out[2].p95_ttft_s,
+        "gate": {"threshold_x": GATE_X, "passed": bool(speedup >= GATE_X)},
+    }
+
+
+FAIL_CHUNK_S = 0.1          # slower virtual chunks: bursts outrun capacity
+
+
+def _failure_trace(quick: bool):
+    # 16/32-token outputs need 2-4 chunks each, so the burst builds real
+    # multi-chunk in-flight state for the failure to land on
+    return generate(TrafficSpec(
+        duration_s=2.0 if quick else 4.0, rate_rps=12.0, pattern="bursty",
+        burst_x=3.0, burst_period_s=1.0, burst_len_s=0.4,
+        new_tokens_choices=(16, 32), new_tokens_weights=(0.5, 0.5),
+        prompt_len_max=8), seed=7)
+
+
+FAIL_PLAN = [
+    (0.10, 2),              # burn the idle spare block first
+    (1.15, "replica:0"),    # kill a serving block MID-BURST: no spare -> LOST
+]
+REPAIR_PLAN = [(1.60, "last_failed")]   # the dead block comes back
+
+
+def scenario_failure(cfg, params, quick: bool):
+    """Static vs autoscaled 2-replica fleets through the same block loss.
+
+    3-block machine, both replicas allocated, spare burned early, and the
+    SAME serving block killed mid-burst in both arms (min_replicas=2 pins
+    the autoscaled pool, so it cannot dodge the hit by consolidating
+    first).  After the loss the dead block is repaired; only the
+    autoscaler re-allocates it (its pool is below the floor), the static
+    pool stays down a replica."""
+    results = {}
+    for kind in ("static", "autoscaled"):
+        sc = Supercomputer(num_blocks=3)
+        autoscale = None
+        if kind == "autoscaled":
+            autoscale = AutoscalerConfig(
+                min_replicas=2, max_replicas=2, tick_s=0.05,
+                cooldown_s=0.2, scale_up_backlog=2.0,
+                scale_down_backlog=0.25, provision_s=0.1)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=GEOMETRY,
+                           initial_replicas=2, autoscale=autoscale,
+                           timing=FAIL_CHUNK_S)
+        trace = _failure_trace(quick)
+        rep = svc.run(trace, fail_plan=FAIL_PLAN,
+                      repair_plan=REPAIR_PLAN, settle_s=1.0)
+        results[kind] = {"report": rep, "trace": trace}
+    static, auto = results["static"]["report"], \
+        results["autoscaled"]["report"]
+    zero_lost = (static.dropped == 0 and auto.dropped == 0
+                 and static.completed == len(results["static"]["trace"])
+                 and auto.completed == len(results["autoscaled"]["trace"]))
+    return {
+        "fail_plan": [[t, str(b)] for t, b in FAIL_PLAN],
+        "repair_plan": [[t, str(b)] for t, b in REPAIR_PLAN],
+        "static": static.to_dict(),
+        "autoscaled": auto.to_dict(),
+        "zero_lost_requests": bool(zero_lost),
+        "migrated_static": static.migrated,
+        "migrated_autoscaled": auto.migrated,
+        "slo_attainment_static": static.slo_attainment,
+        "slo_attainment_autoscaled": auto.slo_attainment,
+        # goodput under failures = tokens of SLO-met requests / offered:
+        # late work past its deadline is not useful work
+        "goodput_under_failures_static": static.slo_goodput,
+        "goodput_under_failures_autoscaled": auto.slo_goodput,
+    }
+
+
+def scenario_autoscale(cfg, params, quick: bool):
+    """Bursty trace on a 1..3 autoscaler: elasticity demo numbers."""
+    sc = Supercomputer(num_blocks=16)
+    svc = FleetService(sc, cfg, params, SPEC, geometry=GEOMETRY,
+                       initial_replicas=1, timing=CHUNK_S,
+                       autoscale=AutoscalerConfig(
+                           min_replicas=1, max_replicas=3, tick_s=0.05,
+                           cooldown_s=0.3, scale_up_backlog=3.0,
+                           scale_down_backlog=0.5, provision_s=0.1))
+    trace = generate(TrafficSpec(
+        duration_s=2.0 if quick else 4.0, rate_rps=4.0, pattern="bursty",
+        burst_x=10.0, burst_period_s=2.0, burst_len_s=0.5,
+        new_tokens_choices=(8, 16), new_tokens_weights=(0.6, 0.4),
+        prompt_len_max=8), seed=2)
+    rep = svc.run(trace, settle_s=2.0)
+    d = rep.to_dict()
+    d["alloc_events"] = sum(1 for e in sc.events if e.startswith("alloc"))
+    d["release_events"] = sum(
+        1 for e in sc.events if e.startswith("release"))
+    return d
+
+
+def run(quick: bool = False):
+    cfg, params = _model()
+    scaling = scenario_scaling(cfg, params, requests=16 if quick else 24)
+    failure = scenario_failure(cfg, params, quick)
+    autoscale = scenario_autoscale(cfg, params, quick)
+    record = {
+        "arch": ARCH,
+        "geometry": list(GEOMETRY),
+        "spec": {"slots": SPEC.slots, "max_len": SPEC.max_len,
+                 "prompt_len": SPEC.prompt_len, "chunk": SPEC.chunk},
+        "virtual_chunk_s_control_scenarios": CHUNK_S,
+        "scaling": scaling,
+        "failure": failure,
+        "autoscale": autoscale,
+        "model_served_goodput": {
+            # analytic fleet counterpart (core.goodput.served_goodput):
+            # served fraction of offered traffic at 99% host availability
+            "ocs_demand_0.5": round(served_goodput(512, 0.99, 0.5), 4),
+            "ocs_demand_1.0": round(served_goodput(512, 0.99, 1.0), 4),
+            "static_demand_0.5": round(
+                served_goodput(512, 0.99, 0.5, mode="static",
+                               trials=400), 4),
+        },
+    }
+    OUT.write_text(json.dumps(record, indent=2) + "\n")
+    rows = [
+        ("fleet_scaling_tokens_per_s", 0.0,
+         f"fleet2={scaling['fleet2_tokens_per_s']:.1f};"
+         f"single={scaling['single_tokens_per_s']:.1f};"
+         f"speedup={scaling['speedup_x']};need>={GATE_X};"
+         f"ok={scaling['gate']['passed']}"),
+        ("fleet_failure_rerouting", 0.0,
+         f"zero_lost={failure['zero_lost_requests']};"
+         f"migrated={failure['migrated_static']};"
+         f"slo_static={failure['slo_attainment_static']};"
+         f"slo_autoscaled={failure['slo_attainment_autoscaled']}"),
+        ("fleet_autoscale", 0.0,
+         f"ups={autoscale['scale_ups']};downs={autoscale['scale_downs']};"
+         f"p95_ttft={autoscale['p95_ttft_s']}"),
+    ]
+    if not scaling["gate"]["passed"]:
+        raise AssertionError(
+            f"fleet scaling gate: {scaling['fleet2_tokens_per_s']:.1f} < "
+            f"{GATE_X}x single-replica "
+            f"({scaling['single_tokens_per_s']:.1f} tok/s)")
+    if not failure["zero_lost_requests"]:
+        raise AssertionError("failure scenario lost requests")
+    if failure["migrated_static"] < 1 or failure["migrated_autoscaled"] < 1:
+        raise AssertionError(
+            "failure scenario did not exercise migration in both arms: "
+            f"migrated_static={failure['migrated_static']}, "
+            f"migrated_autoscaled={failure['migrated_autoscaled']}")
+    if (failure["static"]["failures"] < 1
+            or failure["autoscaled"]["failures"] < 1):
+        raise AssertionError(
+            "both arms must actually take the mid-serve block loss")
+    if (failure["goodput_under_failures_autoscaled"]
+            < failure["goodput_under_failures_static"]):
+        raise AssertionError(
+            "autoscaled fleet must beat (or match) the static pool on "
+            "goodput-under-failures — the repaired block was not "
+            "re-allocated: "
+            f"{failure['goodput_under_failures_autoscaled']} < "
+            f"{failure['goodput_under_failures_static']}")
+    if failure["slo_attainment_static"] <= 0:
+        raise AssertionError("SLO attainment collapsed under failure")
+    if not (autoscale["scale_ups"] >= 1 and autoscale["scale_downs"] >= 1):
+        raise AssertionError("autoscaler did not exercise up AND down")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (fewer requests), same gates")
+    args = ap.parse_args()
+    try:
+        for name, us, derived in run(quick=args.quick):
+            print(f"{name},{us:.1f},{derived}")
+    except AssertionError as e:
+        print(f"GATE FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

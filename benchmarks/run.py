@@ -18,6 +18,7 @@ BENCHES = [
     "fig16_roofline",
     "ocs_cost_ib",
     "cluster_session",       # serve tokens/s -> BENCH_cluster.json
+    "fleet_serving",         # fleet scaling/failure/autoscale -> BENCH_fleet.json
 ]
 
 

@@ -36,6 +36,12 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== sparsecore pipeline benchmark -> BENCH_sparsecore.json =="
     python benchmarks/sparsecore_pipeline.py
 
+    echo "== fleet stage: fleet serving benchmark -> BENCH_fleet.json =="
+    # gates: 2-replica aggregate throughput >= 1.8x single replica,
+    # zero lost requests across a mid-serve block failure (in-flight work
+    # migrates to survivors), and the autoscaler exercises up AND down
+    python benchmarks/fleet_serving.py --quick
+
     echo "== archive benchmark artifacts =="
     mkdir -p artifacts
     cp BENCH_*.json artifacts/

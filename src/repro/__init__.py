@@ -1,0 +1,36 @@
+"""repro — container-scale reproduction of the TPU v4 paper.
+
+One package from the OCS fabric to workloads:
+
+  * `repro.cluster`   — `Supercomputer`/`Slice` session API (start here)
+  * `repro.fleet`     — SLO-aware multi-slice serving: traffic, routing,
+                        autoscaling, failure-driven re-routing
+  * `repro.core`      — OCS fabric, slice scheduler, topologies, cost
+                        models, goodput, autotopo search, SparseCore timing
+  * `repro.models`    — model zoo behind one family-dispatching `api`
+  * `repro.kernels`   — Pallas kernels (+ XLA references and dispatchers)
+  * `repro.embeddings`— SparseCore embedding executor, cache, placement
+  * `repro.parallel`  — sharding specs, contexts, overlap, pipeline
+  * `repro.serve`     — continuous-batching `ServeEngine` + `SliceSpec`
+  * `repro.train`     — `Trainer` with checkpoint/restore
+  * `repro.launch`    — meshes, dry-run lowering, rooflines, HLO costs
+  * `repro.data`      — deterministic synthetic datasets
+  * `repro.optim`     — Adam + schedules + grad-norm utilities
+
+Subpackages import lazily (module ``__getattr__``) so `import repro` stays
+cheap — ``repro.cluster`` etc. resolve on first attribute access.
+"""
+import importlib
+
+__all__ = [
+    "cluster", "configs", "core", "data", "embeddings", "fleet", "kernels",
+    "launch", "models", "optim", "parallel", "serve", "train",
+]
+
+__version__ = "0.4.0"
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

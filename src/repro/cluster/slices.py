@@ -92,13 +92,22 @@ class SliceSession:
         self.interruptions: List[SliceEvent] = []
         self.lost = False
         self.closed = False
+        self._listeners: List[Any] = []
         slice_._sessions.append(self)
+
+    def add_listener(self, fn) -> None:
+        """Register ``fn(session, event)`` to run on every machine event this
+        session sees — how a fleet replica reacts to a slice reconfiguring or
+        dying without polling ``interruptions``."""
+        self._listeners.append(fn)
 
     def _on_event(self, ev: SliceEvent) -> None:
         self.interruptions.append(ev)
         if ev.kind in ("lost", "free"):
             self.lost = ev.kind == "lost"
             self.closed = True
+        for fn in list(self._listeners):
+            fn(self, ev)
 
     def _check_live(self) -> None:
         if self.lost:
@@ -160,6 +169,7 @@ class ServeSession(SliceSession):
     def __init__(self, slice_: "Slice", engine: ServeEngine):
         super().__init__(slice_)
         self.engine = engine
+        self.draining = False
 
     @property
     def spec(self) -> SliceSpec:
@@ -167,10 +177,58 @@ class ServeSession(SliceSession):
 
     def submit(self, prompt, max_new_tokens: int = 32):
         self._check_live()
+        if self.draining:
+            raise SliceError("session is draining; not accepting requests")
         return self.engine.submit(prompt, max_new_tokens=max_new_tokens)
 
     def step(self) -> int:
         return 0 if self.closed else self.engine.step()
+
+    # -- fleet surface: drain + queue introspection ---------------------------
+
+    def drain(self) -> None:
+        """Stop accepting new requests; in-flight work keeps decoding.  The
+        fleet autoscaler drains a replica to completion before freeing its
+        slice, so scale-down never kills live requests."""
+        self.draining = True
+
+    def undrain(self) -> None:
+        """Resume accepting requests (a drain cancelled before the free —
+        cheaper than provisioning a fresh slice when load returns)."""
+        self.draining = False
+
+    @property
+    def is_drained(self) -> bool:
+        """True once a draining session owes no further work."""
+        return self.draining and self.engine.depth == 0
+
+    @property
+    def depth(self) -> int:
+        return self.engine.depth
+
+    def tokens_owed(self) -> int:
+        return self.engine.tokens_owed()
+
+    def chunk_time_ema(self, default: float = 0.05) -> float:
+        return self.engine.chunk_time_ema(default)
+
+    def expected_ttft_s(self, default_chunk_s: float = 0.05, *,
+                        chunk_time_s=None) -> float:
+        """Queue-aware TTFT estimate; ``chunk_time_s`` overrides the
+        measured latency EMA when the caller accounts time itself (the
+        fleet's deterministic virtual clock)."""
+        return self.engine.expected_ttft_s(default_chunk_s,
+                                           chunk_time_s=chunk_time_s)
+
+    def step_chunk(self) -> int:
+        """Advance one admission + decode chunk (the fleet pacing quantum)."""
+        return 0 if self.closed else self.engine.step_chunk()
+
+    def export_inflight(self):
+        """Pull every unfinished request off this session's engine (used by
+        the fleet after the slice is lost — bypasses the live-check since the
+        whole point is evacuating a dead session)."""
+        return self.engine.export_inflight()
 
     def run(self, max_steps: int = 1000) -> Dict[str, float]:
         if self.lost:

@@ -75,6 +75,7 @@ class Supercomputer:
         self.slices: Dict[int, Slice] = {}      # job_id -> live Slice
         self.queue: List[JobTicket] = []
         self._next_ticket = 0
+        self._subscribers: List[Callable[[Slice, SliceEvent], None]] = []
 
     @property
     def fabric(self):
@@ -131,11 +132,34 @@ class Supercomputer:
         self.slices[job.job_id] = sl
         return sl
 
+    def subscribe(self, fn: Callable[[Slice, SliceEvent], None]):
+        """Register a machine-level observer: ``fn(slice, event)`` fires for
+        every slice lifecycle event (reconfigure/lost/free) regardless of who
+        owns the slice.  This is how the fleet layer learns that `fail_block`
+        hit one of its serving replicas and re-routes the in-flight requests
+        instead of erroring the whole service.  Returns ``fn`` so it can be
+        used as a decorator."""
+        self._subscribers.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[Slice, SliceEvent], None]) -> None:
+        """Detach a `subscribe`d observer (no-op if already detached) —
+        long-lived machines hosting successive services must not keep dead
+        observers reachable."""
+        if fn in self._subscribers:
+            self._subscribers.remove(fn)
+
+    def _publish(self, sl: Slice, ev: SliceEvent) -> None:
+        for fn in list(self._subscribers):
+            fn(sl, ev)
+
     def _release(self, sl: Slice) -> None:
         self.scheduler.release(sl.job_id)
         self.slices.pop(sl.job_id, None)
         sl.status = "freed"
-        sl._notify(SliceEvent("free", f"released blocks {sl.blocks}"))
+        ev = SliceEvent("free", f"released blocks {sl.blocks}")
+        sl._notify(ev)
+        self._publish(sl, ev)
 
     def utilization(self) -> float:
         return self.scheduler.utilization()
@@ -163,12 +187,14 @@ class Supercomputer:
             # job; the slice and its sessions are lost until repair.
             sl.status = "lost"
             self.slices.pop(job_id, None)
-            sl._notify(SliceEvent(
-                "lost", f"block{block} failed, no spare", downtime_s=secs))
+            ev = SliceEvent(
+                "lost", f"block{block} failed, no spare", downtime_s=secs)
         else:
-            sl._notify(SliceEvent(
+            ev = SliceEvent(
                 "reconfigure", f"block{block} -> spare",
-                circuits_moved=moved, downtime_s=secs))
+                circuits_moved=moved, downtime_s=secs)
+        sl._notify(ev)
+        self._publish(sl, ev)
 
     # -- job queue -------------------------------------------------------------
 

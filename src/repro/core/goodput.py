@@ -9,6 +9,11 @@ CPU hosts (4 chips/host); a block is schedulable only if all 16 hosts are up.
   * Without OCS (static cabling): slices must be CONTIGUOUS axis-aligned
     sub-grids of the fixed 4×4×4 block torus with every block healthy —
     availability must reach 99.9% before large slices schedule at all.
+
+Alongside this *scheduled* goodput, `served_goodput` answers the fleet
+question (repro.fleet): what fraction of offered serving traffic gets
+delivered when each schedulable slice hosts a replica and failures re-route
+load onto the survivors' headroom.
 """
 from __future__ import annotations
 
@@ -42,30 +47,29 @@ def _block_geometry(slice_blocks: int) -> Tuple[int, int, int]:
     return best
 
 
-def goodput_ocs(slice_chips: int, host_availability: float, *,
-                trials: int = 2000, seed: int = 0) -> float:
-    """Expected fraction of the machine doing useful work (OCS-connected)."""
+def _usable_fractions_ocs(slice_chips: int, host_availability: float, *,
+                          trials: int, seed: int) -> np.ndarray:
+    """Per-trial machine fraction schedulable as k-block slices (OCS)."""
     k = max(1, slice_chips // 64)
     p = block_alive_prob(host_availability)
     rng = np.random.default_rng(seed)
     healthy = rng.binomial(NUM_BLOCKS, p, size=trials)
-    usable = (healthy // k) * k
-    return float(usable.mean() / NUM_BLOCKS)
+    return (healthy // k) * k / NUM_BLOCKS
 
 
-def goodput_static(slice_chips: int, host_availability: float, *,
-                   trials: int = 2000, seed: int = 0) -> float:
-    """Expected machine fraction when slices need contiguous healthy
-    sub-grids of the fixed torus (greedy packing, axis-aligned, wrapping)."""
+def _usable_fractions_static(slice_chips: int, host_availability: float, *,
+                             trials: int, seed: int) -> np.ndarray:
+    """Per-trial schedulable fraction under static cabling: slices must be
+    contiguous axis-aligned healthy sub-grids (greedy packing, wrapping)."""
     k = max(1, slice_chips // 64)
     geom = _block_geometry(k)
     p = block_alive_prob(host_availability)
     rng = np.random.default_rng(seed)
     A, B, C = MACHINE_BLOCK_DIMS
-    total = 0
     positions = list(itertools.product(range(A), range(B), range(C)))
     orients = set(itertools.permutations(geom))
-    for _ in range(trials):
+    out = np.zeros(trials)
+    for i in range(trials):
         alive = rng.random((A, B, C)) < p
         free = alive.copy()
         placed = 0
@@ -83,8 +87,51 @@ def goodput_static(slice_chips: int, host_availability: float, *,
                     break
             if done and (placed + 1) * k > NUM_BLOCKS:
                 break
-        total += placed * k
-    return float(total / (trials * NUM_BLOCKS))
+        out[i] = placed * k / NUM_BLOCKS
+    return out
+
+
+def goodput_ocs(slice_chips: int, host_availability: float, *,
+                trials: int = 2000, seed: int = 0) -> float:
+    """Expected fraction of the machine doing useful work (OCS-connected)."""
+    return float(_usable_fractions_ocs(
+        slice_chips, host_availability, trials=trials, seed=seed).mean())
+
+
+def goodput_static(slice_chips: int, host_availability: float, *,
+                   trials: int = 2000, seed: int = 0) -> float:
+    """Expected machine fraction when slices need contiguous healthy
+    sub-grids of the fixed torus (greedy packing, axis-aligned, wrapping)."""
+    return float(_usable_fractions_static(
+        slice_chips, host_availability, trials=trials, seed=seed).mean())
+
+
+def served_goodput(slice_chips: int, host_availability: float,
+                   demand_fraction: float, *, mode: str = "ocs",
+                   trials: int = 2000, seed: int = 0) -> float:
+    """Fleet-level SERVED goodput: the expected fraction of *offered traffic*
+    a serving fleet delivers, when every schedulable k-block slice hosts one
+    replica and demand equals ``demand_fraction`` of the full machine's
+    serving capacity.
+
+    Scheduled goodput (`goodput_ocs`/`goodput_static`) asks "how much of the
+    machine can do useful work"; served goodput asks the fleet question —
+    "how much of what users ask for gets served".  They differ because
+    demand below capacity hides failures (a lost replica's traffic re-routes
+    to survivors with headroom, per §2.3 swap-a-spare + the fleet's
+    failure-driven re-routing) until the healthy fleet saturates:
+
+        served_i = min(usable_i, demand) / demand        per trial i
+
+    At demand 1.0 this degenerates to scheduled goodput; at low demand the
+    OCS fleet serves 100% through substantial block loss while static
+    cabling starts shedding as soon as contiguity breaks."""
+    assert 0.0 < demand_fraction <= 1.0, demand_fraction
+    frac = {"ocs": _usable_fractions_ocs,
+            "static": _usable_fractions_static}[mode]
+    usable = frac(slice_chips, host_availability, trials=trials, seed=seed)
+    return float(np.minimum(usable, demand_fraction).mean()
+                 / demand_fraction)
 
 
 def goodput_curve(availabilities: Sequence[float],

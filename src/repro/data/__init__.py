@@ -1,0 +1,4 @@
+"""`repro.data` — deterministic synthetic datasets."""
+from repro.data.synthetic import Dataset
+
+__all__ = ["Dataset"]

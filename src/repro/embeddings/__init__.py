@@ -1,0 +1,14 @@
+"""`repro.embeddings` — the SparseCore embedding pipeline (§3)."""
+from repro.embeddings.cache import HotIdCache
+from repro.embeddings.dedup import dedup_ids, dedup_ratio
+from repro.embeddings.engine import (EmbeddingCollection,
+                                     PipelinedEmbeddingExecutor,
+                                     lookup_reference, materialize_tables)
+from repro.embeddings.sharding import (Placement, plan_placement,
+                                       plan_summary)
+
+__all__ = [
+    "EmbeddingCollection", "HotIdCache", "PipelinedEmbeddingExecutor",
+    "Placement", "dedup_ids", "dedup_ratio", "lookup_reference",
+    "materialize_tables", "plan_placement", "plan_summary",
+]

@@ -1,0 +1,28 @@
+"""`repro.fleet` — SLO-aware serving across many slices of one machine.
+
+    from repro.fleet import (AutoscalerConfig, FleetService, RouterConfig,
+                             TrafficSpec, generate)
+
+    sc = Supercomputer()
+    svc = FleetService(sc, cfg, params, SliceSpec(slots=4),
+                       autoscale=AutoscalerConfig(max_replicas=3))
+    report = svc.run(generate(TrafficSpec(pattern="bursty")))
+    print(report.aggregate_tokens_per_s, report.slo_attainment)
+
+Traffic is open-loop (`traffic`), routing is SLO-aware (`router`), capacity
+is elastic (`autoscaler` drives `Supercomputer.allocate`/`Slice.free`), and
+a `fail_block` on a serving slice re-routes its in-flight requests to the
+surviving replicas instead of erroring the service (`service`).
+"""
+from repro.fleet.autoscaler import Autoscaler, AutoscalerConfig
+from repro.fleet.replica import ReplicaError, ServeReplica
+from repro.fleet.router import Router, RouterConfig
+from repro.fleet.service import FleetReport, FleetService
+from repro.fleet.traffic import (FleetRequest, SLOTier, TrafficSpec,
+                                 generate, uniform_burst)
+
+__all__ = [
+    "Autoscaler", "AutoscalerConfig", "FleetReport", "FleetRequest",
+    "FleetService", "ReplicaError", "Router", "RouterConfig", "SLOTier",
+    "ServeReplica", "TrafficSpec", "generate", "uniform_burst",
+]

@@ -1,0 +1,88 @@
+"""Elastic multi-slice autoscaling: right-size the replica pool on demand.
+
+The paper's §2 claim is that OCS reconfiguration lets one machine carve out
+right-sized slices in seconds; this controller exercises exactly that —
+watching queue backlog and the observed p95 TTFT, allocating a new slice
+through `Supercomputer.allocate` when the fleet falls behind and *draining*
+a replica (serve out its work, then `Slice.free`) when capacity idles.
+
+Decisions are deliberately boring: per-live-replica backlog watermarks with
+a cooldown, plus an optional p95-TTFT target.  ``scale_to_zero`` lets the
+pool drain entirely between bursts (min_replicas=0), paying the provisioning
+latency on the next arrival — the classic serverless trade.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.fleet.replica import ACTIVE, DRAINING, PROVISIONING, ServeReplica
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalerConfig:
+    min_replicas: int = 1
+    max_replicas: int = 4
+    tick_s: float = 0.25                # virtual seconds between decisions
+    cooldown_s: float = 1.0             # between scaling actions
+    scale_up_backlog: float = 4.0       # queued requests per live replica
+    scale_down_backlog: float = 0.75
+    target_p95_ttft_s: Optional[float] = None   # scale up when breached
+    provision_s: float = 0.25           # virtual slice bring-up latency
+    scale_to_zero: bool = False
+
+    def __post_init__(self):
+        assert 0 <= self.min_replicas <= self.max_replicas
+        assert self.scale_down_backlog < self.scale_up_backlog
+
+
+class Autoscaler:
+    def __init__(self, cfg: Optional[AutoscalerConfig] = None):
+        self.cfg = cfg or AutoscalerConfig()
+        self.last_action_t = float("-inf")
+        self.scale_ups = 0
+        self.scale_downs = 0
+
+    def decide(self, now: float, replicas: List[ServeReplica],
+               wait_len: int, p95_ttft_s: Optional[float]
+               ) -> Tuple[str, Optional[ServeReplica]]:
+        """One control tick.  Returns ("up", None), ("down", replica-to-
+        drain), or ("hold", None).  The service executes the action (it owns
+        the Supercomputer and the drain bookkeeping)."""
+        cfg = self.cfg
+        live = [r for r in replicas if r.state in (PROVISIONING, ACTIVE)]
+        backlog = wait_len + sum(r.depth for r in live)
+
+        # the pool floor: with scale_to_zero the down-rule may empty the
+        # pool, so the grow rule must use the SAME floor — otherwise the
+        # two rules oscillate allocate/free forever on an idle fleet
+        floor = 0 if cfg.scale_to_zero else cfg.min_replicas
+        # below the floor (or scale-from-zero with work waiting): grow
+        # unconditionally — cooldown must not wedge an empty pool
+        if len(live) < floor or (not live and backlog > 0):
+            return "up", None
+
+        in_cooldown = now - self.last_action_t < cfg.cooldown_s
+        per = backlog / max(1, len(live))
+        breached = (cfg.target_p95_ttft_s is not None
+                    and p95_ttft_s is not None
+                    and p95_ttft_s > cfg.target_p95_ttft_s)
+        if ((per > cfg.scale_up_backlog or breached)
+                and len(live) < cfg.max_replicas and not in_cooldown):
+            return "up", None
+
+        if (len(live) > floor and not in_cooldown and not breached
+                and per < cfg.scale_down_backlog):
+            idle = [r for r in live if r.state == ACTIVE]
+            if idle:
+                victim = min(idle, key=lambda r: (r.depth, r.tokens_owed(),
+                                                  r.rep_id))
+                return "down", victim
+        return "hold", None
+
+    def record(self, action: str, now: float) -> None:
+        self.last_action_t = now
+        if action == "up":
+            self.scale_ups += 1
+        elif action == "down":
+            self.scale_downs += 1

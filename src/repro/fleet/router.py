@@ -1,0 +1,87 @@
+"""SLO-aware request routing over the replica pool.
+
+Policies (pick with ``RouterConfig.policy``):
+
+  * ``least_loaded`` — send to the replica owing the fewest decode tokens
+    (ties broken toward fewer queued requests, then lower id).  Cheap and
+    close to optimal under uniform request shapes.
+  * ``least_eta`` — shortest-expected-TTFT: rank replicas by the engine's
+    queue-aware TTFT estimate plus any provisioning delay and in-flight
+    chunk tail (`ServeReplica.eta_s`).  Better under mixed lengths, since a
+    short queue of long requests can be worse than a long queue of short
+    ones.
+  * ``round_robin`` — the classic strawman, kept for comparisons.
+
+Admission backpressure: a replica whose engine already holds
+``max_queue_per_replica`` unfinished requests is not eligible; when no
+replica is eligible the router returns None and the service parks the
+request in its bounded wait queue (beyond that, requests are *dropped* and
+reported — open-loop traffic does not magically slow down because the fleet
+is full).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.fleet.replica import ServeReplica
+from repro.fleet.traffic import FleetRequest
+
+POLICIES = ("least_loaded", "least_eta", "round_robin")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    policy: str = "least_loaded"
+    max_queue_per_replica: int = 16     # unfinished requests per engine
+    default_chunk_s: float = 0.05       # ETA prior before latency samples
+
+    def __post_init__(self):
+        assert self.policy in POLICIES, self.policy
+        assert self.max_queue_per_replica >= 1
+
+
+class Router:
+    def __init__(self, cfg: Optional[RouterConfig] = None):
+        self.cfg = cfg or RouterConfig()
+        self.routed = 0
+        self.rerouted = 0               # migration re-dispatches
+        self._rr = 0
+
+    def eligible(self, replicas: List[ServeReplica]) -> List[ServeReplica]:
+        return [r for r in replicas
+                if r.accepting and r.depth < self.cfg.max_queue_per_replica]
+
+    def pick(self, replicas: List[ServeReplica],
+             now: float) -> Optional[ServeReplica]:
+        """Choose a replica for the next request, or None (backpressure)."""
+        cands = self.eligible(replicas)
+        if not cands:
+            return None
+        if self.cfg.policy == "round_robin":
+            chosen = cands[self._rr % len(cands)]
+            self._rr += 1
+            return chosen
+        if self.cfg.policy == "least_eta":
+            # price fresh replicas with the fleet-wide observed chunk cost,
+            # not the static prior — otherwise a cold (sample-free) replica
+            # can rank worse than a warm loaded one by prior mismatch alone
+            emas = [e for e in (r.session.chunk_time_ema(0.0)
+                                for r in cands if r.alive) if e > 0.0]
+            prior = (sum(emas) / len(emas)) if emas \
+                else self.cfg.default_chunk_s
+            return min(cands, key=lambda r: (r.eta_s(now, prior), r.rep_id))
+        return min(cands, key=lambda r: (
+            r.tokens_owed(), r.depth, r.rep_id))
+
+    def route(self, req: FleetRequest, replicas: List[ServeReplica],
+              now: float) -> Optional[ServeReplica]:
+        """Dispatch `req` to the chosen replica; None means backpressure."""
+        chosen = self.pick(replicas, now)
+        if chosen is None:
+            return None
+        chosen.dispatch(req)
+        self.routed += 1
+        if req.migrations:
+            self.rerouted += 1
+        return chosen

@@ -1,0 +1,466 @@
+"""`FleetService` — many slices, one service.
+
+The fleet event loop turns a pool of serve replicas (each a `Slice` of one
+`Supercomputer` running the PR-3 `ServeEngine` fast path) into a single
+SLO-tracked service in front of open-loop traffic:
+
+    traffic.generate(spec)  ──►  Router ──► ServeReplica ──► Slice/Engine
+                                   ▲            │
+                         Autoscaler┘            └── Supercomputer.allocate/free
+
+Time is *virtual*: every replica chunk costs its measured wall latency (or
+a fixed ``chunk_s`` in deterministic mode) on the fleet clock, and replicas
+overlap in virtual time because they are independent slices of the modeled
+machine — the container serializes compute the hardware would run in
+parallel.  Tokens, outputs and queue dynamics are all real.
+
+Failure path (§2.3 at fleet level): `Supercomputer.fail_block` on a serving
+slice propagates a `SliceEvent` into the replica's session; with no spare
+the slice is LOST, the service (subscribed machine-wide) evacuates the
+replica's in-flight requests and re-routes them to survivors, where their
+already-decoded tokens are re-prefilled as context.  The service keeps
+serving; only capacity shrinks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.cluster.slices import Slice, SliceEvent
+from repro.cluster.supercomputer import Supercomputer
+from repro.configs.base import ModelConfig
+from repro.fleet.autoscaler import Autoscaler, AutoscalerConfig
+from repro.fleet.replica import (ACTIVE, DEAD, DRAINING, FREED,
+                                 PROVISIONING, ServeReplica)
+from repro.fleet.router import Router, RouterConfig
+from repro.fleet.traffic import FleetRequest
+from repro.serve.engine import ServeEngine, SliceSpec, _pct
+
+Geometry = Union[int, Tuple[int, int, int]]
+FailPlan = Sequence[Tuple[float, Union[int, str]]]   # (virtual_t, block)
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """What one traffic scenario did to the fleet."""
+    offered: int
+    completed: int
+    dropped: int
+    migrated: int                   # requests that survived a replica death
+    tokens_served: int
+    tokens_offered: int
+    makespan_s: float               # virtual: first arrival -> last completion
+    aggregate_tokens_per_s: float   # tokens_served / makespan
+    p50_ttft_s: float
+    p95_ttft_s: float
+    slo_attainment: float           # SLO-met completions / offered
+    served_goodput: float           # tokens_served / tokens_offered
+    slo_goodput: float              # tokens of SLO-met requests / offered
+    scale_ups: int
+    scale_downs: int
+    failures: int                   # fail_block hits on fleet slices
+    replicas_seen: int
+    replica_stats: List[Dict[str, Any]]
+    log: List[str]
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.pop("log")
+        d.pop("replica_stats")
+        return d
+
+
+class FleetService:
+    def __init__(self, sc: Supercomputer, model_cfg: ModelConfig, params,
+                 spec: Optional[SliceSpec] = None, *,
+                 geometry: Geometry = (4, 4, 4),
+                 initial_replicas: int = 1,
+                 router: Optional[RouterConfig] = None,
+                 autoscale: Optional[AutoscalerConfig] = None,
+                 timing: Union[str, float] = "measured",
+                 max_wait_queue: int = 256,
+                 ttft_window_s: float = 2.0):
+        assert model_cfg.family != "audio", \
+            "fleet serving rides the fast path; the whisper enc-dec " \
+            "family has no per-slot cache insert yet"
+        self.sc = sc
+        self.cfg = model_cfg
+        self.params = params
+        self.spec = spec or SliceSpec()
+        self.geometry = geometry
+        self.router = Router(router)
+        self.autoscaler = Autoscaler(autoscale) if autoscale else None
+        self.chunk_s: Optional[float] = (
+            None if timing == "measured" else float(timing))
+        self.max_wait_queue = max_wait_queue
+        self.ttft_window_s = ttft_window_s
+
+        self.replicas: List[ServeReplica] = []
+        self.retired: List[ServeReplica] = []   # freed/dead, stats only
+        self.wait: deque = deque()
+        self.requests: List[FleetRequest] = []
+        self.log: List[str] = []
+        self.now = 0.0
+        self.failures = 0
+        self.failed_blocks: List[int] = []
+        self._next_rep = 0
+        self._by_job: Dict[int, ServeReplica] = {}
+        self._ttfts: deque = deque()          # (t_done, ttft) window
+        self._warmed = False
+        sc.subscribe(self._on_machine_event)
+        if self.autoscaler:
+            initial_replicas = max(initial_replicas,
+                                   self.autoscaler.cfg.min_replicas)
+        for _ in range(initial_replicas):
+            self._scale_up(0.0, provision_s=0.0)
+
+    # -- pool management ------------------------------------------------------
+
+    def _log(self, msg: str) -> None:
+        self.log.append(f"[t={self.now:8.3f}s] {msg}")
+
+    def _scale_up(self, now: float, *,
+                  provision_s: Optional[float] = None
+                  ) -> Optional[ServeReplica]:
+        """Add capacity: reuse a draining replica when one exists (pure
+        bookkeeping, no OCS programming), else allocate a fresh slice."""
+        for r in self.replicas:
+            if r.state == DRAINING:
+                r.undrain()
+                self._log(f"scale-up: undrained replica {r.rep_id}")
+                return r
+        sl = self.sc.allocate(self.geometry, required=False)
+        if sl is None:
+            self._log("scale-up: machine full, allocation deferred")
+            return None
+        session = sl.serve(self.cfg, self.params, self.spec)
+        if provision_s is None:
+            provision_s = (self.autoscaler.cfg.provision_s
+                           if self.autoscaler else 0.0)
+        rep = ServeReplica(self._next_rep, sl, session, now=now,
+                           provision_s=provision_s, chunk_s=self.chunk_s)
+        self._next_rep += 1
+        self.replicas.append(rep)
+        self._by_job[sl.job_id] = rep
+        self._log(f"scale-up: replica {rep.rep_id} on job{sl.job_id} "
+                  f"blocks={sl.blocks} (ready t+{provision_s:.2f}s)")
+        return rep
+
+    def _scale_down(self, victim: ServeReplica) -> None:
+        victim.drain()
+        self._log(f"scale-down: draining replica {victim.rep_id} "
+                  f"(depth={victim.depth})")
+
+    def _free_drained(self) -> None:
+        for r in self.replicas:
+            if r.drained:
+                self._log(f"freed replica {r.rep_id} (drained)")
+                r.free()
+        # retire freed/dead replicas: a long-lived service must not keep
+        # every past replica's engine (and its device KV cache) alive, nor
+        # iterate them on every routing decision — retire() snapshots the
+        # stats and drops the session/slice references
+        gone = [r for r in self.replicas if r.state in (FREED, DEAD)]
+        if gone:
+            for r in gone:
+                self._by_job.pop(r.slice.job_id, None)
+                r.retire()
+            self.retired.extend(gone)
+            self.replicas = [r for r in self.replicas
+                             if r.state not in (FREED, DEAD)]
+
+    @property
+    def live_replicas(self) -> List[ServeReplica]:
+        return [r for r in self.replicas
+                if r.state in (PROVISIONING, ACTIVE, DRAINING)]
+
+    def close(self) -> None:
+        """Shut the service down: free every replica (each must owe no
+        work — `ServeReplica.free` enforces it) and detach from the
+        machine's event stream, so a long-lived `Supercomputer` hosting
+        successive services does not accumulate dead subscribers."""
+        for r in list(self.replicas):
+            if r.state in (PROVISIONING, ACTIVE, DRAINING):
+                r.free()
+        self._free_drained()        # retires the freed replicas
+        self.sc.unsubscribe(self._on_machine_event)
+
+    # -- failure integration --------------------------------------------------
+
+    def _on_machine_event(self, sl: Slice, ev: SliceEvent) -> None:
+        rep = self._by_job.get(sl.job_id)
+        if rep is None:
+            return
+        if ev.kind == "lost":
+            self.failures += 1
+            orphans = rep.evacuate()
+            self._log(f"replica {rep.rep_id} LOST ({ev.detail}); "
+                      f"re-routing {len(orphans)} in-flight requests")
+            # orphans jump the wait queue: they have already waited once
+            for req in reversed(orphans):
+                self.wait.appendleft(req)
+            self._by_job.pop(sl.job_id, None)
+        elif ev.kind == "reconfigure":
+            self.failures += 1
+            self._log(f"replica {rep.rep_id} reconfigured around a failed "
+                      f"block ({ev.circuits_moved} circuits, "
+                      f"{ev.downtime_s * 1e3:.0f}ms stall)")
+
+    def _resolve_block(self, spec: Union[int, str]) -> Optional[int]:
+        """Fail-plan target: a raw block id, "replica:<id>" (first block of
+        that replica's slice), "busiest" (first block of the alive replica
+        owing the most work), or "spare" (a healthy free block — burn it to
+        force the next failure into the no-spare LOST path) — all resolved
+        at fire time."""
+        if isinstance(spec, int):
+            return spec
+        if spec == "spare":
+            spares = sorted(self.sc.scheduler.free & self.sc.scheduler.healthy)
+            return spares[0] if spares else None
+        if spec == "busiest":
+            alive = [r for r in self.replicas
+                     if r.alive and r.state != PROVISIONING]
+            if not alive:
+                return None
+            busiest = max(alive, key=lambda r: (r.tokens_owed(), r.depth,
+                                                -r.rep_id))
+            return busiest.slice.blocks[0]
+        rep_id = int(str(spec).split(":", 1)[1])
+        for r in self.replicas:
+            if r.rep_id == rep_id and r.alive:
+                return r.slice.blocks[0]
+        return None
+
+    # -- dispatch -------------------------------------------------------------
+
+    def _admit_or_wait(self, req: FleetRequest) -> None:
+        if self.router.route(req, self.replicas, self.now) is not None:
+            return
+        if len(self.wait) < self.max_wait_queue:
+            self.wait.append(req)
+        else:
+            req.status = "dropped"
+            self._log(f"DROP req{req.fid} (wait queue full)")
+
+    def _flush_wait(self) -> None:
+        while self.wait:
+            if self.router.route(self.wait[0], self.replicas,
+                                 self.now) is None:
+                break
+            self.wait.popleft()
+
+    def _window_p95_ttft(self) -> Optional[float]:
+        # keyed on COMPLETION time, evicted by filtering: completions from
+        # different replicas append out of order in measured-timing mode,
+        # so front-only eviction could trap stale samples behind new ones
+        cutoff = self.now - self.ttft_window_s
+        if self._ttfts:
+            self._ttfts = deque((t, v) for t, v in self._ttfts
+                                if t >= cutoff)
+        if not self._ttfts:
+            return None
+        return _pct([v for _, v in self._ttfts], 95)
+
+    def _tick_autoscaler(self) -> None:
+        assert self.autoscaler is not None
+        action, victim = self.autoscaler.decide(
+            self.now, self.replicas, len(self.wait),
+            self._window_p95_ttft())
+        if action == "up":
+            if self._scale_up(self.now) is not None:
+                self.autoscaler.record("up", self.now)
+        elif action == "down":
+            self._scale_down(victim)
+            self.autoscaler.record("down", self.now)
+
+    def warmup(self) -> None:
+        """Compile the shared serving programs outside virtual time: one
+        throwaway engine (no slice) runs a request end-to-end, so replica
+        chunk latencies never include compile."""
+        if self._warmed:
+            return
+        eng = ServeEngine(self.cfg, self.params, self.spec)
+        eng.submit(np.arange(4, dtype=np.int32),
+                   max_new_tokens=self.spec.chunk + 1)
+        eng.run(max_steps=4 * self.spec.chunk)
+        self._warmed = True
+
+    # -- the event loop -------------------------------------------------------
+
+    def run(self, requests: Sequence[FleetRequest], *,
+            fail_plan: Optional[FailPlan] = None,
+            repair_plan: Optional[FailPlan] = None,
+            settle_s: float = 0.0,
+            max_iters: int = 200_000) -> FleetReport:
+        """Serve one arrival trace to completion (plus ``settle_s`` virtual
+        seconds of autoscaler cool-down, so drains/frees become visible).
+
+        ``fail_plan``/``repair_plan`` inject `fail_block`/`repair_block`
+        calls at virtual times; a repair target of ``"last_failed"``
+        resolves to the most recently failed block at fire time, so a
+        scenario can kill a serving block and later hand it back for the
+        autoscaler to reclaim."""
+        if self.chunk_s is None:
+            self.warmup()
+        arrivals = sorted(requests, key=lambda r: (r.t_arrival, r.fid))
+        self.requests = list(arrivals)
+        fails = sorted(fail_plan or [], key=lambda f: f[0])
+        repairs = sorted(repair_plan or [], key=lambda f: f[0])
+        ai = fi = ri = 0
+        tick = self.autoscaler.cfg.tick_s if self.autoscaler else None
+        next_tick = 0.0 if tick else float("inf")
+        last_event_t = 0.0
+
+        def work_remaining() -> bool:
+            if (ai < len(arrivals) or fi < len(fails) or ri < len(repairs)
+                    or self.wait):
+                return True
+            return any(r.state in (PROVISIONING, ACTIVE, DRAINING)
+                       and r.session.engine.depth > 0
+                       for r in self.replicas)
+
+        for _ in range(max_iters):
+            # promote warmed-up replicas, release finished drains
+            for r in self.replicas:
+                if r.state == PROVISIONING and self.now >= r.ready_at:
+                    r.state = ACTIVE
+            self._free_drained()
+
+            if not work_remaining():
+                if (self.autoscaler is None
+                        or self.now >= last_event_t + settle_s):
+                    break
+                steady = (not any(r.state == DRAINING
+                                  for r in self.replicas)
+                          and len(self.live_replicas)
+                          <= self.autoscaler.cfg.min_replicas)
+                if steady:
+                    break
+                self.now = max(self.now, next_tick)
+                self._tick_autoscaler()
+                next_tick = self.now + tick
+                continue
+
+            # -- next event time ---------------------------------------------
+            cands: List[float] = []
+            if ai < len(arrivals):
+                cands.append(arrivals[ai].t_arrival)
+            if fi < len(fails):
+                cands.append(fails[fi][0])
+            if ri < len(repairs):
+                cands.append(repairs[ri][0])
+            starts = [s for s in (r.next_start() for r in self.replicas)
+                      if s is not None]
+            cands.extend(starts)
+            if tick:
+                # ticks run whenever the loop is alive: an idle gap before
+                # a distant repair must still drain surplus replicas
+                cands.append(next_tick)
+            # capacity can never return: no live replicas, no healthy free
+            # blocks, and no repairs left to change that — fail the
+            # stranded (and still-arriving) requests loudly instead of
+            # spinning ticks until max_iters
+            dead_end = (not self.live_replicas and ri >= len(repairs)
+                        and not (self.sc.scheduler.free
+                                 & self.sc.scheduler.healthy))
+            if not cands or (dead_end and (self.wait or ai < len(arrivals))):
+                stranded = list(self.wait) + arrivals[ai:]
+                self.wait.clear()
+                ai = len(arrivals)
+                for req in stranded:
+                    req.status = "dropped"
+                self._log(f"no capacity and no path to any: dropped "
+                          f"{len(stranded)} stranded requests")
+                break
+            self.now = max(self.now, min(cands))
+
+            # -- injected failures / repairs ---------------------------------
+            while fi < len(fails) and fails[fi][0] <= self.now:
+                block = self._resolve_block(fails[fi][1])
+                if block is None:
+                    # a scenario that declares a failure must see it land or
+                    # know it didn't — silent skips make benchmarks measure
+                    # something other than what they claim
+                    self._log(f"SKIPPED fail_block({fails[fi][1]!r}): "
+                              f"target did not resolve")
+                else:
+                    self._log(f"injecting fail_block({block})")
+                    self.failed_blocks.append(block)
+                    self.sc.fail_block(block)   # subscription handles rerouting
+                    last_event_t = self.now
+                fi += 1
+            while ri < len(repairs) and repairs[ri][0] <= self.now:
+                spec_b = repairs[ri][1]
+                ri += 1
+                if spec_b == "last_failed":
+                    if not self.failed_blocks:
+                        continue
+                    block = self.failed_blocks[-1]
+                else:
+                    block = self._resolve_block(spec_b)
+                if block is not None:
+                    self._log(f"repair_block({block})")
+                    self.sc.repair_block(block)
+                    last_event_t = self.now
+            # -- arrivals ----------------------------------------------------
+            while ai < len(arrivals) and arrivals[ai].t_arrival <= self.now:
+                self._admit_or_wait(arrivals[ai])
+                ai += 1
+            # -- autoscaler tick ---------------------------------------------
+            if tick and self.now >= next_tick:
+                self._tick_autoscaler()
+                next_tick = self.now + tick
+            # -- replica chunks ----------------------------------------------
+            for r in list(self.replicas):
+                if r.runnable(self.now):
+                    for done in r.step(self.now):
+                        self._ttfts.append((done.t_done, done.ttft_s))
+                        last_event_t = max(last_event_t, done.t_done)
+            # completions freed slots; drain the wait queue into them
+            self._flush_wait()
+        else:
+            raise RuntimeError(f"fleet loop did not converge in "
+                               f"{max_iters} iterations")
+        return self._report()
+
+    # -- reporting ------------------------------------------------------------
+
+    def _report(self) -> FleetReport:
+        reqs = self.requests
+        done = [r for r in reqs if r.status == "done"]
+        dropped = [r for r in reqs if r.status == "dropped"]
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        tokens = sum(len(r.out_tokens) for r in done)
+        offered_tok = sum(r.max_new_tokens for r in reqs)
+        t0 = min((r.t_arrival for r in reqs), default=0.0)
+        t1 = max((r.t_done for r in done if r.t_done), default=t0)
+        makespan = max(t1 - t0, 1e-9)
+        asc = self.autoscaler
+        return FleetReport(
+            offered=len(reqs),
+            completed=len(done),
+            dropped=len(dropped),
+            migrated=sum(1 for r in reqs if r.migrations > 0),
+            tokens_served=tokens,
+            tokens_offered=offered_tok,
+            makespan_s=round(makespan, 4),
+            aggregate_tokens_per_s=round(tokens / makespan, 2),
+            p50_ttft_s=round(_pct(ttfts, 50), 4),
+            p95_ttft_s=round(_pct(ttfts, 95), 4),
+            slo_attainment=round(
+                sum(1 for r in done if r.met_slo) / max(1, len(reqs)), 4),
+            served_goodput=round(tokens / max(1, offered_tok), 4),
+            slo_goodput=round(
+                sum(len(r.out_tokens) for r in done if r.met_slo)
+                / max(1, offered_tok), 4),
+            scale_ups=asc.scale_ups if asc else 0,
+            scale_downs=asc.scale_downs if asc else 0,
+            failures=self.failures,
+            replicas_seen=self._next_rep,
+            replica_stats=[r.stats()
+                           for r in self.retired + self.replicas],
+            log=list(self.log),
+        )

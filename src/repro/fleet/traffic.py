@@ -1,0 +1,183 @@
+"""Open-loop traffic generation: millions of users, container-sized.
+
+The fleet subsystem serves *offered* load — requests arrive on their own
+clock whether or not the fleet keeps up (open-loop, the honest way to
+measure serving systems; a closed loop would self-throttle and hide queueing
+collapse).  `generate` turns a `TrafficSpec` into a deterministic arrival
+trace of `FleetRequest`s:
+
+  * **arrival process** — homogeneous Poisson ("poisson"), on/off modulated
+    Poisson ("bursty": rate jumps `burst_x`-fold for `burst_len_s` every
+    `burst_period_s`), or a smooth day-curve ("diurnal": sinusoid between
+    trough and peak).  Non-constant rates are sampled by thinning, so every
+    pattern is exact, not binned.
+  * **mixed lengths** — prompt lengths are geometric-ish around a mean,
+    output lengths drawn from a discrete mix (chat-short / completion-long),
+    both clipped to the serving envelope.
+  * **per-request SLOs** — each request carries a time-to-first-token
+    deadline from its tier (interactive vs batch), so SLO attainment is a
+    first-class fleet metric rather than an afterthought.
+
+All timestamps are *virtual seconds* on the fleet clock (see
+`fleet.service`): replicas are independent slices of the machine, so their
+compute overlaps in virtual time even though the container serializes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOTier:
+    """One traffic class: a share of requests and its TTFT deadline."""
+    name: str
+    ttft_slo_s: float
+    share: float
+
+
+DEFAULT_TIERS: Tuple[SLOTier, ...] = (
+    SLOTier("interactive", ttft_slo_s=0.5, share=0.7),
+    SLOTier("batch", ttft_slo_s=4.0, share=0.3),
+)
+
+
+@dataclasses.dataclass(eq=False)
+class FleetRequest:
+    """One user request, tracked end-to-end across replicas.
+
+    ``eq=False`` for the same reason as `serve.engine.Request`: identity
+    semantics — the router moves these between queues and a value-`__eq__`
+    over ndarray prompts would break membership tests.
+
+    The lifecycle fields are owned by the fleet: ``status`` walks
+    pending -> queued -> done (or dropped), ``replicas`` records every
+    replica that held the request (len > 1 means it survived a failure or
+    drain migration), and ``out_tokens`` accumulates across migrations —
+    tokens decoded on a replica that later died are re-prefilled as context
+    on the survivor, never re-served to the user twice.
+    """
+    fid: int
+    t_arrival: float                    # virtual seconds
+    prompt: np.ndarray                  # (L,) int32
+    max_new_tokens: int
+    tier: str
+    ttft_slo_s: float
+    status: str = "pending"             # pending|queued|done|dropped
+    replicas: List[int] = dataclasses.field(default_factory=list)
+    migrations: int = 0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    t_first: Optional[float] = None     # virtual first-token time
+    t_done: Optional[float] = None      # virtual completion time
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_arrival
+
+    @property
+    def met_slo(self) -> bool:
+        t = self.ttft_s
+        return t is not None and t <= self.ttft_slo_s
+
+    @property
+    def remaining_tokens(self) -> int:
+        return max(0, self.max_new_tokens - len(self.out_tokens))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    """Knobs of one offered-load scenario."""
+    duration_s: float = 8.0
+    rate_rps: float = 4.0               # mean request rate (base rate)
+    pattern: str = "poisson"            # poisson | bursty | diurnal
+    # bursty: rate jumps to burst_x * rate_rps for burst_len_s every period
+    burst_x: float = 4.0
+    burst_period_s: float = 4.0
+    burst_len_s: float = 1.0
+    # diurnal: sinusoid between trough_frac*peak and peak, peak = rate_rps
+    trough_frac: float = 0.25
+    diurnal_period_s: float = 8.0
+    # request shapes
+    prompt_len_mean: float = 8.0
+    prompt_len_max: int = 16
+    new_tokens_choices: Tuple[int, ...] = (8, 16, 32)
+    new_tokens_weights: Tuple[float, ...] = (0.5, 0.35, 0.15)
+    tiers: Tuple[SLOTier, ...] = DEFAULT_TIERS
+    vocab_size: int = 256
+
+    def __post_init__(self):
+        assert self.pattern in ("poisson", "bursty", "diurnal"), self.pattern
+        assert abs(sum(t.share for t in self.tiers) - 1.0) < 1e-6, self.tiers
+        assert len(self.new_tokens_choices) == len(self.new_tokens_weights)
+
+    def rate_at(self, t: float) -> float:
+        """Instantaneous arrival rate (requests/virtual-second) at time t."""
+        if self.pattern == "poisson":
+            return self.rate_rps
+        if self.pattern == "bursty":
+            phase = t % self.burst_period_s
+            return (self.rate_rps * self.burst_x
+                    if phase < self.burst_len_s else self.rate_rps)
+        # diurnal: peak at period/2, trough at 0
+        lo = self.rate_rps * self.trough_frac
+        frac = 0.5 * (1.0 - np.cos(2 * np.pi * t / self.diurnal_period_s))
+        return lo + (self.rate_rps - lo) * frac
+
+    @property
+    def rate_max(self) -> float:
+        if self.pattern == "bursty":
+            return self.rate_rps * self.burst_x
+        return self.rate_rps
+
+    def mean_offered_tokens_per_s(self) -> float:
+        """Analytic mean decode-token demand (for capacity planning)."""
+        mean_new = float(np.dot(self.new_tokens_choices,
+                                self.new_tokens_weights))
+        ts = np.linspace(0, self.duration_s, 257)
+        mean_rate = float(np.mean([self.rate_at(t) for t in ts]))
+        return mean_rate * mean_new
+
+
+def generate(spec: TrafficSpec, seed: int = 0) -> List[FleetRequest]:
+    """Sample one arrival trace: exact non-homogeneous Poisson via thinning.
+
+    Deterministic in (spec, seed); requests come back sorted by arrival."""
+    rng = np.random.default_rng(seed)
+    lam_max = spec.rate_max
+    reqs: List[FleetRequest] = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / lam_max))
+        if t >= spec.duration_s:
+            break
+        if rng.random() * lam_max > spec.rate_at(t):
+            continue                        # thinned out
+        plen = int(np.clip(rng.geometric(1.0 / spec.prompt_len_mean),
+                           2, spec.prompt_len_max))
+        prompt = rng.integers(0, spec.vocab_size, size=plen,
+                              dtype=np.int32)
+        new = int(rng.choice(spec.new_tokens_choices,
+                             p=np.asarray(spec.new_tokens_weights)
+                             / sum(spec.new_tokens_weights)))
+        tier = spec.tiers[int(rng.choice(
+            len(spec.tiers), p=[ti.share for ti in spec.tiers]))]
+        reqs.append(FleetRequest(
+            fid=len(reqs), t_arrival=t, prompt=prompt, max_new_tokens=new,
+            tier=tier.name, ttft_slo_s=tier.ttft_slo_s))
+    return reqs
+
+
+def uniform_burst(n: int, *, new_tokens: int = 16, prompt_len: int = 8,
+                  ttft_slo_s: float = 10.0, vocab_size: int = 256,
+                  seed: int = 0, t_arrival: float = 0.0
+                  ) -> List[FleetRequest]:
+    """N identical-shape requests arriving at once — the uniform closed
+    batch used by the throughput-scaling gate and property tests."""
+    rng = np.random.default_rng(seed)
+    return [FleetRequest(
+        fid=i, t_arrival=t_arrival,
+        prompt=rng.integers(0, vocab_size, size=prompt_len, dtype=np.int32),
+        max_new_tokens=new_tokens, tier="uniform", ttft_slo_s=ttft_slo_s)
+        for i in range(n)]

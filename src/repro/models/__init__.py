@@ -1,0 +1,17 @@
+"""`repro.models` — the model zoo behind one family-dispatching API.
+
+``repro.models.api`` is the public surface: every family (dense, MoE, SSM,
+hybrid, audio, VLM, DLRM) answers the same init/forward/prefill/decode
+calls.  Family modules (`transformer`, `whisper`, `dlrm`, ...) stay
+importable for tests that poke internals.
+"""
+from repro.models import api
+from repro.models.api import (batch_specs, cache_insert, cache_specs,
+                              decode_n, decode_step, forward, init_cache,
+                              init_params, make_batch, prefill, prefill_slot)
+
+__all__ = [
+    "api", "batch_specs", "cache_insert", "cache_specs", "decode_n",
+    "decode_step", "forward", "init_cache", "init_params", "make_batch",
+    "prefill", "prefill_slot",
+]

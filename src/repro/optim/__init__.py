@@ -1,0 +1,6 @@
+"""`repro.optim` — Adam, LR schedules, gradient-norm utilities."""
+from repro.optim.adam import (OptState, apply, clip_by_global_norm,
+                              global_norm, init, lr_schedule)
+
+__all__ = ["OptState", "apply", "clip_by_global_norm", "global_norm",
+           "init", "lr_schedule"]

@@ -1,0 +1,4 @@
+"""`repro.serve` — continuous-batching serving engine (PR-3 fast path)."""
+from repro.serve.engine import Request, ServeEngine, SliceSpec
+
+__all__ = ["Request", "ServeEngine", "SliceSpec"]

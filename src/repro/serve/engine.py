@@ -35,8 +35,8 @@ prefill + per-token loop (its cache layout has no per-slot insert yet).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -90,23 +90,70 @@ def _pct(xs: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
+@functools.lru_cache(maxsize=32)
+def _fast_programs(cfg: ModelConfig, spec: SliceSpec, ctx: ParallelContext):
+    """The jit'd admission + chunked-decode programs for one serving shape.
+
+    Cached on the (frozen, hashable) config triple so every engine with the
+    same shape shares ONE compilation — a fleet scale-up brings a replica
+    online without recompiling, and N replicas cost one compile, not N.
+    ``params``/``cache`` stay call arguments, so the cache never pins model
+    weights."""
+    sample_key = jax.random.PRNGKey(spec.slots)
+
+    def _admit(params, cache, batch, slots_, rids, seq_lens, last, salt):
+        with activate(ctx):
+            logits, cache = api.prefill_slot(
+                cfg, params, batch, cache, slots_, ctx, max_len=spec.max_len)
+        # cached rows include the vision prefix for VLMs — the
+        # text-token count alone would mask out valid prompt KV
+        prefilled = batch["tokens"].shape[1] + (cfg.vision_prefix or 0)
+        if spec.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            # first token follows the same (salt, position) key scheme as
+            # decode_n; decode positions start at prefilled+1, so the
+            # streams never collide
+            keys = jax.vmap(lambda b: jax.random.fold_in(
+                jax.random.fold_in(sample_key, b), prefilled))(rids)
+            nxt = jax.vmap(jax.random.categorical)(
+                keys, logits).astype(jnp.int32)
+        seq_lens = seq_lens.at[slots_].set(prefilled)
+        last = last.at[slots_].set(nxt)
+        salt = salt.at[slots_].set(rids)
+        return nxt, cache, seq_lens, last, salt
+
+    def _decode(params, cache, tokens, seq_lens, budget, key, salt,
+                num_steps):
+        with activate(ctx):
+            return api.decode_n(
+                cfg, params, cache, tokens, seq_lens, budget, ctx,
+                num_steps=num_steps, greedy=spec.greedy, key=key, salt=salt)
+
+    return (jax.jit(_admit, donate_argnums=(1,)),
+            jax.jit(_decode, donate_argnums=(1,), static_argnums=(7,)))
+
+
+@functools.lru_cache(maxsize=8)
+def _legacy_programs(cfg: ModelConfig, spec: SliceSpec,
+                     ctx: ParallelContext):
+    """Full-batch prefill + per-token decode (whisper enc-dec cache)."""
+
+    def _prefill(params, batch):
+        with activate(ctx):
+            return api.prefill(cfg, params, batch, ctx, max_len=spec.max_len)
+
+    def _decode(params, cache, tokens):
+        with activate(ctx):
+            return api.decode_step(cfg, params, cache, tokens, ctx)
+
+    return jax.jit(_prefill), jax.jit(_decode, donate_argnums=(1,))
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params,
                  spec: Optional[SliceSpec] = None, *,
-                 ctx: ParallelContext = LOCAL,
-                 slots: Optional[int] = None,
-                 max_len: Optional[int] = None,
-                 prompt_len: Optional[int] = None,
-                 greedy: Optional[bool] = None):
-        legacy = {k: v for k, v in dict(
-            slots=slots, max_len=max_len, prompt_len=prompt_len,
-            greedy=greedy).items() if v is not None}
-        if legacy:
-            warnings.warn(
-                "ServeEngine(slots=/max_len=/prompt_len=/greedy=) is "
-                "deprecated; pass a SliceSpec", DeprecationWarning,
-                stacklevel=2)
-            spec = dataclasses.replace(spec or SliceSpec(), **legacy)
+                 ctx: ParallelContext = LOCAL):
         spec = spec or SliceSpec()
         self.cfg = cfg
         self.params = params
@@ -118,6 +165,10 @@ class ServeEngine:
         self.greedy = spec.greedy
         self.queue: List[Request] = []        # every request, for stats
         self.pending: List[Request] = []      # submitted, not yet admitted
+        self._next_rid = 0                    # monotonic: queue length would
+                                              # recycle rids after an
+                                              # export_inflight, colliding
+                                              # sampling salts / fleet keys
         self.active: List[Optional[Request]] = [None] * spec.slots
         self.cache = None
         self.last_tokens = jnp.zeros((spec.slots,), jnp.int32)
@@ -126,6 +177,7 @@ class ServeEngine:
         # so distinct requests reusing a slot draw decorrelated streams
         self.sample_salt = jnp.zeros((spec.slots,), jnp.int32)
         self.chunk_lat_s: List[float] = []
+        self._chunk_ema: Optional[float] = None   # O(1) running latency EMA
         self._steps = 0
         self._sample_key = jax.random.PRNGKey(spec.slots)
         # whisper's enc-dec cache has no per-slot insert; it keeps the
@@ -133,61 +185,16 @@ class ServeEngine:
         self._fast = cfg.family != "audio"
 
         if self._fast:
-            def _admit(params, cache, batch, slots_, rids, seq_lens, last,
-                       salt):
-                with activate(ctx):
-                    logits, cache = api.prefill_slot(
-                        cfg, params, batch, cache, slots_, ctx,
-                        max_len=spec.max_len)
-                # cached rows include the vision prefix for VLMs — the
-                # text-token count alone would mask out valid prompt KV
-                prefilled = (batch["tokens"].shape[1]
-                             + (cfg.vision_prefix or 0))
-                if spec.greedy:
-                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                else:
-                    # first token follows the same (salt, position) key
-                    # scheme as decode_n; decode positions start at
-                    # prefilled+1, so the streams never collide
-                    keys = jax.vmap(lambda b: jax.random.fold_in(
-                        jax.random.fold_in(self._sample_key, b),
-                        prefilled))(rids)
-                    nxt = jax.vmap(jax.random.categorical)(
-                        keys, logits).astype(jnp.int32)
-                seq_lens = seq_lens.at[slots_].set(prefilled)
-                last = last.at[slots_].set(nxt)
-                salt = salt.at[slots_].set(rids)
-                return nxt, cache, seq_lens, last, salt
-
-            def _decode(params, cache, tokens, seq_lens, budget, key, salt,
-                        num_steps):
-                with activate(ctx):
-                    return api.decode_n(
-                        cfg, params, cache, tokens, seq_lens, budget, ctx,
-                        num_steps=num_steps, greedy=spec.greedy, key=key,
-                        salt=salt)
-
-            self._admit_fn = jax.jit(_admit, donate_argnums=(1,))
-            self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
-                                      static_argnums=(7,))
+            self._admit_fn, self._decode_fn = _fast_programs(cfg, spec, ctx)
         else:
-            def _prefill(params, batch):
-                with activate(ctx):
-                    return api.prefill(cfg, params, batch, ctx,
-                                       max_len=spec.max_len)
-
-            def _decode(params, cache, tokens):
-                with activate(ctx):
-                    return api.decode_step(cfg, params, cache, tokens, ctx)
-
-            self._prefill = jax.jit(_prefill)
-            self._decode = jax.jit(_decode, donate_argnums=(1,))
+            self._prefill, self._decode = _legacy_programs(cfg, spec, ctx)
 
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
-        r = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+        r = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=max_new_tokens, t_submit=time.time())
+        self._next_rid += 1
         self.queue.append(r)
         self.pending.append(r)
         return r
@@ -267,7 +274,7 @@ class ServeEngine:
             jnp.asarray(budgets), self._sample_key, self.sample_salt,
             num_steps)
         toks = np.asarray(toks)                      # (num_steps, B) — syncs
-        self.chunk_lat_s.append(time.perf_counter() - t0)
+        self._record_latency(time.perf_counter() - t0)
         self._steps += num_steps
         now = time.time()
         for i, r in enumerate(self.active):
@@ -282,6 +289,104 @@ class ServeEngine:
     def _n_active(self) -> int:
         return sum(1 for r in self.active
                    if r is not None and not r.done)
+
+    # -- fleet introspection / migration --------------------------------------
+    # The queue-depth/ETA surface the fleet router reads every scheduling
+    # decision, and the in-flight export the fleet uses to move requests off
+    # a dying replica.  All host-side: no device sync.
+
+    @property
+    def n_active(self) -> int:
+        """Requests currently occupying decode slots (not yet done)."""
+        return self._n_active()
+
+    @property
+    def n_pending(self) -> int:
+        """Requests submitted but not yet admitted to a slot."""
+        return len(self.pending)
+
+    @property
+    def free_slots(self) -> int:
+        return sum(1 for r in self.active if r is None or r.done)
+
+    @property
+    def depth(self) -> int:
+        """Total requests this engine still owes work to."""
+        return self.n_active + self.n_pending
+
+    def tokens_owed(self) -> int:
+        """Decode tokens still owed across active + pending requests."""
+        owed = int(self._budgets().sum())
+        owed += sum(r.max_new_tokens for r in self.pending)
+        return owed
+
+    def chunk_time_ema(self, default: float = 0.05) -> float:
+        """Smoothed per-dispatch latency (seconds), maintained O(1) per
+        chunk — the router reads this per routing decision."""
+        return default if self._chunk_ema is None else self._chunk_ema
+
+    def _record_latency(self, lat: float) -> None:
+        self.chunk_lat_s.append(lat)
+        # `run` resets the list per batch, but a fleet replica steps chunk
+        # by chunk for the service's lifetime — bound the history so a
+        # long-lived engine doesn't leak (EMA carries the tail)
+        if len(self.chunk_lat_s) > 4096:
+            del self.chunk_lat_s[:2048]
+        self._chunk_ema = (lat if self._chunk_ema is None
+                           else 0.7 * self._chunk_ema + 0.3 * lat)
+
+    def expected_ttft_s(self, default_chunk_s: float = 0.05, *,
+                        chunk_time_s: Optional[float] = None) -> float:
+        """Heuristic TTFT estimate for the NEXT request submitted here: one
+        admission dispatch once a slot frees, queued behind the decode work
+        already owed (measured in chunk dispatches at the engine's smoothed
+        chunk latency — or at ``chunk_time_s`` when the caller accounts time
+        itself, e.g. the fleet's deterministic virtual clock).  The router's
+        shortest-expected-TTFT policy ranks replicas by this number."""
+        per_chunk = (chunk_time_s if chunk_time_s is not None
+                     else self.chunk_time_ema(default_chunk_s))
+        if self.free_slots > 0 and not self.pending:
+            return per_chunk                      # admit next dispatch
+        ahead = self.tokens_owed()
+        width = max(1, self.slots) * max(1, self.spec.chunk)
+        waves = 1.0 + ahead / width
+        return per_chunk * waves
+
+    def step_chunk(self) -> int:
+        """Admit + advance ONE decode chunk (`spec.chunk` steps); returns the
+        number of still-active requests.  The single-dispatch quantum fleet
+        replicas advance by — same dataflow as `run`, externally paced."""
+        if self._fast:
+            self._admit()
+            if self._n_active() == 0:
+                return 0
+            self._decode_chunk(self.spec.chunk)
+            return self._n_active()
+        self._admit()
+        n = 0
+        for _ in range(self.spec.chunk):
+            n = self.step()
+            if n == 0:
+                break
+        return n
+
+    def export_inflight(self) -> List[Request]:
+        """Remove and return every request still owed tokens (admitted and
+        pending), clearing their slots.  Used when a slice dies under the
+        engine: the survivors re-prefill ``prompt + out_tokens`` and generate
+        the remainder, so no request is lost with its replica.  Exported
+        requests leave `queue` too — this engine's stats no longer own them."""
+        moved: List[Request] = []
+        for i, r in enumerate(self.active):
+            if r is not None and not r.done:
+                moved.append(r)
+            self.active[i] = None
+        moved.extend(self.pending)
+        self.pending = []
+        for r in moved:
+            if r in self.queue:
+                self.queue.remove(r)
+        return moved
 
     def step(self) -> int:
         """One decode step over all slots; returns #active requests.
@@ -387,7 +492,7 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, self.cache, self.last_tokens)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self.chunk_lat_s.append(time.perf_counter() - t0)
+        self._record_latency(time.perf_counter() - t0)
         self._steps += 1
         n_active = 0
         now = time.time()

@@ -1,0 +1,9 @@
+"""`repro.train` — fault-tolerant training: `Trainer` + checkpointing.
+
+The PR-1 `run_fault_drill` compatibility wrapper is gone (PR 4); drive the
+§2.3 drill through `repro.cluster`: ``slice.train(run, steps, fail_at=k)``.
+"""
+from repro.train import checkpoint
+from repro.train.trainer import Trainer, TrainerState
+
+__all__ = ["Trainer", "TrainerState", "checkpoint"]

@@ -125,7 +125,7 @@ class Trainer:
         step = state.step
         while step < num_steps:
             if fail_at is not None and step == fail_at:
-                # -- simulated block failure (train/fault.py drives this)
+                # -- simulated block failure (TrainSession.run drives this)
                 if scheduler is not None and job_id is not None:
                     blk = scheduler.jobs[job_id].blocks[0]
                     scheduler.fail_block(blk)

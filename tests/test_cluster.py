@@ -245,16 +245,12 @@ class TestTrainServe:
 
 
 class TestServeEngineShim:
-    def test_legacy_kwargs_warn_and_map_to_spec(self, served_params):
+    def test_legacy_kwargs_raise_typeerror(self, served_params):
+        """PR-4 removed the PR-1 kwargs shim: only SliceSpec constructs."""
         cfg, params = served_params
         from repro.serve.engine import ServeEngine
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            eng = ServeEngine(cfg, params, slots=2, max_len=48,
-                              prompt_len=8)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-        assert eng.spec == SliceSpec(slots=2, max_len=48, prompt_len=8)
-        assert eng.slots == 2 and eng.max_len == 48
+        with pytest.raises(TypeError):
+            ServeEngine(cfg, params, slots=2, max_len=48, prompt_len=8)
 
     def test_spec_construction_no_warning(self, served_params):
         cfg, params = served_params

@@ -1,0 +1,358 @@
+"""Fleet serving invariants: conservation, drain-before-free, scaling.
+
+The heavyweight guarantees of `repro.fleet`:
+
+  * **conservation** — every submitted request completes exactly once or is
+    reported dropped, including across replica failure and drain
+    (migrated requests finish on survivors with their full token budget);
+  * **drain-before-free** — the autoscaler never frees a replica that still
+    owes tokens (`ServeReplica.free` hard-errors, and full autoscaled runs
+    finish without tripping it);
+  * **throughput scaling** — N replicas deliver ≥ 0.9·N× one replica's
+    aggregate tokens/s on uniform load (virtual time, fixed chunk cost).
+
+Deterministic mode (``timing=<float>``) replaces measured chunk latency
+with a constant on the virtual clock, so these tests are exact and fast
+while still decoding real tokens through the real engines.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.cluster import SliceError, SliceSpec, Supercomputer
+from repro.configs import registry
+from repro.core.goodput import goodput_ocs, goodput_static, served_goodput
+from repro.fleet import (Autoscaler, AutoscalerConfig, FleetService,
+                         ReplicaError, RouterConfig, TrafficSpec, generate,
+                         uniform_burst)
+from repro.models import api
+
+CHUNK_S = 0.01                      # fixed virtual chunk cost (deterministic)
+SPEC = SliceSpec(slots=2, max_len=48, prompt_len=8, chunk=4)
+
+
+_MODEL = {}
+
+
+def _model():
+    """Module-memoized tiny model (plain function so the hypothesis-shim
+    property tests can use it too — the shim can't mix fixtures with
+    strategy arguments)."""
+    if "m" not in _MODEL:
+        cfg = registry.get_reduced("olmo-1b")
+        _MODEL["m"] = (cfg, api.init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODEL["m"]
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return _model()
+
+
+def _service(small_model, *, num_blocks=8, replicas=1, autoscale=None,
+             router=None, timing=CHUNK_S, **kw):
+    cfg, params = small_model
+    sc = Supercomputer(num_blocks=num_blocks)
+    return sc, FleetService(sc, cfg, params, SPEC, geometry=(4, 4, 4),
+                            initial_replicas=replicas, autoscale=autoscale,
+                            router=router, timing=timing, **kw)
+
+
+def _assert_conserved(requests, report):
+    """Every request terminal exactly once; done => full token budget."""
+    assert report.completed + report.dropped == len(requests)
+    for r in requests:
+        assert r.status in ("done", "dropped"), (r.fid, r.status)
+        if r.status == "done":
+            assert len(r.out_tokens) == r.max_new_tokens, \
+                (r.fid, len(r.out_tokens), r.max_new_tokens)
+            assert r.t_first is not None and r.t_done is not None
+            assert r.t_arrival <= r.t_first <= r.t_done
+        else:
+            assert r.t_done is None
+
+
+class TestTraffic:
+    def test_deterministic_and_sorted(self):
+        spec = TrafficSpec(duration_s=4.0, rate_rps=6.0, pattern="bursty")
+        a, b = generate(spec, seed=3), generate(spec, seed=3)
+        assert len(a) == len(b) > 0
+        assert all(x.t_arrival == y.t_arrival for x, y in zip(a, b))
+        ts = [r.t_arrival for r in a]
+        assert ts == sorted(ts)
+        assert all(0 <= t < spec.duration_s for t in ts)
+
+    def test_mean_rate_tracks_spec(self):
+        spec = TrafficSpec(duration_s=50.0, rate_rps=8.0)
+        n = len(generate(spec, seed=0))
+        assert abs(n - 400) < 100          # ~4 sigma for Poisson(400)
+
+    def test_bursty_rate_peaks(self):
+        spec = TrafficSpec(pattern="bursty", rate_rps=2.0, burst_x=5.0,
+                           burst_period_s=4.0, burst_len_s=1.0)
+        assert spec.rate_at(0.5) == 10.0
+        assert spec.rate_at(2.0) == 2.0
+        assert spec.rate_max == 10.0
+
+    def test_diurnal_rate_between_trough_and_peak(self):
+        spec = TrafficSpec(pattern="diurnal", rate_rps=8.0, trough_frac=0.25,
+                           diurnal_period_s=8.0)
+        assert np.isclose(spec.rate_at(0.0), 2.0)
+        assert np.isclose(spec.rate_at(4.0), 8.0)
+        for t in np.linspace(0, 8, 33):
+            assert 2.0 - 1e-9 <= spec.rate_at(t) <= 8.0 + 1e-9
+
+    def test_slo_tiers_assigned(self):
+        reqs = generate(TrafficSpec(duration_s=30.0, rate_rps=5.0), seed=1)
+        tiers = {r.tier for r in reqs}
+        assert tiers == {"interactive", "batch"}
+        assert all(r.ttft_slo_s > 0 for r in reqs)
+
+
+class TestRoutingConservation:
+    def test_uniform_load_all_complete(self, small_model):
+        _, svc = _service(small_model, replicas=2)
+        reqs = uniform_burst(8, new_tokens=6, prompt_len=6)
+        rep = svc.run(reqs)
+        _assert_conserved(reqs, rep)
+        assert rep.dropped == 0
+        assert rep.tokens_served == 8 * 6
+
+    def test_conserved_across_replica_failure(self, small_model):
+        """fail_block with no spares kills a replica mid-serve: its in-flight
+        requests must complete on the survivor, not error or vanish."""
+        sc, svc = _service(small_model, num_blocks=2, replicas=2)
+        reqs = uniform_burst(8, new_tokens=8, prompt_len=6)
+        rep = svc.run(reqs, fail_plan=[(2.5 * CHUNK_S, "replica:0")])
+        _assert_conserved(reqs, rep)
+        assert rep.dropped == 0, "survivor had headroom; nothing may drop"
+        assert rep.failures == 1
+        assert rep.migrated > 0, "the failed replica held in-flight work"
+        migrated = [r for r in reqs if r.migrations > 0]
+        assert all(len(r.replicas) >= 2 for r in migrated)
+        assert rep.slo_attainment > 0
+
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(min_value=3, max_value=10),
+           st.integers(min_value=1, max_value=7),
+           st.sampled_from(["least_loaded", "least_eta", "round_robin"]))
+    def test_conservation_property(self, n_requests, fail_chunk, policy):
+        """Random load size × failure timing × policy: requests are conserved
+        whether the failure lands during prefill waves, mid-decode, or after
+        the work already drained."""
+        cfg, params = _model()
+        sc = Supercomputer(num_blocks=2)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=(4, 4, 4),
+                           initial_replicas=2, timing=CHUNK_S,
+                           router=RouterConfig(policy=policy))
+        reqs = uniform_burst(n_requests, new_tokens=5, prompt_len=4,
+                             seed=n_requests)
+        rep = svc.run(reqs, fail_plan=[(fail_chunk * CHUNK_S, "replica:0")])
+        _assert_conserved(reqs, rep)
+        assert rep.dropped == 0
+
+    def test_stranded_requests_dropped_when_capacity_never_returns(
+            self, small_model):
+        """Every block dies with no repairs scheduled: even with an
+        autoscaler wanting to grow, the loop must terminate and report the
+        unfinishable requests as dropped — not spin ticks to max_iters."""
+        cfg, params = small_model
+        sc = Supercomputer(num_blocks=2)
+        svc = FleetService(
+            sc, cfg, params, SPEC, geometry=(4, 4, 4), initial_replicas=2,
+            timing=CHUNK_S,
+            autoscale=AutoscalerConfig(min_replicas=1, max_replicas=2,
+                                       tick_s=5 * CHUNK_S,
+                                       cooldown_s=10 * CHUNK_S,
+                                       provision_s=0.0))
+        reqs = uniform_burst(6, new_tokens=8, prompt_len=4)
+        rep = svc.run(reqs, fail_plan=[(1.5 * CHUNK_S, "replica:0"),
+                                       (2.5 * CHUNK_S, "replica:1")])
+        _assert_conserved(reqs, rep)
+        assert rep.dropped > 0
+        assert rep.failures == 2
+
+    def test_backpressure_drops_are_reported(self, small_model):
+        """Open-loop overload with a tiny wait queue: drops happen, are
+        counted, and completed+dropped still covers every request."""
+        _, svc = _service(small_model, replicas=1,
+                          router=RouterConfig(max_queue_per_replica=2),
+                          max_wait_queue=2)
+        reqs = uniform_burst(12, new_tokens=6, prompt_len=6)
+        rep = svc.run(reqs)
+        _assert_conserved(reqs, rep)
+        assert rep.dropped > 0
+        assert rep.served_goodput < 1.0
+
+
+class TestDrainBeforeFree:
+    def test_free_with_inflight_raises(self, small_model):
+        _, svc = _service(small_model, replicas=1)
+        rep = svc.replicas[0]
+        rep.dispatch(uniform_burst(1, new_tokens=4, prompt_len=4)[0])
+        with pytest.raises(ReplicaError):
+            rep.free()
+
+    def test_draining_session_rejects_submits(self, small_model):
+        _, svc = _service(small_model, replicas=1)
+        rep = svc.replicas[0]
+        rep.drain()
+        with pytest.raises(SliceError):
+            rep.session.submit(np.arange(4), max_new_tokens=2)
+
+    def test_autoscaled_run_never_frees_inflight(self, small_model):
+        """A full bursty autoscaled run exercises drain+free repeatedly;
+        `ServeReplica.free` raises on any in-flight work, so finishing
+        cleanly IS the invariant check — plus every freed slice went
+        through the drained state."""
+        # chunk cost 0.05s virtual => ~160 tok/s per replica; the bursts
+        # offer ~400 tok/s, so backlog forces scale-ups, and the quiet
+        # phases force drains
+        sc, svc = _service(
+            small_model, num_blocks=16, replicas=1, timing=0.05,
+            autoscale=AutoscalerConfig(min_replicas=1, max_replicas=3,
+                                       tick_s=0.05, cooldown_s=0.3,
+                                       scale_up_backlog=3.0,
+                                       scale_down_backlog=0.5,
+                                       provision_s=0.1))
+        trace = generate(TrafficSpec(
+            duration_s=4.0, rate_rps=4.0, pattern="bursty", burst_x=10.0,
+            burst_period_s=2.0, burst_len_s=0.5, prompt_len_max=8,
+            new_tokens_choices=(8, 16), new_tokens_weights=(0.6, 0.4)),
+            seed=2)
+        rep = svc.run(trace, settle_s=3.0)
+        _assert_conserved(trace, rep)
+        assert rep.scale_ups >= 1 and rep.scale_downs >= 1
+        freed = [r for r in svc.retired if r.state == "freed"]
+        assert freed, "scale-downs must have retired freed replicas"
+        for r in freed:
+            assert not r._assigned
+        # alloc/free visible at machine level
+        assert any(e.startswith("alloc") for e in sc.events)
+        assert any(e.startswith("release") for e in sc.events)
+
+
+class TestAutoscalerDecisions:
+    def test_scale_to_zero_holds_at_zero_when_idle(self):
+        """Regression: with scale_to_zero, an empty idle pool must HOLD —
+        the grow rule uses the same floor as the down rule, else the pair
+        oscillates allocate/free forever."""
+        asc = Autoscaler(AutoscalerConfig(min_replicas=1,
+                                          scale_to_zero=True))
+        action, victim = asc.decide(10.0, [], wait_len=0, p95_ttft_s=None)
+        assert action == "hold" and victim is None
+
+    def test_empty_pool_grows_on_backlog(self):
+        asc = Autoscaler(AutoscalerConfig(min_replicas=0,
+                                          scale_to_zero=True))
+        action, _ = asc.decide(0.0, [], wait_len=3, p95_ttft_s=None)
+        assert action == "up"
+
+    def test_floor_enforced_without_scale_to_zero(self):
+        asc = Autoscaler(AutoscalerConfig(min_replicas=2))
+        action, _ = asc.decide(0.0, [], wait_len=0, p95_ttft_s=None)
+        assert action == "up"
+
+
+class TestThroughputScaling:
+    def _tps(self, small_model, n_replicas, n_requests):
+        _, svc = _service(small_model, replicas=n_replicas)
+        reqs = uniform_burst(n_requests, new_tokens=8, prompt_len=6)
+        rep = svc.run(reqs)
+        _assert_conserved(reqs, rep)
+        assert rep.dropped == 0
+        return rep.aggregate_tokens_per_s
+
+    def test_two_replicas_scale(self, small_model):
+        one = self._tps(small_model, 1, 8)
+        two = self._tps(small_model, 2, 8)
+        assert two >= 0.9 * 2 * one, (one, two)
+
+    def test_four_replicas_scale(self, small_model):
+        one = self._tps(small_model, 1, 16)
+        four = self._tps(small_model, 4, 16)
+        assert four >= 0.9 * 4 * one, (one, four)
+
+
+class TestRouterPolicies:
+    def test_least_loaded_balances(self, small_model):
+        _, svc = _service(small_model, replicas=2)
+        reqs = uniform_burst(8, new_tokens=4, prompt_len=4)
+        svc.run(reqs)
+        first = [r.replicas[0] for r in reqs]
+        assert sorted(first.count(rep.rep_id)
+                      for rep in svc.replicas) == [4, 4]
+
+    def test_round_robin_alternates(self, small_model):
+        _, svc = _service(small_model, replicas=2,
+                          router=RouterConfig(policy="round_robin"))
+        reqs = uniform_burst(6, new_tokens=4, prompt_len=4)
+        svc.run(reqs)
+        first = [r.replicas[0] for r in reqs]
+        assert first == [0, 1, 0, 1, 0, 1]
+
+    def test_least_eta_prefers_idle_replica(self, small_model):
+        """A replica owing a long queue loses to an idle one under ETA."""
+        _, svc = _service(small_model, replicas=2,
+                          router=RouterConfig(policy="least_eta"))
+        r0, r1 = svc.replicas
+        for q in uniform_burst(4, new_tokens=16, prompt_len=4):
+            r0.dispatch(q)
+        assert r1.eta_s(0.0) < r0.eta_s(0.0)
+        assert svc.router.pick(svc.replicas, 0.0) is r1
+
+
+class TestServiceLifecycle:
+    def test_close_frees_replicas_and_unsubscribes(self, small_model):
+        cfg, params = small_model
+        sc = Supercomputer(num_blocks=8)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=(4, 4, 4),
+                           initial_replicas=2, timing=CHUNK_S)
+        reqs = uniform_burst(4, new_tokens=4, prompt_len=4)
+        svc.run(reqs)
+        n_subs = len(sc._subscribers)
+        svc.close()
+        assert len(sc._subscribers) == n_subs - 1
+        assert not svc.replicas and len(svc.retired) == 2
+        assert sc.utilization() == 0.0
+        # retired replicas keep stats but drop engine/cache references
+        for r in svc.retired:
+            assert r.session is None and r.slice is None
+            assert r.stats()["state"] == "freed"
+
+    def test_migration_within_prompt_window_is_not_truncated(self,
+                                                             small_model):
+        """SPEC.prompt_len=8 covers prompt(4)+new(5): the failure-migrated
+        continuations stay inside the re-prefill window."""
+        cfg, params = small_model
+        sc = Supercomputer(num_blocks=2)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=(4, 4, 4),
+                           initial_replicas=2, timing=CHUNK_S)
+        reqs = uniform_burst(6, new_tokens=5, prompt_len=3)
+        rep = svc.run(reqs, fail_plan=[(1.5 * CHUNK_S, "replica:0")])
+        _assert_conserved(reqs, rep)
+        stats = {s["rep_id"]: s for s in rep.replica_stats}
+        assert all(s["truncated_migrations"] == 0 for s in stats.values())
+
+
+class TestServedGoodput:
+    def test_demand_one_matches_scheduled(self):
+        for mode, sched in (("ocs", goodput_ocs), ("static", goodput_static)):
+            got = served_goodput(512, 0.99, 1.0, mode=mode, trials=300,
+                                 seed=0)
+            want = sched(512, 0.99, trials=300, seed=0)
+            assert np.isclose(got, want), (mode, got, want)
+
+    def test_low_demand_ocs_serves_everything(self):
+        assert served_goodput(512, 0.99, 0.25, trials=300) == 1.0
+
+    def test_monotone_in_demand(self):
+        vals = [served_goodput(3072, 0.99, d, trials=300)
+                for d in (0.25, 0.5, 0.75, 1.0)]
+        assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:])), vals
+
+    def test_ocs_beats_static_at_fleet_level(self):
+        ocs = served_goodput(512, 0.99, 0.75, mode="ocs", trials=200)
+        static = served_goodput(512, 0.99, 0.75, mode="static", trials=200)
+        assert ocs > static

@@ -1,11 +1,10 @@
-"""Regression tripwire for the ServeEngine legacy-kwarg shim.
+"""Pin the REMOVAL of the PR-1 ServeEngine legacy-kwarg shim.
 
 PR 1 redesigned ``ServeEngine`` around the ``SliceSpec`` value object and
-kept ``slots/max_len/prompt_len/greedy`` kwargs as a DeprecationWarning
-shim scheduled for removal (~PR 4).  These tests pin the shim's contract —
-the warning fires AND the resulting engine is indistinguishable from one
-built with the equivalent ``SliceSpec`` — so the removal PR trips here and
-must update call sites deliberately instead of silently changing behavior.
+kept ``slots/max_len/prompt_len/greedy`` kwargs behind a DeprecationWarning
+shim; PR 4 removed the shim.  These tests pin the new contract: the legacy
+kwargs now raise ``TypeError`` (no silent re-acceptance creeping back), and
+the ``SliceSpec`` path is the one true constructor, warning-free.
 """
 import warnings
 
@@ -24,40 +23,18 @@ def small_model():
     return cfg, params
 
 
-class TestLegacyKwargShim:
-    def test_deprecation_warning_fires(self, small_model):
-        cfg, params = small_model
-        with pytest.warns(DeprecationWarning,
-                          match="deprecated; pass a SliceSpec"):
-            ServeEngine(cfg, params, slots=2, max_len=64, prompt_len=16)
-
-    def test_each_legacy_kwarg_warns(self, small_model):
-        cfg, params = small_model
+class TestLegacyKwargsRemoved:
+    def test_each_legacy_kwarg_raises_typeerror(self):
+        # TypeError fires at call binding, before cfg/params are touched
         for kw in (dict(slots=2), dict(max_len=64), dict(prompt_len=16),
                    dict(greedy=False)):
-            with pytest.warns(DeprecationWarning):
-                ServeEngine(cfg, params, **kw)
+            with pytest.raises(TypeError):
+                ServeEngine(None, None, **kw)
 
-    def test_behavior_matches_slicespec(self, small_model):
-        """The shim must produce exactly the engine a SliceSpec produces."""
-        cfg, params = small_model
-        with pytest.warns(DeprecationWarning):
-            legacy = ServeEngine(cfg, params, slots=2, max_len=64,
-                                 prompt_len=16, greedy=True)
-        spec = SliceSpec(slots=2, max_len=64, prompt_len=16, greedy=True)
-        modern = ServeEngine(cfg, params, spec)
-        assert legacy.spec == modern.spec == spec
-        for attr in ("slots", "max_len", "prompt_len", "greedy"):
-            assert getattr(legacy, attr) == getattr(modern, attr)
-
-    def test_legacy_kwargs_override_given_spec(self, small_model):
-        """Explicit legacy kwargs layer on top of a passed spec (the
-        dataclasses.replace contract of the shim)."""
-        cfg, params = small_model
-        base = SliceSpec(slots=4, max_len=128, prompt_len=32)
-        with pytest.warns(DeprecationWarning):
-            eng = ServeEngine(cfg, params, base, slots=2)
-        assert eng.spec == SliceSpec(slots=2, max_len=128, prompt_len=32)
+    def test_combined_legacy_kwargs_raise_typeerror(self):
+        with pytest.raises(TypeError):
+            ServeEngine(None, None, slots=2, max_len=64, prompt_len=16,
+                        greedy=True)
 
     def test_slicespec_path_is_warning_free(self, small_model):
         cfg, params = small_model
@@ -66,3 +43,18 @@ class TestLegacyKwargShim:
             eng = ServeEngine(cfg, params, SliceSpec(slots=1, max_len=32,
                                                      prompt_len=8))
         assert eng.spec.slots == 1
+
+    def test_no_deprecation_shims_left_in_serve_or_train(self):
+        """The PR-4 acceptance bar: no DeprecationWarning machinery remains
+        anywhere under repro.serve or repro.train."""
+        import inspect
+
+        import repro.serve.engine as serve_engine
+        import repro.train.checkpoint as train_ckpt
+        import repro.train.trainer as train_trainer
+        for mod in (serve_engine, train_ckpt, train_trainer):
+            assert "DeprecationWarning" not in inspect.getsource(mod), mod
+
+    def test_run_fault_drill_wrapper_is_gone(self):
+        with pytest.raises(ModuleNotFoundError):
+            import repro.train.fault  # noqa: F401

