@@ -1,0 +1,258 @@
+"""Mixed train+serve tenancy benchmark -> BENCH_tenancy.json.
+
+Two arms run the SAME 4-block machine, diurnal serving trace, failure plan,
+and training tenant (same model, same global batch, same step target):
+
+  * **elastic** — the `cluster.tenancy` co-scheduler: the serving fleet
+    autoscales 1..3 replicas and *preempts* the training job when the
+    machine is full (priority + cooperative checkpoint/free through the
+    scheduler); training resumes at troughs on the largest geometry that
+    fits — up to 3 blocks when serving has drained, 1 block when squeezed.
+  * **static** — the fixed partition: serving owns 2 blocks (replica
+    replacement after repair, but no growth), training owns 2 blocks and
+    is never preempted.
+
+Both arms take the same mid-peak block loss with zero free blocks — the
+slice is LOST, in-flight requests migrate to the survivors — followed by a
+repair.  Gates:
+
+  * combined score (train_steps/target + serve SLO-goodput) — elastic must
+    beat static: it serves the peak with 3 replicas AND trains on 3 blocks
+    at the trough, which the static split cannot do;
+  * zero lost requests in both arms (migration worked);
+  * the elastic arm actually preempted AND resumed training;
+  * preempt → resume on a *different* slice geometry reproduces the
+    uninterrupted loss curve (max |Δloss| ≤ 1e-6 here; the bitwise pin
+    lives in tests/test_tenancy.py).
+
+    python benchmarks/mixed_tenancy.py            # full run + gates
+    python benchmarks/mixed_tenancy.py --quick    # CI-sized run + gates
+"""
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+
+import jax
+
+from repro.cluster import (ElasticTrainJob, MixedTenancyDriver, SliceSpec,
+                           Supercomputer, TrainTenantSpec)
+from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
+                           ShapeConfig, registry)
+from repro.fleet import AutoscalerConfig, FleetService, TrafficSpec, generate
+from repro.models import api
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_tenancy.json"
+
+ARCH = "olmo-1b"
+NUM_BLOCKS = 4
+SERVE_GEOMETRY = (4, 4, 4)               # 1 block per replica
+SPEC = SliceSpec(slots=4, max_len=64, prompt_len=16, chunk=8)
+CHUNK_S = 0.15                           # virtual serve chunk cost
+WINDOW_S = 0.5
+BASE_STEP_S = 0.25                       # virtual sec/train-step on 1 block
+EXTRA_WINDOWS = 12                       # the overnight trough after the day
+TRAIN_STEPS = {True: 130, False: 260}    # quick/full: high enough that
+                                         # neither arm saturates the target
+
+
+def _model():
+    cfg = registry.get_reduced(ARCH)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _train_run():
+    return RunConfig(
+        model=registry.get_reduced(ARCH),
+        shape=ShapeConfig("tenancy", "train", 32, 4),
+        parallel=ParallelConfig(remat="none"),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2))
+
+
+def _trace(quick: bool):
+    """Diurnal day-curve: the peak needs ~3 serve replicas, the trough
+    well under 1 — the demand swing elasticity monetises."""
+    return generate(TrafficSpec(
+        duration_s=3.0 if quick else 6.0, rate_rps=14.0, pattern="diurnal",
+        trough_frac=0.1, diurnal_period_s=3.0 if quick else 6.0,
+        new_tokens_choices=(16, 32), new_tokens_weights=(0.5, 0.5),
+        prompt_len_max=8), seed=11)
+
+
+def _plans(quick: bool):
+    """Mid-peak block loss: any idle spares are burned first so the busiest
+    serving block dies with NO spare → slice LOST → its in-flight requests
+    migrate to the survivors.  Every failed block is individually repaired
+    one virtual second later."""
+    peak = (3.0 if quick else 6.0) / 2.0
+    fail_plan = [(peak, "spare"), (peak + 0.05, "spare"),
+                 (peak + 0.1, "busiest")]
+    repair_plan = [(peak + 0.9, "failed:0"), (peak + 0.95, "failed:1"),
+                   (peak + 1.0, "failed:2")]
+    return fail_plan, repair_plan
+
+
+def _arm(kind: str, cfg, params, quick: bool, ckpt_dir: str):
+    sc = Supercomputer(num_blocks=NUM_BLOCKS)
+    if kind == "elastic":
+        autoscale = AutoscalerConfig(
+            min_replicas=1, max_replicas=3, tick_s=0.05, cooldown_s=0.3,
+            scale_up_backlog=3.0, scale_down_backlog=0.5, provision_s=0.1)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=SERVE_GEOMETRY,
+                           initial_replicas=1, autoscale=autoscale,
+                           timing=CHUNK_S, priority=1,
+                           preempt_on_allocate=True)
+        geometries = ((4, 4, 12), (4, 4, 8), (4, 4, 4))
+        resume = True
+    else:
+        # static partition: 2 blocks serving (pinned; replacement-only
+        # autoscaler re-places a replica after repair), 2 blocks training
+        autoscale = AutoscalerConfig(
+            min_replicas=2, max_replicas=2, tick_s=0.05, cooldown_s=0.3,
+            scale_up_backlog=3.0, scale_down_backlog=0.5, provision_s=0.1)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=SERVE_GEOMETRY,
+                           initial_replicas=2, autoscale=autoscale,
+                           timing=CHUNK_S, priority=1,
+                           preempt_on_allocate=False)
+        geometries = ((4, 4, 8),)
+        resume = False
+    job = ElasticTrainJob(sc, TrainTenantSpec(
+        run=_train_run(), target_steps=TRAIN_STEPS[quick],
+        ckpt_dir=ckpt_dir, geometries=geometries, priority=0,
+        base_step_s=BASE_STEP_S))
+    assert job.try_start(0.0), "training must place at t=0"
+    drv = MixedTenancyDriver(svc, job, window_s=WINDOW_S,
+                             resume_training=resume)
+    fail_plan, repair_plan = _plans(quick)
+    rep = drv.run(_trace(quick), fail_plan=fail_plan,
+                  repair_plan=repair_plan, extra_windows=EXTRA_WINDOWS,
+                  arm=kind)
+    svc.close()
+    return rep
+
+
+def _elastic_resume_check(quick: bool):
+    """Preempt at mid-run, resume on a DIFFERENT slice geometry, and
+    compare the per-step loss curve against an uninterrupted run at equal
+    global batch (the cluster-level checkpoint-elastic contract)."""
+    steps = 8 if quick else 12
+    cut = steps // 2
+    # uninterrupted reference
+    sc = Supercomputer(num_blocks=8)
+    sl = sc.allocate((4, 4, 8))
+    ref = sl.train(_train_run(), steps, log_every=1)
+    ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log
+                  if "loss" in m}
+    sl.free()
+    with tempfile.TemporaryDirectory() as d:
+        sc2 = Supercomputer(num_blocks=8)
+        a = sc2.allocate((4, 4, 8))
+        sess = a.train(_train_run(), ckpt_dir=d, ckpt_every=1000)
+        state = sess.trainer.train(steps, preempt_at=cut, log_every=1)
+        sess.state = state
+        assert sess.preempted and state.step == cut
+        losses = {m["step"]: m["loss"] for m in sess.metrics_log
+                  if "loss" in m}
+        a.free()
+        b = sc2.allocate((4, 4, 4))          # different block count
+        sess2 = b.train(_train_run(), ckpt_dir=d, ckpt_every=1000)
+        sess2.run(steps, log_every=1)
+        losses.update({m["step"]: m["loss"] for m in sess2.metrics_log
+                       if "loss" in m})
+        b.free()
+    diffs = [abs(losses[s] - ref_losses[s]) for s in ref_losses]
+    return {
+        "steps": steps,
+        "preempt_at": cut,
+        "shapes": [[4, 4, 8], [4, 4, 4]],
+        "max_abs_loss_diff": max(diffs),
+        "bitwise_equal": bool(max(diffs) == 0.0),
+    }
+
+
+def run(quick: bool = False):
+    cfg, params = _model()
+    with tempfile.TemporaryDirectory() as d_el, \
+            tempfile.TemporaryDirectory() as d_st:
+        elastic = _arm("elastic", cfg, params, quick, d_el)
+        static = _arm("static", cfg, params, quick, d_st)
+    resume = _elastic_resume_check(quick)
+    gate = {
+        "combined_elastic": elastic.combined_score,
+        "combined_static": static.combined_score,
+        "passed": bool(elastic.combined_score > static.combined_score),
+    }
+    record = {
+        "arch": ARCH,
+        "num_blocks": NUM_BLOCKS,
+        "window_s": WINDOW_S,
+        "virtual_chunk_s": CHUNK_S,
+        "virtual_base_step_s": BASE_STEP_S,
+        "train_target_steps": TRAIN_STEPS[quick],
+        "elastic": elastic.to_dict(),
+        "static": static.to_dict(),
+        "gate": gate,
+        "elastic_resume": resume,
+    }
+    OUT.write_text(json.dumps(record, indent=2) + "\n")
+    rows = [
+        ("tenancy_combined", 0.0,
+         f"elastic={elastic.combined_score};static={static.combined_score};"
+         f"ok={gate['passed']}"),
+        ("tenancy_train", 0.0,
+         f"elastic_steps={elastic.train_steps};"
+         f"static_steps={static.train_steps};"
+         f"preempts={elastic.train_preemptions};"
+         f"resumes={elastic.train_resumes}"),
+        ("tenancy_serve", 0.0,
+         f"slo_goodput_elastic={elastic.serve['slo_goodput']};"
+         f"slo_goodput_static={static.serve['slo_goodput']};"
+         f"migrated={elastic.serve['migrated']}"),
+        ("tenancy_elastic_resume", 0.0,
+         f"max_abs_loss_diff={resume['max_abs_loss_diff']};"
+         f"bitwise={resume['bitwise_equal']}"),
+    ]
+    if not gate["passed"]:
+        raise AssertionError(
+            f"tenancy gate: elastic combined {elastic.combined_score} must "
+            f"beat static {static.combined_score}")
+    for arm in (elastic, static):
+        if arm.serve["dropped"] != 0 \
+                or arm.serve["completed"] != arm.serve["offered"]:
+            raise AssertionError(
+                f"{arm.arm} arm lost requests: {arm.serve}")
+    if elastic.train_preemptions < 1 or elastic.train_resumes < 1:
+        raise AssertionError(
+            "elastic arm must exercise preempt AND resume: "
+            f"preemptions={elastic.train_preemptions}, "
+            f"resumes={elastic.train_resumes}")
+    if elastic.serve["migrated"] < 1 or static.serve["migrated"] < 1:
+        raise AssertionError(
+            "both arms must migrate in-flight requests through the block "
+            f"loss: elastic={elastic.serve['migrated']}, "
+            f"static={static.serve['migrated']}")
+    if resume["max_abs_loss_diff"] > 1e-6:
+        raise AssertionError(
+            "preempt->resume-on-different-shape loss curve diverged: "
+            f"max |dloss| = {resume['max_abs_loss_diff']}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (shorter trace), same gates")
+    args = ap.parse_args()
+    try:
+        for name, us, derived in run(quick=args.quick):
+            print(f"{name},{us:.1f},{derived}")
+    except AssertionError as e:
+        print(f"GATE FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ BENCHES = [
     "ocs_cost_ib",
     "cluster_session",       # serve tokens/s -> BENCH_cluster.json
     "fleet_serving",         # fleet scaling/failure/autoscale -> BENCH_fleet.json
+    "mixed_tenancy",         # elastic train+serve tenancy -> BENCH_tenancy.json
 ]
 
 

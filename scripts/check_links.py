@@ -1,0 +1,52 @@
+"""Relative-link checker for the docs tree.
+
+Scans markdown files for ``[text](target)`` links, ignores absolute URLs
+and pure anchors, and verifies every relative target resolves to a real
+file or directory (anchors within a target are stripped).  Exits non-zero
+listing the broken links — the `docs` stage of scripts/ci.sh runs this over
+docs/*.md and README.md so the paper→code map cannot rot silently.
+
+    python scripts/check_links.py README.md docs/*.md
+"""
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: pathlib.Path):
+    broken = []
+    for m in LINK_RE.finditer(path.read_text()):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            broken.append((path, target))
+    return broken
+
+
+def main(argv):
+    files = [pathlib.Path(a) for a in argv] or [pathlib.Path("README.md")]
+    broken = []
+    checked = 0
+    for f in files:
+        if not f.exists():
+            broken.append((f, "<file itself missing>"))
+            continue
+        checked += 1
+        broken.extend(check_file(f))
+    if broken:
+        for path, target in broken:
+            print(f"BROKEN LINK: {path}: {target}", file=sys.stderr)
+        return 1
+    print(f"link check OK: {checked} files, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

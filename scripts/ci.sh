@@ -24,8 +24,9 @@ else
 fi
 
 if [[ "${1:-}" != "--fast" ]]; then
-    echo "== quickstart smoke (CPU) =="
+    echo "== docs stage: quickstart smoke + link check =="
     python examples/quickstart.py
+    python scripts/check_links.py README.md docs/*.md
 
     echo "== serve stage: fast-path benchmark -> BENCH_cluster.json =="
     # before/after harness: per-token vs chunked decode on the PR-1 config;
@@ -41,6 +42,14 @@ if [[ "${1:-}" != "--fast" ]]; then
     # zero lost requests across a mid-serve block failure (in-flight work
     # migrates to survivors), and the autoscaler exercises up AND down
     python benchmarks/fleet_serving.py --quick
+
+    echo "== tenancy stage: mixed train+serve benchmark -> BENCH_tenancy.json =="
+    # gates: elastic arm beats the static partition on combined
+    # (train steps, serve SLO-goodput) through a diurnal day + block loss;
+    # zero lost requests in both arms; the elastic arm preempts AND
+    # resumes training; preempt -> resume-on-a-different-slice-shape loss
+    # curve matches the uninterrupted run
+    python benchmarks/mixed_tenancy.py --quick
 
     echo "== archive benchmark artifacts =="
     mkdir -p artifacts

@@ -2,7 +2,9 @@
 
 One package from the OCS fabric to workloads:
 
-  * `repro.cluster`   — `Supercomputer`/`Slice` session API (start here)
+  * `repro.cluster`   — `Supercomputer`/`Slice` session API (start here);
+                        `cluster.tenancy` co-schedules elastic training
+                        against serving on one machine
   * `repro.fleet`     — SLO-aware multi-slice serving: traffic, routing,
                         autoscaling, failure-driven re-routing
   * `repro.core`      — OCS fabric, slice scheduler, topologies, cost
@@ -12,7 +14,8 @@ One package from the OCS fabric to workloads:
   * `repro.embeddings`— SparseCore embedding executor, cache, placement
   * `repro.parallel`  — sharding specs, contexts, overlap, pipeline
   * `repro.serve`     — continuous-batching `ServeEngine` + `SliceSpec`
-  * `repro.train`     — `Trainer` with checkpoint/restore
+  * `repro.train`     — preemptible `Trainer` + slice-shape-elastic
+                        checkpoint
   * `repro.launch`    — meshes, dry-run lowering, rooflines, HLO costs
   * `repro.data`      — deterministic synthetic datasets
   * `repro.optim`     — Adam + schedules + grad-norm utilities

@@ -18,10 +18,13 @@ from repro.cluster.slices import (BoundCollectives, ServeSession, Slice,
                                   TrainSession)
 from repro.cluster.supercomputer import (CapacityError, JobTicket,
                                          Supercomputer)
+from repro.cluster.tenancy import (ElasticTrainJob, MixedTenancyDriver,
+                                   TenancyReport, TrainTenantSpec)
 from repro.serve.engine import SliceSpec
 
 __all__ = [
-    "BoundCollectives", "CapacityError", "JobTicket", "ServeSession",
-    "Slice", "SliceError", "SliceEvent", "SliceSession", "SliceSpec",
-    "Supercomputer", "TrainSession",
+    "BoundCollectives", "CapacityError", "ElasticTrainJob", "JobTicket",
+    "MixedTenancyDriver", "ServeSession", "Slice", "SliceError",
+    "SliceEvent", "SliceSession", "SliceSpec", "Supercomputer",
+    "TenancyReport", "TrainSession", "TrainTenantSpec",
 ]

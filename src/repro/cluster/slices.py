@@ -40,7 +40,7 @@ if TYPE_CHECKING:                                     # pragma: no cover
 class SliceEvent:
     """One thing that happened to a slice after allocation."""
     kind: str                   # "allocate" | "reconfigure" | "retwist" |
-                                # "straggler" | "lost" | "free"
+                                # "straggler" | "preempt" | "lost" | "free"
     detail: str
     circuits_moved: int = 0
     downtime_s: float = 0.0
@@ -64,19 +64,25 @@ class BoundCollectives:
 
     def all_reduce(self, bytes_per_chip: float,
                    dims_subset: Optional[Sequence[int]] = None) -> float:
+        """Seconds for an all-reduce of ``bytes_per_chip`` on this slice
+        (optionally over a subset of torus dimensions)."""
         return self._model.all_reduce(self._topo, bytes_per_chip, dims_subset)
 
     def all_gather(self, bytes_per_chip_out: float,
                    dims_subset: Optional[Sequence[int]] = None) -> float:
+        """Seconds for an all-gather producing ``bytes_per_chip_out`` per
+        chip (reduce-scatter is cost-symmetric: same estimate)."""
         return self._model.all_gather(self._topo, bytes_per_chip_out,
                                       dims_subset)
 
     reduce_scatter = all_gather
 
     def all_to_all(self, bytes_per_chip: float) -> float:
+        """Seconds for an all-to-all of ``bytes_per_chip`` (twist-aware)."""
         return self._model.all_to_all(self._topo, bytes_per_chip)
 
     def p2p(self, bytes_: float, hops: int = 1) -> float:
+        """Seconds for a point-to-point transfer over ``hops`` links."""
         return self._model.p2p(bytes_, hops)
 
 
@@ -122,6 +128,7 @@ class SliceSession:
                    if np.isfinite(e.downtime_s))
 
     def close(self) -> None:
+        """Detach from the slice (no further events; idempotent)."""
         self.closed = True
         if self in self.slice._sessions:
             self.slice._sessions.remove(self)
@@ -133,6 +140,14 @@ class TrainSession(SliceSession):
     ``run`` wires the supercomputer's scheduler and this slice's job id into
     the trainer, so an injected block failure exercises the real OCS
     swap-spare path and the event lands back here.
+
+    Preemption is cooperative and rides the listener hooks: a ``"preempt"``
+    `SliceEvent` (from `Supercomputer.request_preemption` or
+    `Slice.request_preempt`) flips the trainer's stop flag — at the next
+    step boundary the trainer checkpoints and returns early, after which
+    `preempted` is True and the owner is expected to `free` the slice and
+    later resume from the checkpoint on whatever slice it gets next (the
+    checkpoint format is slice-shape-elastic, see `repro.train.checkpoint`).
     """
 
     def __init__(self, slice_: "Slice", trainer):
@@ -140,16 +155,43 @@ class TrainSession(SliceSession):
         self.trainer = trainer
         self.state = None
 
+    def _on_event(self, ev: SliceEvent) -> None:
+        if ev.kind == "preempt":
+            self.trainer.request_preempt()
+        super()._on_event(ev)
+
     @property
     def metrics_log(self) -> List[Dict[str, float]]:
+        """Per-step metric dicts logged by the trainer (loss, wall_s, …)."""
         return self.trainer.metrics_log
 
     @property
     def params(self):
+        """Current model parameters, or None before the first `run`."""
         return None if self.state is None else self.state.params
+
+    @property
+    def preempted(self) -> bool:
+        """True when the last `run` stopped early on a preemption request
+        (state checkpointed when the trainer has a ``ckpt_dir`` — give it
+        one for any preemptible run, or keep the returned state yourself;
+        the owner should then free the slice)."""
+        return self.trainer.preempted
 
     def run(self, num_steps: int, *, fail_at: Optional[int] = None,
             log_every: int = 10, state=None):
+        """Train to ``num_steps`` (absolute), resuming from ``state``, the
+        session's previous state, or the latest checkpoint.
+
+        Args:
+          num_steps: target step count (training resumes at the restored
+            step, so fewer steps actually execute after a restore).
+          fail_at: inject a block failure at this step (the §2.3 drill).
+          log_every: metric logging period in steps.
+          state: explicit `TrainerState` to continue from.
+
+        Returns the final `TrainerState` (early if preempted — check
+        `preempted`)."""
         self._check_live()
         sc = self.slice._sc
         self.state = self.trainer.train(
@@ -173,15 +215,19 @@ class ServeSession(SliceSession):
 
     @property
     def spec(self) -> SliceSpec:
+        """The engine's serving envelope."""
         return self.engine.spec
 
     def submit(self, prompt, max_new_tokens: int = 32):
+        """Enqueue a prompt on the underlying engine (refused while
+        draining or after the slice died)."""
         self._check_live()
         if self.draining:
             raise SliceError("session is draining; not accepting requests")
         return self.engine.submit(prompt, max_new_tokens=max_new_tokens)
 
     def step(self) -> int:
+        """Advance one admission+decode step; returns tokens decoded."""
         return 0 if self.closed else self.engine.step()
 
     # -- fleet surface: drain + queue introspection ---------------------------
@@ -204,12 +250,15 @@ class ServeSession(SliceSession):
 
     @property
     def depth(self) -> int:
+        """Requests the engine still owes work to."""
         return self.engine.depth
 
     def tokens_owed(self) -> int:
+        """Decode tokens still owed across active + pending requests."""
         return self.engine.tokens_owed()
 
     def chunk_time_ema(self, default: float = 0.05) -> float:
+        """Measured per-chunk latency EMA (``default`` before any chunk)."""
         return self.engine.chunk_time_ema(default)
 
     def expected_ttft_s(self, default_chunk_s: float = 0.05, *,
@@ -231,6 +280,9 @@ class ServeSession(SliceSession):
         return self.engine.export_inflight()
 
     def run(self, max_steps: int = 1000) -> Dict[str, float]:
+        """Serve until the queue drains (or ``max_steps``); returns the
+        engine's stats dict annotated with this session's interruption
+        count and reconfiguration stall time."""
         if self.lost:
             # same key set as a normal run, so failure-path callers can
             # read standard stats without special-casing
@@ -272,27 +324,39 @@ class Slice:
 
     @property
     def job_id(self) -> int:
+        """Scheduler job id backing this slice."""
         return self._job.job_id
 
     @property
     def dims(self) -> Tuple[int, int, int]:
+        """Chip geometry (a, b, c) of the slice."""
         return self._job.dims_chips
 
     @property
     def twisted(self) -> bool:
+        """Whether the slice is currently programmed as a twisted torus."""
         return self._job.twisted
 
     @property
     def blocks(self) -> List[int]:
+        """Machine block ids the slice occupies (copy; spare-swaps mutate
+        the underlying job)."""
         return list(self._job.blocks)
 
     @property
     def num_chips(self) -> int:
+        """Total chips in the slice (product of `dims`)."""
         a, b, c = self.dims
         return a * b * c
 
     @property
+    def priority(self) -> int:
+        """Scheduling priority this slice was allocated at (higher wins)."""
+        return self._job.priority
+
+    @property
     def topology(self) -> SliceTopology:
+        """Link-level `SliceTopology` for the current geometry/twist."""
         return self._job.topology
 
     @property
@@ -301,6 +365,7 @@ class Slice:
         return BoundCollectives(self._sc.costs, self.topology)
 
     def describe(self) -> str:
+        """Human-readable geometry string (e.g. "8x8x8", "4x4x16_T")."""
         return self.topology.describe()
 
     def __repr__(self):
@@ -319,6 +384,8 @@ class Slice:
         return self._mesh
 
     def parallel_context(self, parallel=None) -> ParallelContext:
+        """Build a `ParallelContext` for this slice's mesh from a
+        `ParallelConfig` (or the LOCAL context when None)."""
         from repro.parallel import sharding as SH
         if parallel is None:
             return LOCAL
@@ -341,7 +408,8 @@ class Slice:
         self._check_active()
         from repro.train.trainer import Trainer
         trainer = Trainer(run, self.mesh, ckpt_dir=ckpt_dir,
-                          ckpt_every=ckpt_every, accum_steps=accum_steps)
+                          ckpt_every=ckpt_every, accum_steps=accum_steps,
+                          slice_dims=self.dims)
         session = TrainSession(self, trainer)
         if num_steps is not None:
             session.run(num_steps, fail_at=fail_at, log_every=log_every)
@@ -405,6 +473,21 @@ class Slice:
             "retwist", f"twisted={twisted}", circuits_moved=changed,
             downtime_s=SWITCH_TIME_S if changed else 0.0))
         return changed
+
+    def request_preempt(self, detail: str = "preemption requested") -> bool:
+        """Ask this slice's tenant to vacate (cooperative preemption).
+
+        Emits a ``"preempt"`` `SliceEvent` to every session, listener, and
+        machine-level subscriber.  A cooperative tenant (e.g. an elastic
+        training job) checkpoints and calls `free` from its handler — in
+        that case this returns True.  Tenants that ignore the request keep
+        running; nothing is killed."""
+        if self.status != "active":
+            return True                     # already gone: nothing to evict
+        ev = SliceEvent("preempt", detail)
+        self._notify(ev)
+        self._sc._publish(self, ev)
+        return self.status != "active"
 
     def swap_straggler(self, slow_block: int) -> Optional[SliceEvent]:
         """Replace a slow-but-healthy block with a spare (§2.3)."""

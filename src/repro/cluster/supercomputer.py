@@ -52,12 +52,14 @@ class _NotifyingScheduler(SliceScheduler):
 @dataclasses.dataclass
 class JobTicket:
     """One queued unit of work: a geometry request plus a function that gets
-    the allocated `Slice` and returns the job's result."""
+    the allocated `Slice` and returns the job's result.  ``priority`` orders
+    the queue (higher first; FIFO within a priority)."""
     ticket_id: int
     dims: Tuple[int, int, int]
     twisted: bool
     fn: Callable[[Slice], Any]
     tag: str = ""
+    priority: int = 0
     status: str = "queued"          # "queued" | "running" | "done" | "failed"
     result: Any = None
     error: Optional[str] = None
@@ -79,10 +81,12 @@ class Supercomputer:
 
     @property
     def fabric(self):
+        """The machine's `OCSFabric` (port accounting, circuit state)."""
         return self.scheduler.fabric
 
     @property
     def num_blocks(self) -> int:
+        """Total 4^3 blocks in the machine (64 = 4096 chips by default)."""
         return self.scheduler.num_blocks
 
     @property
@@ -115,12 +119,31 @@ class Supercomputer:
     # -- allocation ------------------------------------------------------------
 
     def allocate(self, geometry: Geometry, *, twisted: bool = False,
-                 mesh=None, required: bool = True) -> Optional[Slice]:
-        """Allocate a slice.  `geometry` is a (a, b, c) chip shape or a chip
-        count (the most cube-like legal shape is picked).  Raises
-        `CapacityError` when `required` and the machine cannot place it."""
+                 mesh=None, required: bool = True, priority: int = 0,
+                 preempt: bool = False) -> Optional[Slice]:
+        """Allocate a slice.
+
+        Args:
+          geometry: a ``(a, b, c)`` chip shape or a chip count (the most
+            cube-like legal shape is picked).
+          twisted: program the slice as a twisted torus (§2.8).
+          mesh: jax mesh for compute on the slice (defaults to a local mesh).
+          required: raise `CapacityError` instead of returning None when the
+            machine cannot place the slice.
+          priority: scheduling priority recorded on the job (higher wins).
+          preempt: when capacity is short, cooperatively evict strictly
+            lower-priority slices (see `request_preemption`) and retry once.
+
+        Returns:
+          A live `Slice` handle, or None (``required=False`` only).
+        """
         dims = self._resolve_geometry(geometry, twisted)
-        job = self.scheduler.allocate(dims, twisted=twisted)
+        job = self.scheduler.allocate(dims, twisted=twisted,
+                                      priority=priority)
+        if job is None and preempt:
+            if self.request_preemption(dims, priority):
+                job = self.scheduler.allocate(dims, twisted=twisted,
+                                              priority=priority)
         if job is None:
             if required:
                 raise CapacityError(
@@ -131,6 +154,34 @@ class Supercomputer:
         sl = Slice(self, job, mesh=mesh)
         self.slices[job.job_id] = sl
         return sl
+
+    def request_preemption(self, geometry: Geometry, priority: int, *,
+                           twisted: bool = False) -> bool:
+        """Cooperatively evict lower-priority slices until a ``geometry``
+        request at ``priority`` could be placed.
+
+        Victim slices receive a ``"preempt"`` `SliceEvent` (delivered to
+        their sessions, listeners, and machine subscribers).  A well-behaved
+        tenant — e.g. an elastic training job — reacts by checkpointing and
+        freeing the slice *during the notification*; slices whose owners do
+        not free are left running (preemption here is a request, never a
+        kill).  Returns True if enough blocks were actually freed."""
+        dims = self._resolve_geometry(geometry, twisted)
+        victims = self.scheduler.preemption_victims(dims, priority)
+        if victims is None:
+            return False
+        need = self.scheduler.blocks_needed(dims)
+        for job in victims:
+            sl = self.slices.get(job.job_id)
+            if sl is None:
+                continue
+            self.scheduler.events.append(
+                f"preempt job{job.job_id} (prio {job.priority} < {priority})")
+            sl.request_preempt(
+                f"evicted for a priority-{priority} {dims} request")
+            if len(self.scheduler.free & self.scheduler.healthy) >= need:
+                break
+        return len(self.scheduler.free & self.scheduler.healthy) >= need
 
     def subscribe(self, fn: Callable[[Slice, SliceEvent], None]):
         """Register a machine-level observer: ``fn(slice, event)`` fires for
@@ -162,6 +213,7 @@ class Supercomputer:
         self._publish(sl, ev)
 
     def utilization(self) -> float:
+        """Fraction of blocks currently owned by live slices."""
         return self.scheduler.utilization()
 
     # -- failures --------------------------------------------------------------
@@ -173,6 +225,8 @@ class Supercomputer:
         return self.scheduler.fail_block(block)
 
     def repair_block(self, block: int) -> None:
+        """Return a failed block to the healthy pool (it rejoins the free
+        set unless a slice still maps it)."""
         self.scheduler.repair_block(block)
 
     def _on_failure(self, block: int, result) -> None:
@@ -199,33 +253,41 @@ class Supercomputer:
     # -- job queue -------------------------------------------------------------
 
     def submit(self, geometry: Geometry, fn: Callable[[Slice], Any], *,
-               twisted: bool = False, tag: str = "") -> JobTicket:
+               twisted: bool = False, tag: str = "",
+               priority: int = 0) -> JobTicket:
         """Queue `fn` to run on a slice of `geometry` once one can be placed.
-        Tickets run in `run_pending` (FIFO with backfill)."""
+        Tickets run in `run_pending` (priority order, FIFO within a
+        priority, with backfill)."""
         dims = self._resolve_geometry(geometry, twisted)
         if twisted and not is_twistable(dims):
             raise ValueError(f"{dims} is not twistable")
-        need = (dims[0] // 4) * (dims[1] // 4) * (dims[2] // 4)
+        need = self.scheduler.blocks_needed(dims)
         if need > self.num_blocks:
             raise ValueError(f"{dims} needs {need} blocks; machine has "
                              f"{self.num_blocks}")
-        t = JobTicket(self._next_ticket, dims, twisted, fn, tag=tag)
+        t = JobTicket(self._next_ticket, dims, twisted, fn, tag=tag,
+                      priority=priority)
         self._next_ticket += 1
         self.queue.append(t)
         return t
 
     def run_pending(self) -> List[JobTicket]:
         """Drain the queue: allocate, run, free — repeating until no queued
-        ticket can be placed.  Smaller later jobs backfill around a blocked
-        head-of-line job (the §2.5 scheduling benefit)."""
+        ticket can be placed.  Higher-priority tickets go first; smaller
+        lower-priority jobs backfill around a blocked head-of-line job (the
+        §2.5 scheduling benefit)."""
         finished: List[JobTicket] = []
         progress = True
         while progress:
             progress = False
-            for t in list(self.queue):
+            ordered = sorted(self.queue,
+                             key=lambda t: (-t.priority, t.ticket_id))
+            for t in ordered:
+                if t not in self.queue:
+                    continue
                 try:
                     sl = self.allocate(t.dims, twisted=t.twisted,
-                                       required=False)
+                                       required=False, priority=t.priority)
                 except ValueError as e:     # bad geometry: fail the ticket,
                     self.queue.remove(t)    # keep the rest draining
                     t.status, t.error = "failed", f"{type(e).__name__}: {e}"
@@ -261,6 +323,8 @@ class Supercomputer:
         return fn(slice_chips, host_availability, trials=trials, seed=seed)
 
     def overview(self) -> Dict[str, Any]:
+        """Machine snapshot: block counts, utilization, live slices, queue
+        depth — the one-call observability surface."""
         free = len(self.scheduler.free & self.scheduler.healthy)
         return {
             "num_blocks": self.num_blocks,

@@ -9,7 +9,14 @@ Responsibilities:
     comparison),
   * block-failure handling: swap in a spare and reprogram circuits (§2.3),
   * straggler mitigation: the same swap mechanism replaces a slow block —
-    an OCS capability (ms switch time) that static cabling cannot offer.
+    an OCS capability (ms switch time) that static cabling cannot offer,
+  * priorities + preemption support: every job carries a priority, and
+    `preemption_victims` picks the cheapest set of lower-priority jobs whose
+    blocks would let a higher-priority request fit — the mechanism behind
+    "a serving burst evicts background training" (§2.3's availability story
+    turned into scheduling policy).  The scheduler only *selects* victims;
+    actually stopping them is cooperative and lives in the cluster layer
+    (checkpoint, free, re-queue).
 """
 from __future__ import annotations
 
@@ -25,18 +32,30 @@ MACHINE_BLOCK_DIMS = (4, 4, 4)
 
 @dataclass
 class Job:
+    """One placed slice: its chip geometry, owned blocks, OCS circuit
+    configuration, and scheduling priority (higher preempts lower)."""
     job_id: int
     dims_chips: Tuple[int, int, int]
     twisted: bool
     blocks: List[int]
     config: BlockSliceConfig
+    priority: int = 0
 
     @property
     def topology(self) -> SliceTopology:
+        """Link-level topology for the job's geometry/twist."""
         return SliceTopology(self.dims_chips, twisted=self.twisted)
 
 
 class SliceScheduler:
+    """Block-level slice scheduler over one OCS machine.
+
+    Args:
+      num_blocks: machine size in 4^3-chip blocks.
+      contiguous: static-cabling mode — slices must be contiguous regions
+        and failures cannot be patched with spares (the Fig-4 baseline).
+    """
+
     def __init__(self, num_blocks: int = 64, *, contiguous: bool = False):
         self.fabric = OCSFabric(num_blocks)
         self.num_blocks = num_blocks
@@ -50,7 +69,11 @@ class SliceScheduler:
     # -- allocation -----------------------------------------------------------
 
     def allocate(self, dims_chips: Tuple[int, int, int], *,
-                 twisted: bool = False) -> Optional[Job]:
+                 twisted: bool = False, priority: int = 0) -> Optional[Job]:
+        """Place a slice of ``dims_chips`` (each dim a multiple of 4) from
+        any healthy free blocks.  Returns the `Job` or None if it cannot be
+        placed at current capacity (see `preemption_victims` for what could
+        be evicted to make room)."""
         a, b, c = dims_chips
         assert a % 4 == b % 4 == c % 4 == 0, "slices are built from 4^3 blocks"
         if twisted and not is_twistable(dims_chips):
@@ -66,13 +89,46 @@ class SliceScheduler:
             return None
         cfg = self.fabric.configure_slice(blocks, dims_blocks,
                                           twisted=twisted)
-        job = Job(self._next, dims_chips, twisted, list(blocks), cfg)
+        job = Job(self._next, dims_chips, twisted, list(blocks), cfg,
+                  priority=priority)
         self._next += 1
         self.free -= set(blocks)
         self.jobs[job.job_id] = job
         self.events.append(f"alloc job{job.job_id} {dims_chips} "
-                           f"blocks={blocks}")
+                           f"blocks={blocks} prio={priority}")
         return job
+
+    def blocks_needed(self, dims_chips: Tuple[int, int, int]) -> int:
+        """Block count of a chip geometry (each dim a multiple of 4)."""
+        a, b, c = dims_chips
+        return (a // 4) * (b // 4) * (c // 4)
+
+    def preemption_victims(self, dims_chips: Tuple[int, int, int],
+                           priority: int) -> Optional[List[Job]]:
+        """Cheapest set of strictly-lower-priority jobs whose release would
+        let a ``priority`` request for ``dims_chips`` fit.
+
+        Victims are chosen lowest-priority-first, then fewest-blocks-first
+        (evict as little work as possible), newest-first on ties.  Returns
+        None when even evicting every lower-priority job would not free
+        enough healthy blocks (OCS mode only — contiguous/static machines
+        cannot re-carve around tenants, so preemption is not offered)."""
+        if self.contiguous:
+            return None
+        need = self.blocks_needed(dims_chips)
+        have = len(self.free & self.healthy)
+        if have >= need:
+            return []
+        cands = sorted((j for j in self.jobs.values()
+                        if j.priority < priority),
+                       key=lambda j: (j.priority, len(j.blocks), -j.job_id))
+        victims: List[Job] = []
+        for j in cands:
+            if have >= need:
+                break
+            victims.append(j)
+            have += sum(1 for b in j.blocks if b in self.healthy)
+        return victims if have >= need else None
 
     def _find_contiguous(self, dims_blocks, avail) -> Optional[List[int]]:
         A, B, C = MACHINE_BLOCK_DIMS
@@ -91,6 +147,7 @@ class SliceScheduler:
         return None
 
     def release(self, job_id: int) -> None:
+        """Free a job's blocks and OCS circuits back to the machine."""
         job = self.jobs.pop(job_id)
         self.fabric.release(job.config)
         self.free |= set(job.blocks)
@@ -132,6 +189,7 @@ class SliceScheduler:
         return (owner.job_id, moved, secs)
 
     def repair_block(self, block: int) -> None:
+        """Mark a failed block healthy again (free unless still mapped)."""
         self.healthy.add(block)
         if not any(block in j.blocks for j in self.jobs.values()):
             self.free.add(block)
@@ -156,5 +214,6 @@ class SliceScheduler:
     # -- metrics ----------------------------------------------------------------
 
     def utilization(self) -> float:
+        """Fraction of blocks owned by live jobs."""
         used = sum(len(j.blocks) for j in self.jobs.values())
         return used / self.num_blocks

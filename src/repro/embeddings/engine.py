@@ -156,6 +156,9 @@ class EmbeddingCollection:
     # -- params -------------------------------------------------------------
 
     def init(self, key) -> Dict[str, Any]:
+        """Initialise all embedding tables: one fused ``local_d{D}`` row
+        space per width-group under fused storage, per-table arrays
+        otherwise.  Returns the params dict consumed by `lookup`."""
         params: Dict[str, Any] = {}
         keys = jax.random.split(key, len(self.groups) + len(self.replicated))
         i = 0
@@ -487,6 +490,9 @@ class PipelinedEmbeddingExecutor:
 
     def lookup(self, params, features, ctx: ParallelContext = LOCAL
                ) -> Dict[str, jax.Array]:
+        """Pipelined fused multi-group lookup: name -> (B, dim) combined
+        embeddings (see `EmbeddingCollection.lookup`; this executor pins
+        ``fused=True`` and threads its hot-id cache through)."""
         return self.coll.lookup(params, features, ctx, method=self.method,
                                 use_kernel=self.use_kernel, fused=True,
                                 cache=self.cache)

@@ -37,6 +37,10 @@ class AutoscalerConfig:
 
 
 class Autoscaler:
+    """Backlog/p95-watermark controller deciding scale-ups and drains.
+    Pure policy: `decide` returns an action, the `FleetService` executes
+    it (allocation, drain bookkeeping, cooldown recording)."""
+
     def __init__(self, cfg: Optional[AutoscalerConfig] = None):
         self.cfg = cfg or AutoscalerConfig()
         self.last_action_t = float("-inf")
@@ -81,6 +85,7 @@ class Autoscaler:
         return "hold", None
 
     def record(self, action: str, now: float) -> None:
+        """Note an executed action (starts the cooldown, bumps counters)."""
         self.last_action_t = now
         if action == "up":
             self.scale_ups += 1

@@ -42,6 +42,11 @@ class RouterConfig:
 
 
 class Router:
+    """Dispatch fleet requests into replica engines under one policy
+    (`least_loaded` by owed tokens, `least_eta` by queue-aware expected
+    TTFT, or `round_robin`), with per-replica queue bounds as the
+    backpressure surface."""
+
     def __init__(self, cfg: Optional[RouterConfig] = None):
         self.cfg = cfg or RouterConfig()
         self.routed = 0
@@ -49,6 +54,8 @@ class Router:
         self._rr = 0
 
     def eligible(self, replicas: List[ServeReplica]) -> List[ServeReplica]:
+        """Replicas that may accept new work (accepting state and below
+        the per-replica queue bound)."""
         return [r for r in replicas
                 if r.accepting and r.depth < self.cfg.max_queue_per_replica]
 

@@ -67,6 +67,7 @@ class FleetReport:
     log: List[str]
 
     def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready summary (drops the log and per-replica stats)."""
         d = dataclasses.asdict(self)
         d.pop("log")
         d.pop("replica_stats")
@@ -74,6 +75,27 @@ class FleetReport:
 
 
 class FleetService:
+    """Operate a pool of serve replicas over one `Supercomputer` as a
+    single SLO-tracked service.
+
+    Args:
+      sc: the machine (the service subscribes to its event stream).
+      model_cfg/params: the served model (one compile serves all replicas).
+      spec: per-replica `SliceSpec` serving envelope.
+      geometry: chip shape of each replica slice.
+      initial_replicas: pool size at t=0 (raised to the autoscaler floor).
+      router: routing policy config (`least_loaded`/`least_eta`/RR).
+      autoscale: elastic controller config; None pins the pool size.
+      timing: "measured" (real chunk wall latency) or a fixed virtual
+        seconds-per-chunk for machine-independent control dynamics.
+      max_wait_queue: backpressure bound; beyond it requests are dropped
+        and reported.
+      ttft_window_s: sliding window for the observed-p95-TTFT signal.
+      priority: scheduling class of this service's slices.
+      preempt_on_allocate: let scale-ups cooperatively evict strictly
+        lower-priority tenants (the serving-burst-evicts-training story).
+    """
+
     def __init__(self, sc: Supercomputer, model_cfg: ModelConfig, params,
                  spec: Optional[SliceSpec] = None, *,
                  geometry: Geometry = (4, 4, 4),
@@ -82,7 +104,9 @@ class FleetService:
                  autoscale: Optional[AutoscalerConfig] = None,
                  timing: Union[str, float] = "measured",
                  max_wait_queue: int = 256,
-                 ttft_window_s: float = 2.0):
+                 ttft_window_s: float = 2.0,
+                 priority: int = 1,
+                 preempt_on_allocate: bool = False):
         assert model_cfg.family != "audio", \
             "fleet serving rides the fast path; the whisper enc-dec " \
             "family has no per-slot cache insert yet"
@@ -97,6 +121,14 @@ class FleetService:
             None if timing == "measured" else float(timing))
         self.max_wait_queue = max_wait_queue
         self.ttft_window_s = ttft_window_s
+        # scheduling class of this service's slices.  With
+        # ``preempt_on_allocate`` a scale-up that cannot be placed asks the
+        # machine to cooperatively evict strictly-lower-priority tenants
+        # (an elastic training job checkpoints and frees) before giving up —
+        # the serving-burst-evicts-training story of cluster/tenancy.py.
+        self.priority = priority
+        self.preempt_on_allocate = preempt_on_allocate
+        self.deferred_scale_ups = 0     # scale-ups the machine could not place
 
         self.replicas: List[ServeReplica] = []
         self.retired: List[ServeReplica] = []   # freed/dead, stats only
@@ -132,8 +164,11 @@ class FleetService:
                 r.undrain()
                 self._log(f"scale-up: undrained replica {r.rep_id}")
                 return r
-        sl = self.sc.allocate(self.geometry, required=False)
+        sl = self.sc.allocate(self.geometry, required=False,
+                              priority=self.priority,
+                              preempt=self.preempt_on_allocate)
         if sl is None:
+            self.deferred_scale_ups += 1
             self._log("scale-up: machine full, allocation deferred")
             return None
         session = sl.serve(self.cfg, self.params, self.spec)
@@ -174,6 +209,7 @@ class FleetService:
 
     @property
     def live_replicas(self) -> List[ServeReplica]:
+        """Replicas that can still do work (provisioning/active/draining)."""
         return [r for r in self.replicas
                 if r.state in (PROVISIONING, ACTIVE, DRAINING)]
 
@@ -294,15 +330,22 @@ class FleetService:
             fail_plan: Optional[FailPlan] = None,
             repair_plan: Optional[FailPlan] = None,
             settle_s: float = 0.0,
-            max_iters: int = 200_000) -> FleetReport:
+            max_iters: int = 200_000,
+            on_advance=None) -> FleetReport:
         """Serve one arrival trace to completion (plus ``settle_s`` virtual
         seconds of autoscaler cool-down, so drains/frees become visible).
 
         ``fail_plan``/``repair_plan`` inject `fail_block`/`repair_block`
         calls at virtual times; a repair target of ``"last_failed"``
-        resolves to the most recently failed block at fire time, so a
-        scenario can kill a serving block and later hand it back for the
-        autoscaler to reclaim."""
+        resolves to the most recently failed block at fire time (and
+        ``"failed:<i>"`` to the i-th injected failure), so a scenario can
+        kill a serving block and later hand it back for the autoscaler to
+        reclaim.
+
+        ``on_advance(now)`` is called after every virtual-clock advance —
+        the co-tenancy hook: `cluster.tenancy` uses it to run training
+        quanta in step with fleet time (the two tenants hold disjoint
+        slices, so their compute overlaps in virtual time)."""
         if self.chunk_s is None:
             self.warmup()
         arrivals = sorted(requests, key=lambda r: (r.t_arrival, r.fid))
@@ -312,7 +355,11 @@ class FleetService:
         ai = fi = ri = 0
         tick = self.autoscaler.cfg.tick_s if self.autoscaler else None
         next_tick = 0.0 if tick else float("inf")
-        last_event_t = 0.0
+        # settle is measured from the last *event* — which, for a re-entered
+        # service (windowed tenancy driving), starts at the current clock,
+        # so an idle follow-up run still grants the autoscaler settle_s of
+        # tick time to drain surplus replicas
+        last_event_t = self.now
 
         def work_remaining() -> bool:
             if (ai < len(arrivals) or fi < len(fails) or ri < len(repairs)
@@ -366,6 +413,16 @@ class FleetService:
             dead_end = (not self.live_replicas and ri >= len(repairs)
                         and not (self.sc.scheduler.free
                                  & self.sc.scheduler.healthy))
+            if dead_end and (self.wait or ai < len(arrivals)):
+                # before declaring the requests stranded, try one scale-up:
+                # with `preempt_on_allocate` the machine may still carve a
+                # slice out of a lower-priority tenant (e.g. an elastic
+                # training job that checkpoints and frees on request)
+                if self._scale_up(self.now) is not None:
+                    # capacity reclaimed: hand it the stranded work so the
+                    # new replica appears in the next event-time sweep
+                    self._flush_wait()
+                    continue
             if not cands or (dead_end and (self.wait or ai < len(arrivals))):
                 stranded = list(self.wait) + arrivals[ai:]
                 self.wait.clear()
@@ -376,6 +433,8 @@ class FleetService:
                           f"{len(stranded)} stranded requests")
                 break
             self.now = max(self.now, min(cands))
+            if on_advance is not None:
+                on_advance(self.now)
 
             # -- injected failures / repairs ---------------------------------
             while fi < len(fails) and fails[fi][0] <= self.now:
@@ -399,6 +458,14 @@ class FleetService:
                     if not self.failed_blocks:
                         continue
                     block = self.failed_blocks[-1]
+                elif isinstance(spec_b, str) and spec_b.startswith("failed:"):
+                    # "failed:<i>": i-th injected failure of this service's
+                    # lifetime — lets a plan that burns spares repair each
+                    # of them individually
+                    i = int(spec_b.split(":", 1)[1])
+                    if i >= len(self.failed_blocks):
+                        continue
+                    block = self.failed_blocks[i]
                 else:
                     block = self._resolve_block(spec_b)
                 if block is not None:
@@ -428,8 +495,15 @@ class FleetService:
 
     # -- reporting ------------------------------------------------------------
 
-    def _report(self) -> FleetReport:
-        reqs = self.requests
+    def report_for(self, requests: Sequence[FleetRequest]) -> FleetReport:
+        """Build a `FleetReport` over an arbitrary request population —
+        used by windowed drivers (`cluster.tenancy`) that feed one trace
+        through several `run` calls and want one merged report at the end."""
+        return self._report(requests)
+
+    def _report(self, requests: Optional[Sequence[FleetRequest]] = None
+                ) -> FleetReport:
+        reqs = list(requests) if requests is not None else self.requests
         done = [r for r in reqs if r.status == "done"]
         dropped = [r for r in reqs if r.status == "dropped"]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]

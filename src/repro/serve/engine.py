@@ -151,6 +151,22 @@ def _legacy_programs(cfg: ModelConfig, spec: SliceSpec,
 
 
 class ServeEngine:
+    """Continuous-batching serving engine (the PR-3 fast path).
+
+    One engine owns `spec.slots` decode slots over a paged KV cache:
+    admission prefills ONLY the admitted requests (one fixed-width
+    dispatch), decode advances all slots `spec.chunk` tokens per dispatch
+    with on-device sampling and done-masking, and per-slot valid lengths
+    drive the paged decode-attention kernel.  Greedy outputs are bitwise
+    chunk-invariant.
+
+    Args:
+      cfg: model config (any family except audio rides the fast path).
+      params: model parameters pytree.
+      spec: `SliceSpec` serving envelope (slots/max_len/prompt_len/chunk).
+      ctx: `ParallelContext` for sharded serving and kernel dispatch knobs.
+    """
+
     def __init__(self, cfg: ModelConfig, params,
                  spec: Optional[SliceSpec] = None, *,
                  ctx: ParallelContext = LOCAL):
@@ -192,6 +208,9 @@ class ServeEngine:
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        """Enqueue one prompt; returns its `Request` handle (admission
+        happens on a later `step`/`step_chunk`).  The prompt is truncated
+        to the last `spec.prompt_len` tokens at prefill."""
         r = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=max_new_tokens, t_submit=time.time())
         self._next_rid += 1
@@ -307,6 +326,7 @@ class ServeEngine:
 
     @property
     def free_slots(self) -> int:
+        """Slots currently available for admission."""
         return sum(1 for r in self.active if r is None or r.done)
 
     @property

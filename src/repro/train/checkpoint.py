@@ -1,25 +1,49 @@
-"""Sharded checkpointing with elastic restore (DESIGN.md §8).
+"""Slice-shape-elastic sharded checkpointing.
 
-Layout: one directory per step containing
-  * ``manifest.json`` — pytree structure, per-leaf shape/dtype, step metadata;
-  * ``arrays.npz``    — every leaf as a dense host array (single-process
-    container; in a multi-host deployment each host writes its shard files —
-    the manifest format already records per-leaf sharding for that).
+The checkpoint is the unit of elasticity in this repo: a preempted or
+failed training job saves here, frees its blocks, and later resumes on a
+slice with a *different* block count / geometry / mesh — the §2.3/§2.5
+carve-and-reclaim story needs state that outlives any particular slice.
 
-Elastic restore: arrays are saved mesh-agnostically (fully materialised), so
-``restore(..., shardings=...)`` can re-lay them out onto a *different* mesh —
-the checkpoint/restart path when the OCS scheduler re-slices after failures
-or when scaling the job up/down (§2.3 / §2.5).
+Layout — one directory per step:
+
+  * ``manifest.json`` — format version, step, data cursor/extra metadata,
+    pytree structure with per-leaf global shape/dtype and the list of
+    *spans* (index ranges) each shard file holds;
+  * ``shard_NNN.npz`` — the leaf data, one file per writer.  A leaf that is
+    sharded across devices (or split with ``shards=N`` for parallel IO)
+    appears as several spans spread over several files; a replicated leaf
+    is written once.
+
+Elasticity comes from the span representation: ``save`` records *where in
+the global array* each saved chunk lives (taken from the jax.Array's
+addressable shards, deduplicated across replicas), and ``restore``
+reassembles the global array from spans and re-lays it out onto the target
+mesh via ``device_put`` with the caller's shardings.  Nothing about the
+source mesh shape survives into the restored arrays, so save on an 8-block
+slice / restore on a 2-block slice is the same code path as a same-shape
+round-trip (bitwise-identical — pinned by tests/test_optim_checkpoint.py).
+
+Format v1 (single ``arrays.npz``, PR-1..4 checkpoints) restores
+transparently.
 """
 from __future__ import annotations
 
 import json
 import pathlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+FORMAT_VERSION = 2
+
+# dtypes npz can serialise natively; anything else (bfloat16 & friends from
+# ml_dtypes) is stored as a lossless float32 upcast and cast back on restore
+_NATIVE_DTYPES = ("float64", "float32", "float16", "int64", "int32",
+                  "int16", "int8", "uint8", "uint16", "uint32", "uint64",
+                  "bool")
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -30,56 +54,176 @@ def _flatten(tree) -> Dict[str, Any]:
     return out
 
 
-def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None
-         ) -> pathlib.Path:
+def _leaf_spans(leaf, arr: np.ndarray, shards: int
+                ) -> List[Tuple[Tuple[int, ...], Tuple[int, ...],
+                                np.ndarray]]:
+    """Break one leaf into (start, stop, data) spans.
+
+    Sharded jax.Arrays contribute their addressable shards (deduplicated
+    across replicas — each distinct index range is written once); host
+    arrays and replicated leaves are optionally split along their first
+    axis into ``shards`` chunks for parallel IO."""
+    ndim = arr.ndim
+    if isinstance(leaf, jax.Array) and not leaf.is_fully_replicated:
+        seen = set()
+        spans = []
+        for sh in leaf.addressable_shards:
+            idx = sh.index if isinstance(sh.index, tuple) else (sh.index,)
+            start = tuple((s.start or 0) for s in idx)
+            stop = tuple(s.stop if s.stop is not None else dim
+                         for s, dim in zip(idx, arr.shape))
+            if (start, stop) in seen:
+                continue
+            seen.add((start, stop))
+            # slice the (dtype-normalised) global host copy rather than
+            # sh.data: spans must all be in saved_dtype
+            sel = tuple(slice(a, b) for a, b in zip(start, stop))
+            spans.append((start, stop, arr[sel]))
+        if spans:
+            return spans
+    if shards > 1 and ndim >= 1 and arr.shape[0] >= 2:
+        n = min(shards, arr.shape[0])
+        cuts = np.linspace(0, arr.shape[0], n + 1, dtype=int)
+        spans = []
+        for lo, hi in zip(cuts[:-1], cuts[1:]):
+            if lo == hi:
+                continue
+            start = (int(lo),) + (0,) * (ndim - 1)
+            stop = (int(hi),) + tuple(arr.shape[1:])
+            spans.append((start, stop, arr[lo:hi]))
+        return spans
+    full_start = (0,) * ndim
+    return [(full_start, tuple(arr.shape), arr)]
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None,
+         shards: int = 1) -> pathlib.Path:
+    """Write one elastic checkpoint.
+
+    Args:
+      ckpt_dir: checkpoint root; the step lands in ``step_{step:08d}/``.
+      step: global training step (also the data cursor — the synthetic
+        `Dataset` is pure in ``(seed, step)``, so step alone pins the
+        exact next batch on resume).
+      tree: any pytree of jax/numpy arrays (params, optimizer state, …).
+      extra: JSON-serialisable metadata stored in the manifest (the trainer
+        records the data seed and source-slice geometry here).
+      shards: split each unsharded leaf into up to this many spans along
+        its first axis (parallel-IO layout; sharded jax.Arrays already
+        write one span per distinct device shard).
+
+    Returns the step directory path."""
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
-    arrays = {}
-    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    manifest: Dict[str, Any] = {"format": FORMAT_VERSION, "step": step,
+                                "extra": extra or {}, "leaves": {}}
+    files: List[Dict[str, np.ndarray]] = []      # shard file -> npz payload
     for k, v in flat.items():
         arr = np.asarray(jax.device_get(v))
         dtype = str(arr.dtype)
-        if dtype not in ("float64", "float32", "float16", "int64", "int32",
-                         "int16", "int8", "uint8", "uint16", "uint32",
-                         "uint64", "bool"):
-            # npz can't serialise ml_dtypes (bfloat16 etc.) — store a
-            # lossless float32 upcast and record the original dtype
+        if dtype not in _NATIVE_DTYPES:
             arr = arr.astype(np.float32)
-        arrays[k] = arr
-        manifest["leaves"][k] = {"shape": list(arr.shape), "dtype": dtype}
-    np.savez(d / "arrays.npz", **arrays)
+        spans = _leaf_spans(v, arr, shards)
+        entry = {"shape": list(arr.shape), "dtype": dtype,
+                 "saved_dtype": str(arr.dtype), "spans": []}
+        for i, (start, stop, data) in enumerate(spans):
+            while len(files) <= i:
+                files.append({})
+            # NB: ascontiguousarray would promote 0-d leaves to 1-d
+            files[i][k] = (np.ascontiguousarray(data) if data.ndim
+                           else np.asarray(data))
+            entry["spans"].append({"file": f"shard_{i:03d}",
+                                   "start": list(start),
+                                   "stop": list(stop)})
+        manifest["leaves"][k] = entry
+    for i, payload in enumerate(files):
+        np.savez(d / f"shard_{i:03d}.npz", **payload)
     (d / "manifest.json").write_text(json.dumps(manifest))
     (pathlib.Path(ckpt_dir) / "LATEST").write_text(str(step))
     return d
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Step number of the newest checkpoint under ``ckpt_dir`` (or None)."""
     p = pathlib.Path(ckpt_dir) / "LATEST"
     if not p.exists():
         return None
     return int(p.read_text().strip())
 
 
+def read_manifest(ckpt_dir: str, step: Optional[int] = None
+                  ) -> Dict[str, Any]:
+    """Load a checkpoint's manifest (latest step when ``step`` is None)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoint under {ckpt_dir}"
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text())
+
+
+def _assemble(d: pathlib.Path, entry: Dict[str, Any], key: str,
+              shard_cache: Dict[str, Any]) -> np.ndarray:
+    """Rebuild one leaf's global host array from its manifest spans."""
+    shape = tuple(entry["shape"])
+    spans = entry["spans"]
+    if (len(spans) == 1 and tuple(spans[0]["start"]) == (0,) * len(shape)
+            and tuple(spans[0]["stop"]) == shape):
+        data = _shard(d, spans[0]["file"], shard_cache)[key]
+        return np.asarray(data).reshape(shape)
+    out = np.empty(shape, dtype=np.dtype(entry["saved_dtype"]))
+    covered = 0
+    for sp in spans:
+        sel = tuple(slice(a, b) for a, b in zip(sp["start"], sp["stop"]))
+        chunk = _shard(d, sp["file"], shard_cache)[key]
+        out[sel] = chunk
+        covered += int(np.prod([b - a for a, b in
+                                zip(sp["start"], sp["stop"])]))
+    assert covered == int(np.prod(shape)), \
+        f"{key}: spans cover {covered} of {int(np.prod(shape))} elements"
+    return out
+
+
+def _shard(d: pathlib.Path, name: str, cache: Dict[str, Any]):
+    if name not in cache:
+        cache[name] = np.load(d / f"{name}.npz")
+    return cache[name]
+
+
 def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
             shardings=None) -> Tuple[Any, int, Dict]:
-    """Restore into the structure of ``tree_like`` (shapes/dtypes pytree).
+    """Restore a checkpoint into the structure of ``tree_like``.
 
-    ``shardings``: optional matching pytree of NamedShardings for the target
-    mesh (elastic re-layout happens here via device_put).
-    """
+    Args:
+      ckpt_dir: checkpoint root written by `save`.
+      tree_like: pytree of ``ShapeDtypeStruct``-likes giving the target
+        structure, shapes, and dtypes (shapes must match the saved global
+        shapes — elasticity changes the *layout*, not the math).
+      step: explicit step to restore (default: latest).
+      shardings: optional matching pytree of ``NamedSharding``s for the
+        target mesh — this is the elastic re-layout: spans are assembled
+        into the global array on host and ``device_put`` carves it onto
+        whatever mesh the *new* slice has, regardless of how the source
+        slice was shaped.
+
+    Returns ``(tree, step, extra)``."""
     if step is None:
         step = latest_step(ckpt_dir)
         assert step is not None, f"no checkpoint under {ckpt_dir}"
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
-    data = np.load(d / "arrays.npz")
+    version = manifest.get("format", 1)
+    shard_cache: Dict[str, Any] = {}
+    legacy = np.load(d / "arrays.npz") if version < 2 else None
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
     for path, like in flat:
         k = jax.tree_util.keystr(path)
-        arr = data[k]
+        if legacy is not None:
+            arr = legacy[k]
+        else:
+            arr = _assemble(d, manifest["leaves"][k], k, shard_cache)
         want = tuple(like.shape)
         assert tuple(arr.shape) == want, (k, arr.shape, want)
         leaves.append(jnp.asarray(arr).astype(like.dtype))

@@ -1,4 +1,4 @@
-"""Fault-tolerant trainer (DESIGN.md §8).
+"""Fault-tolerant, preemptible trainer (DESIGN.md §8).
 
 Orchestrates: synthetic data -> sharded train step -> periodic checkpoints,
 with the OCS scheduler in the loop: on an (injected or real) block failure
@@ -6,8 +6,16 @@ the scheduler swaps a spare block in (§2.3), and the trainer restores from
 the last checkpoint and continues — the paper's checkpoint/restore,
 everything-must-work HPC training style, made cheap by OCS re-routing.
 
-On this CPU container the "mesh" is whatever devices exist; the fault path
-exercises the full restore logic regardless of scale.
+Training is also an *elastic tenant*: `request_preempt` (driven by the
+cluster layer's ``"preempt"`` `SliceEvent`) makes the loop checkpoint at
+the next step boundary and return early, so a serving burst can reclaim
+the blocks.  The checkpoint is slice-shape-elastic (`repro.train.
+checkpoint`): a fresh `Trainer` on a *differently shaped* slice restores
+it bitwise and continues the exact same loss curve — the data cursor is
+just the step (the synthetic `Dataset` is pure in ``(seed, step)``).
+
+On this CPU container the "mesh" is whatever devices exist; the fault and
+preemption paths exercise the full restore logic regardless of scale.
 """
 from __future__ import annotations
 
@@ -32,18 +40,38 @@ from repro.train import checkpoint as CKPT
 
 @dataclasses.dataclass
 class TrainerState:
+    """Everything training needs to continue: parameters, optimizer state,
+    and the global step (which doubles as the data cursor)."""
     params: Any
     opt_state: Any
     step: int
 
 
 class Trainer:
+    """Training loop bound to one mesh, with checkpoint/restore, fault
+    drills, and cooperative preemption.
+
+    Args:
+      run: full `RunConfig` (model, shape, parallelism, optimizer).
+      mesh: jax mesh to compile and run the train step on.
+      ckpt_dir: checkpoint root (no checkpoints when None).
+      ckpt_every: periodic checkpoint interval in steps.
+      accum_steps: optional gradient-accumulation microsteps.
+      slice_dims: chip geometry of the slice this trainer runs on, recorded
+        in checkpoint manifests so an elastic resume can report the shape
+        change (purely observational).
+    """
+
     def __init__(self, run: RunConfig, mesh, *, ckpt_dir: Optional[str] = None,
-                 ckpt_every: int = 50, accum_steps: Optional[int] = None):
+                 ckpt_every: int = 50, accum_steps: Optional[int] = None,
+                 slice_dims: Optional[tuple] = None):
         self.run = run
         self.mesh = mesh
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
+        self.slice_dims = slice_dims
+        self.preempt_requested = False
+        self.preempted = False
         self.ctx = SH.make_context(mesh, run.parallel)
         self.dataset = Dataset(run.model, run.shape, seed=run.seed)
         self.metrics_log: List[Dict[str, float]] = []
@@ -75,6 +103,7 @@ class Trainer:
     # -- state ------------------------------------------------------------------
 
     def init_state(self) -> TrainerState:
+        """Fresh params + optimizer state at step 0 (seeded by the run)."""
         key = jax.random.PRNGKey(self.run.seed)
         with mesh_scope(self.mesh):
             params = jax.jit(
@@ -86,15 +115,32 @@ class Trainer:
         return TrainerState(params, opt, 0)
 
     def save(self, state: TrainerState) -> None:
+        """Checkpoint ``state`` (params + optimizer + data cursor).  The
+        manifest records the data seed and source-slice geometry, so a
+        resume on a different slice can verify it continues the same data
+        stream."""
         if not self.ckpt_dir:
             return
         CKPT.save(self.ckpt_dir, state.step,
                   {"params": state.params, "opt": state.opt_state},
-                  extra={"step": state.step})
+                  extra={"step": state.step, "data_seed": self.run.seed,
+                         "slice_dims": (list(self.slice_dims)
+                                        if self.slice_dims else None)})
+
+    def request_preempt(self) -> None:
+        """Cooperative preemption: ask the running loop to checkpoint and
+        stop at the next step boundary (idempotent; safe before `train`
+        too — the loop then checkpoints immediately and returns).
+
+        Persistence needs ``ckpt_dir``: without one the loop still stops
+        and returns its state, but nothing lands on disk — the caller must
+        keep the returned `TrainerState` (passing it back to `train`)
+        or the resume falls back to a fresh init."""
+        self.preempt_requested = True
 
     def restore(self, *, mesh=None) -> Optional[TrainerState]:
         """Restore latest checkpoint, optionally onto a different mesh
-        (elastic rescale path)."""
+        (elastic rescale path).  Returns None with no checkpoint on disk."""
         if not self.ckpt_dir or CKPT.latest_step(self.ckpt_dir) is None:
             return None
         key = jax.random.PRNGKey(self.run.seed)
@@ -104,9 +150,13 @@ class Trainer:
             lambda: OPT.init(self.run.optimizer, jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
                 params_shape)))
-        tree, step, _ = CKPT.restore(
+        tree, step, extra = CKPT.restore(
             self.ckpt_dir, {"params": params_shape, "opt": opt_shape},
             shardings={"params": self._in_sh[0], "opt": self._in_sh[1]})
+        saved_seed = extra.get("data_seed")
+        assert saved_seed is None or saved_seed == self.run.seed, (
+            f"checkpoint was trained on data seed {saved_seed}, this run "
+            f"uses {self.run.seed}: resuming would fork the data stream")
         return TrainerState(tree["params"], tree["opt"], step)
 
     # -- loop ------------------------------------------------------------------
@@ -117,13 +167,43 @@ class Trainer:
 
     def train(self, num_steps: int, *, state: Optional[TrainerState] = None,
               fail_at: Optional[int] = None,
+              preempt_at: Optional[int] = None,
               scheduler: Optional[SliceScheduler] = None,
               job_id: Optional[int] = None,
               log_every: int = 10) -> TrainerState:
+        """Run the loop to ``num_steps`` (absolute step count).
+
+        Args:
+          state: state to continue from (default: latest checkpoint, else a
+            fresh init).
+          fail_at: inject a block failure at this step — the §2.3 drill:
+            the scheduler swaps in a spare and training restores from the
+            last checkpoint.
+          preempt_at: inject `request_preempt` at this step (tests the
+            cooperative-eviction path without a cluster driver).
+          scheduler/job_id: OCS scheduler wiring for the fault drill.
+          log_every: metric logging period.
+
+        Returns the final `TrainerState`.  If a preemption request arrived
+        (externally or via ``preempt_at``), the loop checkpointed, set
+        `preempted`, and returned early — the caller frees the slice and
+        resumes later from the checkpoint, on any slice shape."""
         state = state or self.restore() or self.init_state()
         t0 = time.time()
         step = state.step
+        self.preempted = False
         while step < num_steps:
+            if preempt_at is not None and step == preempt_at:
+                preempt_at = None
+                self.request_preempt()
+            if self.preempt_requested:
+                # cooperative eviction: persist everything (params, opt
+                # state, data cursor = step) and hand the slice back
+                self.save(state)
+                self.preempt_requested = False
+                self.preempted = True
+                self.metrics_log.append({"step": step, "preempt": 1.0})
+                return state
             if fail_at is not None and step == fail_at:
                 # -- simulated block failure (TrainSession.run drives this)
                 if scheduler is not None and job_id is not None:
@@ -149,6 +229,16 @@ class Trainer:
                 self.metrics_log.append(m)
             if self.ckpt_dir and step % self.ckpt_every == 0:
                 self.save(state)
+        if self.preempt_requested:
+            # a request that arrived with no steps left to run (entered at
+            # step >= num_steps, or raced the final step): service it here
+            # so the flag never leaks into the next call and the caller
+            # still gets the checkpointed/preempted contract
+            self.save(state)
+            self.preempt_requested = False
+            self.preempted = True
+            self.metrics_log.append({"step": step, "preempt": 1.0})
+            return state
         if self.ckpt_dir:
             self.save(state)
         return state

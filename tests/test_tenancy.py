@@ -1,0 +1,288 @@
+"""Elastic mixed tenancy: scheduler priorities/preemption, cooperative
+trainer eviction, checkpoint-elastic resume on a different slice shape
+(bitwise loss-curve pin), and the mixed-workload driver."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.cluster import (CapacityError, ElasticTrainJob, Supercomputer,
+                           TrainTenantSpec)
+from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
+                           ShapeConfig, registry)
+from repro.core.scheduler import SliceScheduler
+
+
+def _run(arch="olmo-1b", gb=4, T=32, seed=0):
+    return RunConfig(
+        model=registry.get_reduced(arch),
+        shape=ShapeConfig("t", "train", T, gb),
+        parallel=ParallelConfig(remat="none"),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2),
+        seed=seed)
+
+
+class TestSchedulerPriorities:
+    def test_jobs_carry_priority(self):
+        s = SliceScheduler(num_blocks=4)
+        j = s.allocate((4, 4, 4), priority=3)
+        assert j.priority == 3
+
+    def test_victims_lowest_priority_first(self):
+        s = SliceScheduler(num_blocks=4)
+        lo = s.allocate((4, 4, 4), priority=0)
+        mid = s.allocate((4, 4, 4), priority=1)
+        s.allocate((4, 4, 8), priority=2)           # 2 blocks, high
+        victims = s.preemption_victims((4, 4, 8), priority=2)
+        assert [v.job_id for v in victims] == [lo.job_id, mid.job_id]
+
+    def test_no_victims_needed_when_fits(self):
+        s = SliceScheduler(num_blocks=4)
+        s.allocate((4, 4, 4), priority=0)
+        assert s.preemption_victims((4, 4, 8), priority=1) == []
+
+    def test_equal_priority_never_preempted(self):
+        s = SliceScheduler(num_blocks=2)
+        s.allocate((4, 4, 4), priority=1)
+        s.allocate((4, 4, 4), priority=1)
+        assert s.preemption_victims((4, 4, 4), priority=1) is None
+
+    def test_contiguous_mode_offers_no_preemption(self):
+        s = SliceScheduler(num_blocks=8, contiguous=True)
+        s.allocate((4, 4, 4), priority=0)
+        assert s.preemption_victims((8, 8, 8), priority=5) is None
+
+    def test_fewest_blocks_evicted(self):
+        s = SliceScheduler(num_blocks=6)
+        big = s.allocate((4, 4, 16), priority=0)     # 4 blocks
+        small = s.allocate((4, 4, 8), priority=0)    # 2 blocks
+        victims = s.preemption_victims((4, 4, 8), priority=1)
+        assert [v.job_id for v in victims] == [small.job_id]
+        assert big.job_id in s.jobs
+
+
+class TestFacadePreemption:
+    def test_cooperative_tenant_is_evicted(self):
+        sc = Supercomputer(num_blocks=2)
+        victim = sc.allocate((4, 4, 8), priority=0)
+        sess = victim.train(_run())                  # session, no steps yet
+
+        freed = []
+
+        def cooperate(_session, ev):
+            if ev.kind == "preempt":
+                victim.free()
+                freed.append(ev)
+
+        sess.add_listener(cooperate)
+        winner = sc.allocate((4, 4, 8), priority=1, preempt=True)
+        assert winner is not None and len(freed) == 1
+        assert victim.status == "freed"
+        winner.free()
+
+    def test_uncooperative_tenant_keeps_running(self):
+        sc = Supercomputer(num_blocks=2)
+        squatter = sc.allocate((4, 4, 8), priority=0)
+        with pytest.raises(CapacityError):
+            sc.allocate((4, 4, 8), priority=1, preempt=True)
+        assert squatter.status == "active"
+
+    def test_preempt_never_evicts_higher_priority(self):
+        sc = Supercomputer(num_blocks=2)
+        sc.allocate((4, 4, 8), priority=5)
+        assert sc.allocate((4, 4, 8), priority=1, preempt=True,
+                           required=False) is None
+
+    def test_run_pending_priority_order(self):
+        sc = Supercomputer(num_blocks=2)
+        order = []
+        sc.submit((4, 4, 8), lambda sl: order.append("lo"), priority=0)
+        sc.submit((4, 4, 8), lambda sl: order.append("hi"), priority=9)
+        done = sc.run_pending()
+        assert order == ["hi", "lo"]
+        assert all(t.status == "done" for t in done)
+
+
+class TestTrainerPreemption:
+    def test_preempt_checkpoints_and_stops(self, tmp_path):
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((4, 4, 8))
+        sess = sl.train(_run(), ckpt_dir=str(tmp_path), ckpt_every=1000)
+        state = sess.trainer.train(10, preempt_at=4, log_every=1)
+        assert sess.preempted
+        assert state.step == 4
+        from repro.train import checkpoint as CKPT
+        assert CKPT.latest_step(str(tmp_path)) == 4
+        extra = CKPT.read_manifest(str(tmp_path))["extra"]
+        assert extra["step"] == 4 and extra["data_seed"] == 0
+        assert extra["slice_dims"] == [4, 4, 8]
+        sl.free()
+
+    def test_preempt_event_reaches_trainer(self, tmp_path):
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((4, 4, 8))
+        sess = sl.train(_run(), ckpt_dir=str(tmp_path))
+        sl.request_preempt("test eviction")
+        assert sess.trainer.preempt_requested
+        # the flag makes the next run() checkpoint immediately and stop
+        state = sess.run(10, log_every=1)
+        assert sess.preempted and state.step == 0
+        sl.free()
+
+    def test_preempt_with_no_steps_left_still_serviced(self, tmp_path):
+        """A preempt request entering `train` at step >= num_steps must
+        still checkpoint and report preempted — and must not leak the flag
+        into the next call."""
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((4, 4, 4))
+        sess = sl.train(_run(), ckpt_dir=str(tmp_path), ckpt_every=1000)
+        state = sess.run(3, log_every=1)
+        sess.trainer.request_preempt()
+        state = sess.run(3, log_every=1)         # zero steps to run
+        assert sess.preempted and state.step == 3
+        from repro.train import checkpoint as CKPT
+        assert CKPT.latest_step(str(tmp_path)) == 3
+        # flag consumed: the next run makes real progress
+        state = sess.run(5, log_every=1)
+        assert not sess.preempted and state.step == 5
+        sl.free()
+
+    def test_resume_on_different_shape_bitwise(self, tmp_path):
+        """THE elastic-checkpoint contract: preempt mid-run, resume on a
+        slice with a different block count, and the loss curve is BITWISE
+        equal to an uninterrupted run at the same global batch."""
+        sc = Supercomputer(num_blocks=8)
+        ref_slice = sc.allocate((4, 4, 8))
+        ref = ref_slice.train(_run(), 8, log_every=1)
+        ref_losses = {m["step"]: m["loss"] for m in ref.metrics_log
+                      if "loss" in m}
+        ref_slice.free()
+
+        a = sc.allocate((4, 4, 8))                   # 2 blocks
+        sess_a = a.train(_run(), ckpt_dir=str(tmp_path), ckpt_every=1000)
+        state = sess_a.trainer.train(8, preempt_at=4, log_every=1)
+        assert sess_a.preempted and state.step == 4
+        got = {m["step"]: m["loss"] for m in sess_a.metrics_log
+               if "loss" in m}
+        a.free()
+
+        b = sc.allocate((4, 4, 4))                   # 1 block: NEW shape
+        sess_b = b.train(_run(), ckpt_dir=str(tmp_path), ckpt_every=1000)
+        sess_b.run(8, log_every=1)
+        got.update({m["step"]: m["loss"] for m in sess_b.metrics_log
+                    if "loss" in m})
+        b.free()
+
+        assert set(got) >= set(ref_losses)
+        for step, loss in ref_losses.items():
+            assert got[step] == loss, (step, got[step], loss)
+
+    def test_mismatched_data_seed_refuses_resume(self, tmp_path):
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((4, 4, 4))
+        sess = sl.train(_run(seed=0), ckpt_dir=str(tmp_path), ckpt_every=2)
+        sess.run(2, log_every=1)
+        sl.free()
+        sl2 = sc.allocate((4, 4, 4))
+        sess2 = sl2.train(_run(seed=1), ckpt_dir=str(tmp_path))
+        with pytest.raises(AssertionError, match="data stream"):
+            sess2.run(4)
+        sl2.free()
+
+
+class TestElasticTrainJob:
+    def _spec(self, d, **kw):
+        kw.setdefault("geometries", ((4, 4, 8), (4, 4, 4)))
+        kw.setdefault("target_steps", 6)
+        kw.setdefault("base_step_s", 0.25)
+        return TrainTenantSpec(run=_run(), ckpt_dir=d, **kw)
+
+    def test_preempt_resume_grow_lifecycle(self):
+        with tempfile.TemporaryDirectory() as d:
+            sc = Supercomputer(num_blocks=2)
+            job = ElasticTrainJob(sc, self._spec(d, target_steps=20))
+            assert job.try_start(0.0)
+            assert job.slice.dims == (4, 4, 8)       # largest fits
+            assert job.run_quantum(0.5) > 0
+
+            # a priority-1 tenant takes the machine: cooperative eviction
+            hi = sc.allocate((4, 4, 8), priority=1, preempt=True)
+            assert job.state == "preempted" and job.preemptions == 1
+            assert job.blocks_held == 0
+
+            # machine still full: resume fails cleanly
+            assert not job.try_start(1.0)
+            hi.free()
+
+            # resume; then the whole machine frees and the job grows
+            sc2_busy = sc.allocate((4, 4, 4), priority=1)
+            assert job.try_start(2.0)
+            assert job.slice.dims == (4, 4, 4)       # squeezed to 1 block
+            assert job.resumes == 1
+            steps_small = job.run_quantum(0.5)
+            sc2_busy.free()
+            assert job.maybe_grow(3.0)
+            assert job.slice.dims == (4, 4, 8) and job.grows == 1
+            steps_big = job.run_quantum(0.5)
+            assert steps_big > steps_small           # more blocks, more steps
+
+    def test_quantum_scales_with_blocks(self):
+        with tempfile.TemporaryDirectory() as d:
+            sc = Supercomputer(num_blocks=4)
+            job = ElasticTrainJob(sc, self._spec(
+                d, target_steps=1000, geometries=((4, 4, 8),)))
+            assert job.try_start()
+            assert job.steps_in(0.5) == 4            # 2 blocks / 0.25s
+            job.state = "done"                       # skip actual training
+
+    def test_completion_frees_blocks(self):
+        with tempfile.TemporaryDirectory() as d:
+            sc = Supercomputer(num_blocks=2)
+            job = ElasticTrainJob(sc, self._spec(d, target_steps=2))
+            assert job.try_start()
+            while job.state == "running":
+                job.run_quantum(0.5)
+            assert job.state == "done" and job.steps_done == 2
+            assert len(sc.scheduler.free) == 2       # everything returned
+
+
+class TestMixedDriver:
+    def test_serve_burst_evicts_and_training_recovers(self):
+        """A minimal end-to-end co-tenancy run: the serving burst forces a
+        preemption through the scheduler, every request completes, and
+        training still finishes its steps in the trough."""
+        import jax
+
+        from repro.cluster import MixedTenancyDriver, SliceSpec
+        from repro.fleet import (AutoscalerConfig, FleetService,
+                                 uniform_burst)
+        from repro.models import api
+
+        cfg = registry.get_reduced("olmo-1b")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            sc = Supercomputer(num_blocks=2)
+            svc = FleetService(
+                sc, cfg, params,
+                SliceSpec(slots=2, max_len=48, prompt_len=8, chunk=4),
+                geometry=(4, 4, 4), initial_replicas=1, timing=0.2,
+                autoscale=AutoscalerConfig(
+                    min_replicas=1, max_replicas=2, tick_s=0.1,
+                    cooldown_s=0.2, scale_up_backlog=1.5,
+                    scale_down_backlog=0.25, provision_s=0.05),
+                priority=1, preempt_on_allocate=True)
+            job = ElasticTrainJob(sc, TrainTenantSpec(
+                run=_run(), target_steps=10, ckpt_dir=d,
+                geometries=((4, 4, 4),), base_step_s=0.25))
+            assert job.try_start(0.0)
+            drv = MixedTenancyDriver(svc, job, window_s=0.5)
+            burst = uniform_burst(8, new_tokens=8, prompt_len=6,
+                                  t_arrival=0.25)
+            rep = drv.run(burst, extra_windows=6, arm="elastic")
+            svc.close()
+            assert rep.serve["completed"] == 8
+            assert rep.serve["dropped"] == 0
+            assert rep.train_preemptions >= 1        # burst evicted training
+            assert rep.train_resumes >= 1            # and it came back
+            assert rep.train_steps == 10             # and finished
+            assert rep.combined_score > 1.0
