@@ -1,0 +1,268 @@
+"""Prefix-shared KV pool benchmark -> BENCH_kvprefix.json.
+
+Three scenarios over the pooled serving path (`serve/kvpool.py` +
+`SliceSpec.kv_block`), all driven by a SHARED-HEADER traffic mix: every
+request opens with its SLO tier's fixed system-prompt header, half also
+carry one of a small pool of few-shot preambles, and only the short tail
+is per-request random (`TrafficSpec.header_len`/`fewshot_*`).
+
+  * **bitwise** (gated) — the same trace served by one pooled engine with
+    sharing ON and one with sharing OFF (``kv_share=False``: identical
+    pooled layout, no trie).  Greedy outputs must be BITWISE-identical —
+    sharing is an execution strategy, not an approximation — and both
+    engines must pass the ``kv_close`` zero-leak audit.
+  * **fleet** (measured timing, gated) — the same shared-header trace
+    through two 2-replica fleets: pooled engines + ``prefix_affinity``
+    routing vs the PR-3 dense fast path + ``least_eta``.  Both arms meter
+    prefill work with the same proxy (dispatch width x slots, summed over
+    dispatches); the pooled arm must cut aggregate prefill FLOPs by
+    ``GATE_FLOPS_X`` (2x) AND beat the dense arm's aggregate tokens/s by
+    ``GATE_TOKENS_X`` (1.3x).  Chunk costs are real measured wall
+    latencies; compile happens in warmup, outside virtual time.
+  * **routing** (deterministic timing, gated) — pooled engines under BOTH
+    policies on a 3-replica fleet: ``prefix_affinity`` steers same-header
+    requests to the replica already holding the prefix, ``least_eta``
+    spreads them, so every replica cold-prefills every header.  The gate:
+    affinity's shared-token fraction (prefix hit-rate) beats least_eta's
+    on the same trace.
+
+    python benchmarks/kv_prefix.py            # full run + gates
+    python benchmarks/kv_prefix.py --quick    # CI-sized run + gates
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+import jax
+
+from repro.cluster import Supercomputer
+from repro.configs import registry
+from repro.fleet import FleetService, RouterConfig, TrafficSpec, generate
+from repro.models import api
+from repro.serve.engine import ServeEngine, SliceSpec
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_kvprefix.json"
+
+ARCH = "olmo-1b"
+GEOMETRY = (4, 4, 4)
+HEADER_LEN = 224                    # tier system-prompt, 14 blocks
+FEWSHOT_LEN = 16                    # optional preamble, 1 more block
+POOLED = SliceSpec(slots=8, max_len=288, prompt_len=256, chunk=8,
+                   kv_block=16, suffix_len=64)
+NOSHARE = dataclasses.replace(POOLED, kv_share=False)
+LEGACY = SliceSpec(slots=8, max_len=288, prompt_len=256, chunk=8)
+GATE_FLOPS_X = 2.0                  # aggregate prefill-FLOPs reduction
+GATE_TOKENS_X = 1.3                 # aggregate fleet tokens/s speedup
+CHUNK_S = 0.05                      # virtual chunk cost, routing scenario
+
+
+def _model():
+    cfg = registry.get_reduced(ARCH)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _traffic(quick: bool, rate_rps: float = 12.0) -> TrafficSpec:
+    # header(224) + fewshot(16) + tail(<=16) == prompt_len exactly: the
+    # whole prompt fits the prefill window, so the shared header is never
+    # truncated away and block alignment is identical across requests
+    return TrafficSpec(
+        duration_s=1.5 if quick else 3.0, rate_rps=rate_rps,
+        prompt_len_mean=8.0, prompt_len_max=16,
+        new_tokens_choices=(4, 8), new_tokens_weights=(0.6, 0.4),
+        header_len=HEADER_LEN, fewshot_len=FEWSHOT_LEN,
+        fewshot_pool=2, fewshot_prob=0.5)
+
+
+def scenario_bitwise(cfg, params, quick: bool):
+    """One engine, sharing on vs off: outputs bitwise-equal, zero leaks."""
+    trace = generate(_traffic(quick), seed=5)
+    n = min(len(trace), 12 if quick else 24)
+    arms = {}
+    for name, spec in (("share", POOLED), ("noshare", NOSHARE)):
+        eng = ServeEngine(cfg, params, spec)
+        reqs = [eng.submit(r.prompt, max_new_tokens=r.max_new_tokens)
+                for r in trace[:n]]
+        eng.run()
+        assert all(r.done for r in reqs)
+        arms[name] = {
+            "outputs": [list(r.out_tokens) for r in reqs],
+            "prefill_flops_proxy": eng.prefill_flops_proxy,
+            "kv_shared_tokens": eng.kv_shared_tokens,
+            "kv_prompt_tokens": eng.kv_prompt_tokens,
+        }
+        eng.kv_close()              # raises if any block leaked
+    identical = arms["share"]["outputs"] == arms["noshare"]["outputs"]
+    return {
+        "requests": n,
+        "bitwise_identical": bool(identical),
+        "blocks_leaked": 0,         # kv_close audited both arms above
+        "share_prefill_flops_proxy": arms["share"]["prefill_flops_proxy"],
+        "noshare_prefill_flops_proxy":
+            arms["noshare"]["prefill_flops_proxy"],
+        "share_kv_shared_tokens": arms["share"]["kv_shared_tokens"],
+        "kv_prompt_tokens": arms["share"]["kv_prompt_tokens"],
+    }
+
+
+def _agg(rep, key):
+    return sum(int(s.get(key, 0)) for s in rep.replica_stats)
+
+
+def scenario_fleet(cfg, params, quick: bool):
+    """Pooled + prefix_affinity vs dense fast path + least_eta, measured."""
+    arms = {}
+    for name, spec, policy in (("unshared", LEGACY, "least_eta"),
+                               ("shared", POOLED, "prefix_affinity")):
+        sc = Supercomputer(num_blocks=8)
+        svc = FleetService(sc, cfg, params, spec, geometry=GEOMETRY,
+                           initial_replicas=2,
+                           router=RouterConfig(policy=policy),
+                           timing="measured")
+        svc.warmup()
+        trace = generate(_traffic(quick, rate_rps=48.0), seed=9)
+        for r in trace:
+            r.t_arrival = 0.0   # closed batch: the whole shared-header mix
+        rep = svc.run(trace)    # at t=0, so makespan measures compute
+        assert rep.completed == len(trace) and rep.dropped == 0, rep
+        arms[name] = {
+            "policy": policy,
+            "tokens_per_s": rep.aggregate_tokens_per_s,
+            "p50_ttft_s": rep.p50_ttft_s,
+            "p95_ttft_s": rep.p95_ttft_s,
+            "prefill_flops_proxy": _agg(rep, "prefill_flops_proxy"),
+            "kv_prompt_tokens": _agg(rep, "kv_prompt_tokens"),
+            "kv_shared_tokens": _agg(rep, "kv_shared_tokens"),
+            "prefix_hits": svc.router.prefix_hits,
+            "prefix_misses": svc.router.prefix_misses,
+        }
+    flops_x = (arms["unshared"]["prefill_flops_proxy"]
+               / max(arms["shared"]["prefill_flops_proxy"], 1))
+    tokens_x = (arms["shared"]["tokens_per_s"]
+                / max(arms["unshared"]["tokens_per_s"], 1e-9))
+    return {
+        "unshared": arms["unshared"],
+        "shared": arms["shared"],
+        "prefill_flops_reduction_x": round(flops_x, 2),
+        "tokens_per_s_speedup_x": round(tokens_x, 2),
+        "gate": {
+            "flops_threshold_x": GATE_FLOPS_X,
+            "tokens_threshold_x": GATE_TOKENS_X,
+            "passed": bool(flops_x >= GATE_FLOPS_X
+                           and tokens_x >= GATE_TOKENS_X),
+        },
+    }
+
+
+def scenario_routing(cfg, params, quick: bool):
+    """prefix_affinity vs least_eta over IDENTICAL pooled fleets: hit-rate
+    (shared fraction of prompt tokens) must favour affinity."""
+    arms = {}
+    for policy in ("prefix_affinity", "least_eta"):
+        sc = Supercomputer(num_blocks=8)
+        svc = FleetService(sc, cfg, params, POOLED, geometry=GEOMETRY,
+                           initial_replicas=3,
+                           router=RouterConfig(policy=policy),
+                           timing=CHUNK_S)
+        trace = generate(_traffic(quick, rate_rps=16.0), seed=3)
+        rep = svc.run(trace)
+        assert rep.completed == len(trace) and rep.dropped == 0, rep
+        prompt = _agg(rep, "kv_prompt_tokens")
+        shared = _agg(rep, "kv_shared_tokens")
+        arms[policy] = {
+            "requests": len(trace),
+            "kv_prompt_tokens": prompt,
+            "kv_shared_tokens": shared,
+            "shared_fraction": round(shared / max(prompt, 1), 4),
+            "prefill_flops_proxy": _agg(rep, "prefill_flops_proxy"),
+            "prefix_hits": svc.router.prefix_hits,
+            "prefix_misses": svc.router.prefix_misses,
+            "p95_ttft_s": rep.p95_ttft_s,
+        }
+    aff, eta = arms["prefix_affinity"], arms["least_eta"]
+    return {
+        "prefix_affinity": aff,
+        "least_eta": eta,
+        "gate": {"passed": bool(
+            aff["shared_fraction"] > eta["shared_fraction"]
+            and aff["prefix_hits"] > 0)},
+    }
+
+
+def run(quick: bool = False):
+    cfg, params = _model()
+    bitwise = scenario_bitwise(cfg, params, quick)
+    fleet = scenario_fleet(cfg, params, quick)
+    routing = scenario_routing(cfg, params, quick)
+    record = {
+        "arch": ARCH,
+        "geometry": list(GEOMETRY),
+        "pooled_spec": {
+            "slots": POOLED.slots, "max_len": POOLED.max_len,
+            "prompt_len": POOLED.prompt_len, "chunk": POOLED.chunk,
+            "kv_block": POOLED.kv_block, "suffix_len": POOLED.suffix_len,
+        },
+        "traffic": {"header_len": HEADER_LEN, "fewshot_len": FEWSHOT_LEN,
+                    "fewshot_pool": 2, "fewshot_prob": 0.5},
+        "bitwise": bitwise,
+        "fleet": fleet,
+        "routing": routing,
+    }
+    OUT.write_text(json.dumps(record, indent=2) + "\n")
+    rows = [
+        ("kvprefix_bitwise", 0.0,
+         f"identical={bitwise['bitwise_identical']};"
+         f"shared_tokens={bitwise['share_kv_shared_tokens']};"
+         f"leaked={bitwise['blocks_leaked']}"),
+        ("kvprefix_fleet", 0.0,
+         f"flops_x={fleet['prefill_flops_reduction_x']};"
+         f"need>={GATE_FLOPS_X};"
+         f"tokens_x={fleet['tokens_per_s_speedup_x']};"
+         f"need>={GATE_TOKENS_X};ok={fleet['gate']['passed']}"),
+        ("kvprefix_routing", 0.0,
+         f"affinity_frac="
+         f"{routing['prefix_affinity']['shared_fraction']};"
+         f"least_eta_frac={routing['least_eta']['shared_fraction']};"
+         f"hits={routing['prefix_affinity']['prefix_hits']};"
+         f"ok={routing['gate']['passed']}"),
+    ]
+    if not bitwise["bitwise_identical"]:
+        raise AssertionError(
+            "shared vs unshared greedy outputs diverged — prefix sharing "
+            "must be bitwise-invisible")
+    if bitwise["share_kv_shared_tokens"] <= 0:
+        raise AssertionError(
+            "shared-header trace produced no block sharing — the "
+            "benchmark is not exercising the trie")
+    if not fleet["gate"]["passed"]:
+        raise AssertionError(
+            f"fleet gate: flops_x={fleet['prefill_flops_reduction_x']} "
+            f"(need >= {GATE_FLOPS_X}), "
+            f"tokens_x={fleet['tokens_per_s_speedup_x']} "
+            f"(need >= {GATE_TOKENS_X})")
+    if not routing["gate"]["passed"]:
+        raise AssertionError(
+            "routing gate: prefix_affinity did not beat least_eta on "
+            f"prefix hit-rate: {routing['prefix_affinity']} vs "
+            f"{routing['least_eta']}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (shorter trace), same gates")
+    args = ap.parse_args()
+    try:
+        for name, us, derived in run(quick=args.quick):
+            print(f"{name},{us:.1f},{derived}")
+    except AssertionError as e:
+        print(f"GATE FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

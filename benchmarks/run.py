@@ -20,6 +20,7 @@ BENCHES = [
     "cluster_session",       # serve tokens/s -> BENCH_cluster.json
     "fleet_serving",         # fleet scaling/failure/autoscale -> BENCH_fleet.json
     "mixed_tenancy",         # elastic train+serve tenancy -> BENCH_tenancy.json
+    "kv_prefix",             # prefix-shared KV pool -> BENCH_kvprefix.json
 ]
 
 

@@ -51,6 +51,13 @@ if [[ "${1:-}" != "--fast" ]]; then
     # curve matches the uninterrupted run
     python benchmarks/mixed_tenancy.py --quick
 
+    echo "== kvprefix stage: prefix-shared KV benchmark -> BENCH_kvprefix.json =="
+    # gates: shared vs unshared greedy outputs bitwise-identical with zero
+    # leaked pool blocks, >= 2x aggregate prefill-FLOPs reduction AND
+    # >= 1.3x aggregate fleet tokens/s on the shared-header mix, and
+    # prefix_affinity routing beats least_eta on prefix hit-rate
+    python benchmarks/kv_prefix.py --quick
+
     echo "== archive benchmark artifacts =="
     mkdir -p artifacts
     cp BENCH_*.json artifacts/

@@ -261,6 +261,14 @@ class ServeSession(SliceSession):
         """Measured per-chunk latency EMA (``default`` before any chunk)."""
         return self.engine.chunk_time_ema(default)
 
+    def prefix_lookup(self, prompt) -> int:
+        """Prompt-prefix tokens this session's engine already holds in its
+        shared KV pool (0 when the engine is not pooled, or after the slice
+        died) — the router's prefix-affinity score."""
+        if self.closed:
+            return 0
+        return self.engine.prefix_lookup(prompt)
+
     def expected_ttft_s(self, default_chunk_s: float = 0.05, *,
                         chunk_time_s=None) -> float:
         """Queue-aware TTFT estimate; ``chunk_time_s`` overrides the

@@ -252,7 +252,7 @@ class ServeReplica:
     def stats(self) -> Dict[str, object]:
         if self._final_stats is not None:
             return self._final_stats
-        return {
+        out = {
             "rep_id": self.rep_id,
             "state": self.state,
             "tokens_served": self.tokens_served,
@@ -260,3 +260,15 @@ class ServeReplica:
             "busy_s": round(self.busy_s, 4),
             "truncated_migrations": self.truncated_migrations,
         }
+        eng = getattr(self.session, "engine", None)
+        kv = eng.kv_stats() if eng is not None and hasattr(eng, "kv_stats") \
+            else {}
+        if kv:
+            out.update({
+                "prefill_flops_proxy": kv["prefill_flops_proxy"],
+                "kv_prompt_tokens": kv["kv_prompt_tokens"],
+                "kv_shared_tokens": kv["kv_shared_tokens"],
+                "kv_migrated_shared_blocks": kv["kv_migrated_shared_blocks"],
+                "kv_migrated_suffix_blocks": kv["kv_migrated_suffix_blocks"],
+            })
+        return out

@@ -11,6 +11,15 @@ Policies (pick with ``RouterConfig.policy``):
     short queue of long requests can be worse than a long queue of short
     ones.
   * ``round_robin`` — the classic strawman, kept for comparisons.
+  * ``prefix_affinity`` — score each eligible replica by how many of the
+    request's leading prompt tokens its shared KV pool already holds
+    (`ServeSession.prefix_lookup`, a peek into the engine's prefix trie)
+    and keep only the best scorers; ties — including the no-hit-anywhere
+    case — fall back to ``least_eta`` ordering.  Steering same-header
+    requests (per-tier system prompts, few-shot preambles) to the replica
+    that already prefilled the header turns the kv-pool's block sharing
+    into a fleet-level win: the suffix-only prefill happens where the
+    prefix lives.
 
 Admission backpressure: a replica whose engine already holds
 ``max_queue_per_replica`` unfinished requests is not eligible; when no
@@ -27,7 +36,7 @@ from typing import List, Optional
 from repro.fleet.replica import ServeReplica
 from repro.fleet.traffic import FleetRequest
 
-POLICIES = ("least_loaded", "least_eta", "round_robin")
+POLICIES = ("least_loaded", "least_eta", "round_robin", "prefix_affinity")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +60,8 @@ class Router:
         self.cfg = cfg or RouterConfig()
         self.routed = 0
         self.rerouted = 0               # migration re-dispatches
+        self.prefix_hits = 0            # routed to a replica holding a
+        self.prefix_misses = 0          # shared prefix / no replica held one
         self._rr = 0
 
     def eligible(self, replicas: List[ServeReplica]) -> List[ServeReplica]:
@@ -59,8 +70,8 @@ class Router:
         return [r for r in replicas
                 if r.accepting and r.depth < self.cfg.max_queue_per_replica]
 
-    def pick(self, replicas: List[ServeReplica],
-             now: float) -> Optional[ServeReplica]:
+    def pick(self, replicas: List[ServeReplica], now: float,
+             req: Optional[FleetRequest] = None) -> Optional[ServeReplica]:
         """Choose a replica for the next request, or None (backpressure)."""
         cands = self.eligible(replicas)
         if not cands:
@@ -69,7 +80,19 @@ class Router:
             chosen = cands[self._rr % len(cands)]
             self._rr += 1
             return chosen
-        if self.cfg.policy == "least_eta":
+        if self.cfg.policy == "prefix_affinity" and req is not None:
+            # peek every candidate's prefix trie; a strict-positive best
+            # score narrows the field to the replicas already holding the
+            # longest shared prefix, then ETA ordering breaks ties
+            scores = [getattr(r.session, "prefix_lookup",
+                              lambda _p: 0)(req.prompt) for r in cands]
+            best = max(scores)
+            if best > 0:
+                self.prefix_hits += 1
+                cands = [r for r, s in zip(cands, scores) if s == best]
+            else:
+                self.prefix_misses += 1
+        if self.cfg.policy in ("least_eta", "prefix_affinity"):
             # price fresh replicas with the fleet-wide observed chunk cost,
             # not the static prior — otherwise a cold (sample-free) replica
             # can rank worse than a warm loaded one by prior mismatch alone
@@ -84,7 +107,7 @@ class Router:
     def route(self, req: FleetRequest, replicas: List[ServeReplica],
               now: float) -> Optional[ServeReplica]:
         """Dispatch `req` to the chosen replica; None means backpressure."""
-        chosen = self.pick(replicas, now)
+        chosen = self.pick(replicas, now, req)
         if chosen is None:
             return None
         chosen.dispatch(req)

@@ -106,11 +106,43 @@ class TrafficSpec:
     new_tokens_weights: Tuple[float, ...] = (0.5, 0.35, 0.15)
     tiers: Tuple[SLOTier, ...] = DEFAULT_TIERS
     vocab_size: int = 256
+    # shared-header mix (prefix-shared KV traffic): every request's prompt
+    # opens with its TIER's fixed system-prompt header of ``header_len``
+    # tokens, optionally followed by one of ``fewshot_pool`` fixed few-shot
+    # preambles (``fewshot_len`` tokens, attached with ``fewshot_prob``),
+    # then the per-request random tail of the usual geometric length.
+    # header_len=0 (default) leaves the trace BYTE-IDENTICAL to the
+    # header-free generator — the extra RNG draws are gated, not skipped.
+    header_len: int = 0
+    fewshot_len: int = 0
+    fewshot_pool: int = 0
+    fewshot_prob: float = 0.0
 
     def __post_init__(self):
         assert self.pattern in ("poisson", "bursty", "diurnal"), self.pattern
         assert abs(sum(t.share for t in self.tiers) - 1.0) < 1e-6, self.tiers
         assert len(self.new_tokens_choices) == len(self.new_tokens_weights)
+        assert self.header_len >= 0 and self.fewshot_len >= 0
+        assert 0.0 <= self.fewshot_prob <= 1.0
+        if self.fewshot_prob > 0:
+            assert self.fewshot_len > 0 and self.fewshot_pool > 0, \
+                "fewshot_prob needs fewshot_len and fewshot_pool"
+
+    def tier_header(self, tier_idx: int) -> np.ndarray:
+        """The fixed ``header_len``-token system-prompt header of tier
+        ``tier_idx`` — deterministic in (tier, vocab, length) alone, so
+        every trace/seed over this spec shares the same headers (that IS
+        the sharing opportunity the kv pool exploits)."""
+        rng = np.random.default_rng((tier_idx + 1) * 7919)
+        return rng.integers(0, self.vocab_size, size=self.header_len,
+                            dtype=np.int32)
+
+    def fewshot_block(self, block_idx: int) -> np.ndarray:
+        """Fixed few-shot preamble ``block_idx`` (same determinism contract
+        as ``tier_header``)."""
+        rng = np.random.default_rng(104729 + block_idx)
+        return rng.integers(0, self.vocab_size, size=self.fewshot_len,
+                            dtype=np.int32)
 
     def rate_at(self, t: float) -> float:
         """Instantaneous arrival rate (requests/virtual-second) at time t."""
@@ -146,6 +178,10 @@ def generate(spec: TrafficSpec, seed: int = 0) -> List[FleetRequest]:
     Deterministic in (spec, seed); requests come back sorted by arrival."""
     rng = np.random.default_rng(seed)
     lam_max = spec.rate_max
+    headers = ([spec.tier_header(i) for i in range(len(spec.tiers))]
+               if spec.header_len else [])
+    fewshots = ([spec.fewshot_block(i) for i in range(spec.fewshot_pool)]
+                if spec.header_len and spec.fewshot_pool else [])
     reqs: List[FleetRequest] = []
     t = 0.0
     while True:
@@ -161,8 +197,15 @@ def generate(spec: TrafficSpec, seed: int = 0) -> List[FleetRequest]:
         new = int(rng.choice(spec.new_tokens_choices,
                              p=np.asarray(spec.new_tokens_weights)
                              / sum(spec.new_tokens_weights)))
-        tier = spec.tiers[int(rng.choice(
-            len(spec.tiers), p=[ti.share for ti in spec.tiers]))]
+        tier_idx = int(rng.choice(
+            len(spec.tiers), p=[ti.share for ti in spec.tiers]))
+        tier = spec.tiers[tier_idx]
+        if spec.header_len:
+            parts = [headers[tier_idx]]
+            if fewshots and rng.random() < spec.fewshot_prob:
+                parts.append(fewshots[int(rng.integers(len(fewshots)))])
+            parts.append(prompt)
+            prompt = np.concatenate(parts)
         reqs.append(FleetRequest(
             fid=len(reqs), t_arrival=t, prompt=prompt, max_new_tokens=new,
             tier=tier.name, ttft_slo_s=tier.ttft_slo_s))

@@ -140,3 +140,82 @@ def paged_decode_attention_kernel_call(
         interpret=resolve_interpret(interpret),
     )
     return fn(seq_lens, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Block-table-indexed variant (pooled prefix-shared KV)
+# ---------------------------------------------------------------------------
+# Same kernel body — it only ever reasons about LOGICAL positions (seq_lens,
+# block index j) — but the KV lives in a shared physical block pool and each
+# slot carries an indirection table.  The table rides in scalar-prefetch SMEM
+# next to ``seq_lens`` and the k/v BlockSpec index maps translate logical
+# block j of slot b to pool block ``tables[b, j]``; the existing block-skip
+# (``j * bk < seq_lens[b]``) keeps invalid table tail entries unread.
+
+
+def _decode_kernel_bt(sl_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *,
+                      scale: float, window: Optional[int],
+                      softcap: Optional[float], bk: int, nk: int):
+    # the table is consumed by the index maps; the math is position-based
+    del bt_ref
+    _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, scale=scale, window=window, softcap=softcap,
+                   bk=bk, nk=nk)
+
+
+def paged_decode_attention_bt_kernel_call(
+        q: jax.Array, k: jax.Array, v: jax.Array, seq_lens: jax.Array,
+        tables: jax.Array, *,
+        window: Optional[int] = None,
+        softcap: Optional[float] = None,
+        scale: Optional[float] = None,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """q (B, H, d); k, v (NB, bs, KH, d) physical block pool;
+    seq_lens (B,) int32; tables (B, nb) int32 logical->physical block map
+    -> (B, H, d).
+
+    ``seq_lens[b]`` counts valid LOGICAL rows (< nb * bs) including the
+    just-written token; lanes past it are masked, so garbage in partially
+    written or stale pool blocks never contributes.  The kernel block size
+    equals the pool block size ``bs`` (one grid step streams one physical
+    block)."""
+    B, H, d = q.shape
+    NB, bs, KH = k.shape[0], k.shape[1], k.shape[2]
+    nk = tables.shape[1]
+    G = H // KH
+    if scale is None:
+        scale = d ** -0.5
+    seq_lens = seq_lens.astype(jnp.int32)
+    # OOB sentinel entries (unadmitted slots) clamp to a real block: the
+    # pipeline still fetches whatever the index map names, and seq_lens=0
+    # masks the compute — mirrors the reference's clamped gather
+    tables = jnp.clip(tables.astype(jnp.int32), 0, NB - 1)
+
+    kern = functools.partial(
+        _decode_kernel_bt, scale=scale, window=window, softcap=softcap,
+        bk=bs, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, h, j, sl, bt: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda b, h, j, sl, bt: (bt[b, j], 0, h // G, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda b, h, j, sl, bt: (bt[b, j], 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, h, j, sl, bt: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
+        interpret=resolve_interpret(interpret),
+    )
+    return fn(seq_lens, tables, q, k, v)

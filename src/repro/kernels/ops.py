@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as REF
 from repro.kernels import resolve_interpret
-from repro.kernels.decode_attention import paged_decode_attention_kernel_call
+from repro.kernels.decode_attention import (
+    paged_decode_attention_bt_kernel_call, paged_decode_attention_kernel_call)
 from repro.kernels.embedding_grad import (fused_scatter_kernel_call,
                                           scatter_kernel_call)
 from repro.kernels.embedding_lookup import (fused_lookup_kernel_call,
@@ -119,3 +120,26 @@ def paged_decode_attention(q, k, v, seq_lens, *,
             bk=bk, interpret=None)
     return REF.paged_decode_attention_ref(
         q, k, v, seq_lens, window=window, softcap=softcap, scale=scale)
+
+
+def paged_decode_attention_bt(q, k, v, seq_lens, tables, *,
+                              window=None,
+                              softcap: Optional[float] = None,
+                              scale: Optional[float] = None,
+                              impl: str = "auto"):
+    """Block-table-indexed decode attention dispatcher (pooled KV).
+
+    q (B, H, d); k, v (NB, bs, KH, d) physical block pool; tables (B, nb)
+    logical->physical block map -> (B, H, d).  Same backend policy as
+    ``paged_decode_attention``: the Pallas kernel (table in scalar-prefetch
+    SMEM) natively on TPU with a static window, the gather-based dense
+    reference elsewhere."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas" and (window is None or isinstance(window, int)):
+        return paged_decode_attention_bt_kernel_call(
+            q, k, v, seq_lens, tables, window=window, softcap=softcap,
+            scale=scale, interpret=None)
+    return REF.paged_decode_attention_bt_ref(
+        q, k, v, seq_lens, tables, window=window, softcap=softcap,
+        scale=scale)

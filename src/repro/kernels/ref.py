@@ -106,6 +106,28 @@ def paged_decode_attention_ref(q, k, v, seq_lens, *,
     return o.reshape(B, H, d).astype(q.dtype)
 
 
+def paged_decode_attention_bt_ref(q, k, v, seq_lens, tables, *,
+                                  window=None,
+                                  softcap: Optional[float] = None,
+                                  scale: Optional[float] = None
+                                  ) -> jax.Array:
+    """Dense oracle for the block-table-indexed paged decode kernel.
+
+    q (B, H, d); k, v (NB, bs, KH, d) physical block pool; tables (B, nb)
+    int32 logical->physical block map (out-of-range entries clamp, their
+    lanes sit past seq_lens and are masked) -> (B, H, d).  Gathers each
+    slot's logical KV view from the pool and defers to the dense paged
+    reference, so pooled and per-slot layouts share one masking contract.
+    """
+    NB, bs, KH, d = k.shape
+    B, nb = tables.shape
+    t = jnp.clip(tables.astype(jnp.int32), 0, NB - 1)
+    kc = jnp.take(k, t.reshape(-1), axis=0).reshape(B, nb * bs, KH, d)
+    vc = jnp.take(v, t.reshape(-1), axis=0).reshape(B, nb * bs, KH, d)
+    return paged_decode_attention_ref(q, kc, vc, seq_lens, window=window,
+                                      softcap=softcap, scale=scale)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,

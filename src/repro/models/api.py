@@ -93,13 +93,38 @@ def cache_insert(cache, slot_cache, slot):
 def decode_n(cfg: ModelConfig, p, cache, tokens, seq_lens, budget,
              ctx: ParallelContext = LOCAL, *, num_steps: int, **kw):
     """Multi-step on-device decode with per-slot lengths/budgets; see
-    transformer.decode_n."""
+    transformer.decode_n.  Pass ``tables=(B, nb)`` to decode over a pooled
+    prefix-shared KV cache (init_kv_pool) instead of per-slot rows."""
     if cfg.family == "audio":
         raise NotImplementedError(
             "decode_n is transformer-cache only; serve whisper through the "
             "legacy per-token path")
     return TF.decode_n(cfg, p, cache, tokens, seq_lens, budget, ctx,
                        num_steps=num_steps, **kw)
+
+
+# -- pooled prefix-shared KV (serve/kvpool.py block tables) ------------------
+
+
+def init_kv_pool(cfg: ModelConfig, num_blocks: int, block_size: int, **kw):
+    """Pooled KV cache (Ls, NB, bs, KH, hd); dense attention families only;
+    see transformer.init_kv_pool."""
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            "pooled prefix-shared KV is dense-transformer only")
+    return TF.init_kv_pool(cfg, num_blocks, block_size, **kw)
+
+
+def prefill_suffix(cfg: ModelConfig, p, cache, tokens, start, valid, tables,
+                   ctx: ParallelContext = LOCAL, **kw):
+    """Fixed-width suffix prefill over a pooled KV cache: rows resume at
+    logical position ``start`` with ``valid`` fresh tokens, KV lands in the
+    blocks named by ``tables``; see transformer.prefill_suffix."""
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            "pooled prefix-shared KV is dense-transformer only")
+    return TF.prefill_suffix(cfg, p, cache, tokens, start, valid, tables,
+                             ctx, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -671,7 +671,8 @@ def _decode_attn_impl(ctx: ParallelContext) -> str:
 
 
 def decode_step_paged(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens,
-                      active, ctx: ParallelContext = LOCAL, *, moe_cf=None):
+                      active, ctx: ParallelContext = LOCAL, *, moe_cf=None,
+                      tables=None):
     """One decode step with PER-SLOT cache lengths (continuous batching).
 
     tokens (B,) int32 — previous token per slot;
@@ -683,6 +684,13 @@ def decode_step_paged(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens,
     Returns (logits (B, V), cache, seq_lens + active).  Attention runs
     through ``ops.paged_decode_attention`` — the Pallas paged kernel on TPU,
     the dense XLA reference elsewhere (ctx.decode_attn overrides).
+
+    ``tables`` (B, nb) int32 switches to the POOLED cache layout (k/v from
+    ``init_kv_pool``, shape (Ls, NB, bs, KH, hd)): each slot's logical
+    block j lives at pool block ``tables[b, j]``, the fresh token's KV
+    scatters to its logical position's pool row, and attention runs through
+    the block-table-indexed kernel.  Writes land strictly past the prompt,
+    so shared prefix blocks are never touched (see serve/kvpool.py).
     """
     from repro.kernels import ops as OPS
 
@@ -696,7 +704,7 @@ def decode_step_paged(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens,
     impl = _decode_attn_impl(ctx)
     kv_block = getattr(ctx, "decode_kv_block", 128)
 
-    def attn_paged(lp, h, kc, vc, win):
+    def attn_dense_paged(lp, h, kc, vc, win):
         q, k, v = L.attention_qkv(lp["attn"], h, a, q_pos)
         S = kc.shape[1]
         # per-slot KV write at each slot's own next row.  Frozen slots write
@@ -716,6 +724,34 @@ def decode_step_paged(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens,
             softcap=a.logit_softcap, scale=a.attn_scale, bk=kv_block,
             impl=impl)
         return L.attention_out(lp["attn"], o[:, None]), kc, vc
+
+    def attn_pooled(lp, h, kc, vc, win):
+        # kc, vc: (NB, bs, KH, hd) physical block pool
+        q, k, v = L.attention_qkv(lp["attn"], h, a, q_pos)
+        NB, bs = kc.shape[0], kc.shape[1]
+        W = tables.shape[1] * bs
+        pos = jnp.minimum(seq_lens, W - 1)   # overflow clamps into the
+        blk = pos // bs                      # slot's (private) last block
+        phys = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
+        # OOB table entries (unadmitted slots) give an OOB flat row, which
+        # the scatter drops — no trash block needed
+        dest = phys * bs + pos % bs
+        kf = kc.reshape(NB * bs, *kc.shape[2:])
+        vf = vc.reshape(NB * bs, *vc.shape[2:])
+        kf = kf.at[dest].set(k[:, 0].astype(kc.dtype))
+        vf = vf.at[dest].set(v[:, 0].astype(vc.dtype))
+        kc, vc = kf.reshape(kc.shape), vf.reshape(vc.shape)
+        lens_now = jnp.minimum(seq_lens + 1, W)
+        o = OPS.paged_decode_attention_bt(
+            q[:, 0], kc, vc, lens_now, tables, window=win,
+            softcap=a.logit_softcap, scale=a.attn_scale, impl=impl)
+        return L.attention_out(lp["attn"], o[:, None]), kc, vc
+
+    if tables is not None:
+        tables = tables.astype(jnp.int32)
+        attn_paged = attn_pooled
+    else:
+        attn_paged = attn_dense_paged
 
     new_prefix_k, new_prefix_v = [], []
     for i, blk in enumerate(p.get("dense_prefix", [])):
@@ -795,7 +831,7 @@ def decode_step_paged(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens,
 def decode_n(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens, budget,
              ctx: ParallelContext = LOCAL, *, num_steps: int,
              greedy: bool = True, key=None, temperature: float = 1.0,
-             salt=None, moe_cf=None):
+             salt=None, moe_cf=None, tables=None):
     """Advance all slots up to ``num_steps`` tokens in ONE dispatch.
 
     A ``lax.scan`` over ``decode_step_paged`` with on-device token selection
@@ -816,12 +852,45 @@ def decode_n(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens, budget,
     and across requests reusing a slot.
 
     Returns (toks (num_steps, B) int32, cache, seq_lens, last_tokens).
+
+    With ``tables`` (pooled cache from `init_kv_pool`), the chunk runs
+    gather-once: each slot's logical KV view is gathered from the block
+    pool ONE time, the ``num_steps`` scan advances on that contiguous view
+    exactly like the per-slot dense path, and only the freshly decoded
+    rows scatter back to the pool at chunk end.  Decode writes land
+    strictly past the prompt — always in the slot's private (refcount-1)
+    blocks — so the writeback can never touch a block another table
+    shares, and per-step attention over the view is lane-for-lane the
+    dense program: pooled decode stays bitwise-identical while paying the
+    pool gather once per chunk instead of once per token.
     """
     budget = jnp.asarray(budget, jnp.int32)
     if not greedy and key is None:
         raise ValueError("sampling decode (greedy=False) needs a PRNG key")
     salt = (jnp.asarray(salt, jnp.int32) if salt is not None
             else jnp.arange(budget.shape[0], dtype=jnp.int32))
+
+    pool_cache = None
+    if tables is not None:
+        tables = jnp.asarray(tables, jnp.int32)
+        B = tables.shape[0]
+        Ls, NB, bs = cache.k.shape[0], cache.k.shape[1], cache.k.shape[2]
+        nb = tables.shape[1]
+        W = nb * bs
+        # OOB sentinel entries (unadmitted slots) clip for the GATHER only
+        # — their view is garbage, their lanes are masked by seq_lens, and
+        # their budget is 0 so nothing is written back
+        gidx = ((jnp.clip(tables, 0, NB - 1) * bs)[:, :, None]
+                + jnp.arange(bs)).reshape(-1)
+        kf = cache.k.reshape((Ls, NB * bs) + cache.k.shape[3:])
+        vf = cache.v.reshape((Ls, NB * bs) + cache.v.shape[3:])
+        view = Cache(
+            k=jnp.take(kf, gidx, axis=1).reshape(
+                (Ls, B, W) + cache.k.shape[3:]),
+            v=jnp.take(vf, gidx, axis=1).reshape(
+                (Ls, B, W) + cache.v.shape[3:]),
+            pos=cache.pos)
+        pool_cache, cache = cache, view
 
     def select(logits, lens):
         if greedy:
@@ -839,8 +908,155 @@ def decode_n(cfg: ModelConfig, p, cache: Cache, tokens, seq_lens, budget,
         nxt = jnp.where(active, select(logits, lens), toks)
         return (cache, nxt, lens, produced + active.astype(jnp.int32)), nxt
 
-    init = (cache, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(seq_lens, jnp.int32), jnp.zeros_like(budget))
+    lens0 = jnp.asarray(seq_lens, jnp.int32)
+    init = (cache, jnp.asarray(tokens, jnp.int32), lens0,
+            jnp.zeros_like(budget))
     (cache, last, seq_lens, _), toks = jax.lax.scan(
         step, init, None, length=num_steps)
+
+    if pool_cache is not None:
+        # writeback: slot b was active for exactly min(budget, num_steps)
+        # steps, writing row lens0+i at step i (clamped to the last lane on
+        # cache overflow, last write winning — same contract as the
+        # per-step scatter).  Rows >= prompt length => block index past
+        # every published block, so only private blocks are touched.
+        nsteps = jnp.minimum(budget, num_steps)
+        i = jnp.arange(num_steps)
+        rows = lens0[:, None] + i[None, :]                    # (B, steps)
+        rowc = jnp.minimum(rows, W - 1)
+        keep = ((i[None, :] < nsteps[:, None])
+                & ((rows < W - 1) | (i[None, :] == nsteps[:, None] - 1)))
+        phys = jnp.take_along_axis(tables, rowc // bs, axis=1)
+        dest = jnp.where(keep, phys * bs + rowc % bs, NB * bs).reshape(-1)
+        ridx = rowc[None, :, :, None, None]
+        newk = jnp.take_along_axis(cache.k, ridx, axis=2)
+        newv = jnp.take_along_axis(cache.v, ridx, axis=2)
+        kf = pool_cache.k.reshape((Ls, NB * bs) + pool_cache.k.shape[3:])
+        vf = pool_cache.v.reshape((Ls, NB * bs) + pool_cache.v.shape[3:])
+        kf = kf.at[:, dest].set(
+            newk.reshape((Ls, -1) + newk.shape[3:]).astype(kf.dtype))
+        vf = vf.at[:, dest].set(
+            newv.reshape((Ls, -1) + newv.shape[3:]).astype(vf.dtype))
+        cache = Cache(k=kf.reshape(pool_cache.k.shape),
+                      v=vf.reshape(pool_cache.v.shape),
+                      pos=cache.pos)
     return toks, cache, seq_lens, last
+
+
+# ---------------------------------------------------------------------------
+# Pooled prefix-shared KV (serve/kvpool.py block tables)
+# ---------------------------------------------------------------------------
+# The pooled layout replaces each slot's private (S, KH, hd) KV region with
+# an indirection over a shared pool of fixed-size blocks: k/v are
+# (Ls, NB, bs, KH, hd) and each slot carries a (nb,) physical-block table.
+# Admissions sharing a prompt prefix map their leading table entries onto
+# blocks another request already prefilled and prefill only the suffix —
+# `prefill_suffix` is that fixed-width dispatch.  Attention always sees the
+# LOGICAL view (lane index == token position), so pooled outputs are
+# bitwise-identical whether a prefix is shared, freshly computed, or
+# re-computed chunk by chunk: masked lanes contribute exact zeros
+# (`layers.blocked_attention` / the paged kernels) and per-position math
+# never depends on which physical block a lane lives in.
+
+
+def init_kv_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                 dtype=jnp.bfloat16) -> Cache:
+    """Pooled KV cache: k/v (Ls, NB, bs, KH, hd), indexed by block tables.
+
+    Attention-only dense families (no ssm/conv state, no dense prefix, no
+    vision prefix — their caches have no pooled layout yet)."""
+    a = cfg.attention
+    assert cfg.family == "dense" and a is not None and not cfg.vision_prefix, \
+        f"pooled KV supports dense attention families, not {cfg.family}"
+    kv = (cfg.num_layers, num_blocks, block_size, a.num_kv_heads, a.head_dim)
+    return Cache(k=jnp.zeros(kv, dtype), v=jnp.zeros(kv, dtype),
+                 pos=jnp.zeros((), jnp.int32))
+
+
+def prefill_suffix(cfg: ModelConfig, p, cache: Cache, tokens, start, valid,
+                   tables, ctx: ParallelContext = LOCAL
+                   ) -> Tuple[jax.Array, Cache]:
+    """Fixed-width suffix prefill over a pooled KV cache.
+
+    tokens (B, T) int32 — row b holds suffix tokens for logical positions
+    ``[start[b], start[b] + valid[b])``, left-aligned (lanes past ``valid``
+    are padding — their KV is computed but dropped at the scatter);
+    start (B,) int32 — logical position of ``tokens[:, 0]`` (the shared /
+    already-prefilled prefix length for this chunk);
+    valid (B,) int32 — valid suffix tokens this dispatch (0 = idle row);
+    tables (B, nb) int32 — slot block tables (out-of-range = unadmitted).
+
+    Each layer scatters the fresh suffix KV into its pool rows FIRST, then
+    gathers the slot's full logical view (prefix blocks written by earlier
+    dispatches + this chunk) and runs blocked attention with logical
+    positions — masked lanes (unwritten tail, idle rows) use the kv_pos=-1
+    sentinel and contribute exact zeros.  A long suffix prefills in
+    ``ceil(len/T)`` chained dispatches of this ONE program.
+
+    Returns (logits (B, V) at each row's last valid suffix position,
+    updated pooled cache).
+    """
+    a = cfg.attention
+    assert cfg.family == "dense" and not p.get("dense_prefix"), \
+        "prefill_suffix supports dense attention families"
+    B, T = tokens.shape
+    _, NB, bs, KH, hd = cache.k.shape
+    nb = tables.shape[1]
+    W = nb * bs
+    tables = tables.astype(jnp.int32)
+    start = start.astype(jnp.int32)
+    valid = valid.astype(jnp.int32)
+
+    x = embed_tokens(cfg, p, tokens)
+    positions = hint(start[:, None] + jnp.arange(T, dtype=jnp.int32)[None],
+                     "batch", None)
+    # logical lane positions of the slot's KV view; lanes at/after the
+    # suffix end are unwritten — the -1 sentinel masks them exactly
+    lane = jnp.arange(W, dtype=jnp.int32)[None, :]
+    kv_pos = jnp.where(lane < (start + valid)[:, None], lane, -1)
+    # gather map: logical lane -> flat pool row (OOB tables clamp; their
+    # lanes are always masked)
+    gidx = ((jnp.clip(tables, 0, NB - 1) * bs)[:, :, None]
+            + jnp.arange(bs, dtype=jnp.int32)[None, None]).reshape(B, W)
+    # scatter map: suffix token t -> flat pool row; padding lanes and idle
+    # rows go out of bounds, which the scatter drops
+    blk = positions // bs
+    phys = jnp.take_along_axis(tables, jnp.clip(blk, 0, nb - 1), axis=1)
+    dest = jnp.where(
+        (jnp.arange(T, dtype=jnp.int32)[None] < valid[:, None]) & (blk < nb),
+        phys * bs + positions % bs, NB * bs).reshape(-1)
+
+    windows = jnp.asarray(window_schedule(cfg))
+
+    def body(x, xs):
+        lp, win, kp, vp = xs
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        q, k, v = L.attention_qkv(lp["attn"], h, a, positions)
+        kf = kp.reshape(NB * bs, KH, hd).at[dest].set(
+            k.reshape(-1, KH, hd).astype(kp.dtype))
+        vf = vp.reshape(NB * bs, KH, hd).at[dest].set(
+            v.reshape(-1, KH, hd).astype(vp.dtype))
+        kfull = jnp.take(kf, gidx.reshape(-1), axis=0).reshape(B, W, KH, hd)
+        vfull = jnp.take(vf, gidx.reshape(-1), axis=0).reshape(B, W, KH, hd)
+        o = L.blocked_attention(q, kfull, vfull, positions, kv_pos,
+                                window=win, softcap=a.logit_softcap,
+                                scale=a.attn_scale, kv_chunk=max(W, 1024))
+        h = L.attention_out(lp["attn"], o)
+        if cfg.post_norm:
+            h = L.apply_norm(cfg, lp["post_ln1"], h)
+        x = x + h
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        h = L.mlp_apply(cfg, lp["mlp"], h)
+        if cfg.post_norm:
+            h = L.apply_norm(cfg, lp["post_ln2"], h)
+        x = x + h
+        return x, (kf.reshape(NB, bs, KH, hd), vf.reshape(NB, bs, KH, hd))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (p["layers"], windows,
+                                         cache.k, cache.v))
+    new_cache = Cache(k=ks, v=vs, pos=cache.pos)
+    x = L.apply_norm(cfg, p["final_norm"], x)
+    li = jnp.clip(valid - 1, 0, T - 1)
+    xlast = jnp.take_along_axis(x, li[:, None, None], axis=1)   # (B, 1, D)
+    logits = unembed(cfg, p, xlast)
+    return logits[:, 0], new_cache

@@ -46,6 +46,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.parallel.context import LOCAL, ParallelContext, activate
+from repro.serve.kvpool import KVPool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,16 +59,35 @@ class SliceSpec:
 
     ``chunk`` is the serve fast-path knob: decode tokens advanced per device
     dispatch (1 = legacy per-token host loop, same numerics).
+
+    ``kv_block > 0`` switches the engine to the POOLED prefix-shared KV
+    cache (`serve/kvpool.py`): per-slot cache rows become indirection tables
+    over a shared block pool, admissions sharing a prompt prefix reuse
+    already-prefilled blocks, and prefill runs as fixed-width
+    ``suffix_len``-token dispatches over only the unshared suffix.
+    ``kv_share=False`` keeps the pooled layout but never matches/publishes —
+    the bitwise-identity baseline arm.  ``kv_blocks`` sizes the pool
+    (0 = 2x the table capacity, so published prefixes survive slot churn).
     """
     slots: int = 4                  # decode batch width (static shape)
     max_len: int = 256              # KV-cache length per slot
     prompt_len: int = 32            # padded prefill length
     greedy: bool = True
     chunk: int = 8                  # decode steps per dispatch
+    kv_block: int = 0               # pooled KV block size (0 = dense cache)
+    kv_share: bool = True           # match/publish prompt prefixes
+    kv_blocks: int = 0              # pool size (0 = 2 * slots * table width)
+    suffix_len: int = 0             # suffix-prefill dispatch width
+                                    # (0 = prompt_len)
 
     def __post_init__(self):
         assert self.slots >= 1 and 0 < self.prompt_len <= self.max_len, self
         assert self.chunk >= 1, self
+        if self.kv_block:
+            assert self.max_len % self.kv_block == 0, \
+                f"max_len {self.max_len} not a multiple of kv_block " \
+                f"{self.kv_block}"
+            assert self.suffix_len >= 0 and self.kv_blocks >= 0, self
 
 
 @dataclasses.dataclass(eq=False)
@@ -132,6 +152,50 @@ def _fast_programs(cfg: ModelConfig, spec: SliceSpec, ctx: ParallelContext):
 
     return (jax.jit(_admit, donate_argnums=(1,)),
             jax.jit(_decode, donate_argnums=(1,), static_argnums=(7,)))
+
+
+@functools.lru_cache(maxsize=32)
+def _pooled_programs(cfg: ModelConfig, spec: SliceSpec, ctx: ParallelContext):
+    """Jit'd suffix-prefill admission + pooled chunked decode.
+
+    The admission program is SLOT-ALIGNED (row i == slot i) and fixed-width
+    (``suffix_len`` tokens): a long suffix prefills in several chained
+    dispatches of this one program, and only rows whose ``commit`` flag is
+    set (the chunk holding their last prompt token) fold their logits into
+    the decode state — everything else is a masked no-op, so idle rows and
+    mid-suffix chunks never perturb live slots."""
+    sample_key = jax.random.PRNGKey(spec.slots)
+
+    def _admit(params, cache, tokens, start, valid, tables, rids, plens,
+               commit, seq_lens, last, salt):
+        with activate(ctx):
+            logits, cache = api.prefill_suffix(
+                cfg, params, cache, tokens, start, valid, tables, ctx)
+        if spec.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            # same (salt, position) scheme as the dense fast path, but the
+            # fold position is the TRUE prompt length (pooled rows are
+            # left-aligned, not padded to prompt_len)
+            keys = jax.vmap(lambda b, n: jax.random.fold_in(
+                jax.random.fold_in(sample_key, b), n))(rids, plens)
+            nxt = jax.vmap(jax.random.categorical)(
+                keys, logits).astype(jnp.int32)
+        seq_lens = jnp.where(commit, plens, seq_lens)
+        last = jnp.where(commit, nxt, last)
+        salt = jnp.where(commit, rids, salt)
+        return nxt, cache, seq_lens, last, salt
+
+    def _decode(params, cache, tokens, seq_lens, budget, key, salt, tables,
+                num_steps):
+        with activate(ctx):
+            return api.decode_n(
+                cfg, params, cache, tokens, seq_lens, budget, ctx,
+                num_steps=num_steps, greedy=spec.greedy, key=key, salt=salt,
+                tables=tables)
+
+    return (jax.jit(_admit, donate_argnums=(1,)),
+            jax.jit(_decode, donate_argnums=(1,), static_argnums=(8,)))
 
 
 @functools.lru_cache(maxsize=8)
@@ -199,8 +263,35 @@ class ServeEngine:
         # whisper's enc-dec cache has no per-slot insert; it keeps the
         # legacy full-batch prefill + per-token decode loop
         self._fast = cfg.family != "audio"
+        # pooled prefix-shared KV (kvpool.py); dense-transformer only
+        self._pooled = self._fast and spec.kv_block > 0
+        # prefill-cost proxy (dispatch width x batch rows, summed over
+        # prefill dispatches) + prefix-sharing counters — the kv-prefix
+        # benchmark compares these across pooled/legacy arms
+        self.prefill_flops_proxy = 0
+        self.kv_prompt_tokens = 0
+        self.kv_shared_tokens = 0
+        self.kv_migrated_shared_blocks = 0
+        self.kv_migrated_suffix_blocks = 0
 
-        if self._fast:
+        if self._pooled:
+            assert cfg.family == "dense", \
+                "pooled prefix-shared KV is dense-transformer only"
+            nb = spec.max_len // spec.kv_block
+            self._nb = nb
+            self._suffix_len = spec.suffix_len or spec.prompt_len
+            self.kvpool = KVPool(
+                num_blocks=spec.kv_blocks or 2 * spec.slots * nb,
+                block_size=spec.kv_block, slots=spec.slots,
+                blocks_per_slot=nb)
+            # host mirror of the device tables; OOB sentinel = unadmitted
+            # (the bt kernel clamps it; seq_lens=0 masks the compute)
+            self._tables_np = np.full((spec.slots, nb),
+                                      self.kvpool.num_blocks, np.int32)
+            self.tables = jnp.asarray(self._tables_np)
+            self._admit_fn, self._decode_fn = _pooled_programs(cfg, spec,
+                                                               ctx)
+        elif self._fast:
             self._admit_fn, self._decode_fn = _fast_programs(cfg, spec, ctx)
         else:
             self._prefill, self._decode = _legacy_programs(cfg, spec, ctx)
@@ -235,6 +326,8 @@ class ServeEngine:
         scatter updates are dropped on-device."""
         if not self._fast:
             return self._admit_full()
+        if self._pooled:
+            return self._admit_pooled()
         if not self.pending:                   # O(1) fast-out per chunk
             return False
         free = [i for i, a in enumerate(self.active)
@@ -255,6 +348,7 @@ class ServeEngine:
             prompts[row, -len(seq):] = seq
         rids = np.zeros((self.slots,), np.int32)
         rids[:n] = [r.rid for r in admitted]
+        self.prefill_flops_proxy += self.prompt_len * self.slots
         batch = {"tokens": jnp.asarray(prompts),
                  **self._extra_inputs(self.slots)}
         nxt, self.cache, self.seq_lens, self.last_tokens, self.sample_salt = \
@@ -270,6 +364,81 @@ class ServeEngine:
             if len(r.out_tokens) >= r.max_new_tokens:
                 r.done = True
                 r.t_done = now
+        return True
+
+    def _admit_pooled(self) -> bool:
+        """Pooled admission: map each admitted prompt's shared prefix onto
+        already-prefilled pool blocks (kvpool.admit) and prefill ONLY the
+        unshared suffix in fixed-width ``suffix_len`` chunks — a request
+        whose whole prompt header is cached pays one small dispatch instead
+        of a full-width prefill.  Publication into the prefix trie happens
+        AFTER the dispatches land, so two same-wave admissions can never
+        alias blocks still being written."""
+        if not self.pending:
+            return False
+        free = [i for i, a in enumerate(self.active)
+                if a is None or a.done]
+        n = min(len(self.pending), len(free))
+        if n == 0:
+            return False
+        if self.cache is None:
+            self.cache = api.init_kv_pool(
+                self.cfg, self.kvpool.num_blocks, self.spec.kv_block)
+        admitted = self.pending[:n]
+        del self.pending[:n]
+        bs = self.spec.kv_block
+        rows = []                              # (slot, request, start, seq)
+        for slot, r in zip(free[:n], admitted):
+            self.active[slot] = r
+            seq = np.asarray(r.prompt, np.int32)[-self.prompt_len:]
+            table, matched = self.kvpool.admit(
+                slot, seq, share=self.spec.kv_share)
+            self._tables_np[slot] = table
+            self.kv_prompt_tokens += len(seq)
+            self.kv_shared_tokens += matched * bs
+            rows.append((slot, r, matched * bs, seq))
+        self.tables = jnp.asarray(self._tables_np)
+        Tc = self._suffix_len
+        nchunk = max(1, -(-max(len(seq) - start
+                               for (_, _, start, seq) in rows) // Tc))
+        nxt_keep = np.zeros((self.slots,), np.int32)
+        for c in range(nchunk):
+            tok = np.zeros((self.slots, Tc), np.int32)
+            st = np.zeros((self.slots,), np.int32)
+            vd = np.zeros((self.slots,), np.int32)
+            rids = np.zeros((self.slots,), np.int32)
+            plens = np.zeros((self.slots,), np.int32)
+            commit = np.zeros((self.slots,), bool)
+            for slot, r, start, seq in rows:
+                s0 = start + c * Tc
+                v = max(0, min(Tc, len(seq) - s0))
+                st[slot] = min(s0, len(seq))
+                vd[slot] = v
+                rids[slot] = r.rid
+                plens[slot] = len(seq)
+                if v:
+                    tok[slot, :v] = seq[s0:s0 + v]
+                    commit[slot] = s0 + v == len(seq)
+            self.prefill_flops_proxy += Tc * self.slots
+            nxt, self.cache, self.seq_lens, self.last_tokens, \
+                self.sample_salt = self._admit_fn(
+                    self.params, self.cache, jnp.asarray(tok),
+                    jnp.asarray(st), jnp.asarray(vd), self.tables,
+                    jnp.asarray(rids), jnp.asarray(plens),
+                    jnp.asarray(commit), self.seq_lens, self.last_tokens,
+                    self.sample_salt)
+            if commit.any():
+                nxt_np = np.asarray(nxt)
+                nxt_keep[commit] = nxt_np[commit]
+        now = time.time()
+        for slot, r, start, seq in rows:
+            r.out_tokens.append(int(nxt_keep[slot]))
+            r.t_first = now
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+                r.t_done = now
+            if self.spec.kv_share:
+                self.kvpool.publish(slot)
         return True
 
     def _budgets(self) -> np.ndarray:
@@ -288,10 +457,18 @@ class ServeEngine:
         tokens; host-side bookkeeping runs once on the returned chunk."""
         budgets = self._budgets()
         t0 = time.perf_counter()
-        toks, self.cache, self.seq_lens, self.last_tokens = self._decode_fn(
-            self.params, self.cache, self.last_tokens, self.seq_lens,
-            jnp.asarray(budgets), self._sample_key, self.sample_salt,
-            num_steps)
+        if self._pooled:
+            toks, self.cache, self.seq_lens, self.last_tokens = \
+                self._decode_fn(
+                    self.params, self.cache, self.last_tokens,
+                    self.seq_lens, jnp.asarray(budgets), self._sample_key,
+                    self.sample_salt, self.tables, num_steps)
+        else:
+            toks, self.cache, self.seq_lens, self.last_tokens = \
+                self._decode_fn(
+                    self.params, self.cache, self.last_tokens,
+                    self.seq_lens, jnp.asarray(budgets), self._sample_key,
+                    self.sample_salt, num_steps)
         toks = np.asarray(toks)                      # (num_steps, B) — syncs
         self._record_latency(time.perf_counter() - t0)
         self._steps += num_steps
@@ -395,18 +572,72 @@ class ServeEngine:
         pending), clearing their slots.  Used when a slice dies under the
         engine: the survivors re-prefill ``prompt + out_tokens`` and generate
         the remainder, so no request is lost with its replica.  Exported
-        requests leave `queue` too — this engine's stats no longer own them."""
+        requests leave `queue` too — this engine's stats no longer own them.
+
+        Pooled engines also release every slot's block table and account
+        the migration split: only each in-flight request's PRIVATE suffix
+        blocks would ship with it (``kv_migrated_suffix_blocks``) — its
+        shared-prefix blocks stay behind in this pool's trie (or are
+        re-matched from the destination's trie), so a migration moves
+        ``suffix/(shared+suffix)`` of the naive KV payload."""
         moved: List[Request] = []
         for i, r in enumerate(self.active):
+            if self._pooled and self.kvpool.table(i) is not None:
+                if r is not None and not r.done:
+                    shared = self.kvpool.shared_blocks(i)
+                    self.kv_migrated_shared_blocks += shared
+                    self.kv_migrated_suffix_blocks += self._nb - shared
+                self.kvpool.release(i)
+                self._tables_np[i] = self.kvpool.num_blocks
             if r is not None and not r.done:
                 moved.append(r)
             self.active[i] = None
+        if self._pooled:
+            self.tables = jnp.asarray(self._tables_np)
         moved.extend(self.pending)
         self.pending = []
         for r in moved:
             if r in self.queue:
                 self.queue.remove(r)
         return moved
+
+    # -- pooled-KV introspection ----------------------------------------------
+
+    def prefix_lookup(self, prompt: np.ndarray) -> int:
+        """Shareable prefix TOKENS this engine's trie holds for ``prompt``
+        right now (0 when not pooled).  Peek only — no references taken, no
+        LRU touch — so the fleet router can score every replica per
+        routing decision (the prefix-affinity policy)."""
+        if not self._pooled:
+            return 0
+        seq = np.asarray(prompt, np.int32)[-self.prompt_len:]
+        return self.kvpool.match_len(seq) * self.spec.kv_block
+
+    def kv_stats(self) -> Dict[str, int]:
+        """Sharing/migration counters, plus pool accounting when pooled.
+        ``prefill_flops_proxy`` (dispatch width x slots, summed over
+        prefill dispatches) is counted on the legacy fast path too, so an
+        unshared baseline arm and a pooled arm compare on the same
+        meter."""
+        s = self.kvpool.stats() if self._pooled else {}
+        s.update(
+            prefill_flops_proxy=self.prefill_flops_proxy,
+            kv_prompt_tokens=self.kv_prompt_tokens,
+            kv_shared_tokens=self.kv_shared_tokens,
+            kv_migrated_shared_blocks=self.kv_migrated_shared_blocks,
+            kv_migrated_suffix_blocks=self.kv_migrated_suffix_blocks,
+        )
+        return s
+
+    def kv_close(self) -> None:
+        """Release every slot table and the prefix trie, then audit the
+        pool: asserts every block returned to the free list (the zero-leak
+        gate the kv-prefix benchmark enforces)."""
+        if not self._pooled:
+            return
+        self.kvpool.close()
+        self._tables_np[:] = self.kvpool.num_blocks
+        self.tables = jnp.asarray(self._tables_np)
 
     def step(self) -> int:
         """One decode step over all slots; returns #active requests.

@@ -97,7 +97,7 @@ def _leaf_spans(leaf, arr: np.ndarray, shards: int
 
 
 def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None,
-         shards: int = 1) -> pathlib.Path:
+         shards: int = 1, keep: Optional[int] = None) -> pathlib.Path:
     """Write one elastic checkpoint.
 
     Args:
@@ -111,6 +111,9 @@ def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None,
       shards: split each unsharded leaf into up to this many spans along
         its first axis (parallel-IO layout; sharded jax.Arrays already
         write one span per distinct device shard).
+      keep: retention policy — after this save fully lands (manifest +
+        LATEST written), prune all but the newest ``keep`` span-manifest
+        step directories (`gc`).  None keeps everything.
 
     Returns the step directory path."""
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
@@ -141,7 +144,53 @@ def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None,
         np.savez(d / f"shard_{i:03d}.npz", **payload)
     (d / "manifest.json").write_text(json.dumps(manifest))
     (pathlib.Path(ckpt_dir) / "LATEST").write_text(str(step))
+    if keep is not None:
+        gc(ckpt_dir, keep)
     return d
+
+
+def gc(ckpt_dir: str, keep: int) -> List[pathlib.Path]:
+    """Prune old span-manifest checkpoints, keeping the newest ``keep``.
+
+    Only directories this module wrote in the current format are
+    candidates: a ``step_*`` directory is pruned iff it carries a
+    ``manifest.json`` with ``format >= 2`` (the span-manifest layout).
+    Legacy v1 checkpoints (``arrays.npz``, format-1 manifests) and any
+    unrecognised directory are never touched — retention must not eat
+    checkpoints written by code that predates the policy.  The step named
+    by ``LATEST`` is always kept, whatever its age.
+
+    Runs after a *successful* save (`save(..., keep=N)` calls it once the
+    manifest and LATEST are on disk), so a crash mid-save never costs an
+    old checkpoint.  Returns the pruned directories."""
+    assert keep >= 1, keep
+    root = pathlib.Path(ckpt_dir)
+    latest = latest_step(ckpt_dir)
+    cands: List[Tuple[int, pathlib.Path]] = []
+    for d in root.glob("step_*"):
+        if not d.is_dir():
+            continue
+        try:
+            step = int(d.name.split("_", 1)[1])
+        except ValueError:
+            continue
+        mf = d / "manifest.json"
+        if not mf.exists():
+            continue                      # not ours (or torn) — keep
+        try:
+            fmt = json.loads(mf.read_text()).get("format", 1)
+        except (json.JSONDecodeError, OSError):
+            continue                      # unreadable — keep, never guess
+        if fmt < 2 or (d / "arrays.npz").exists():
+            continue                      # legacy v1 layout — never GC'd
+        cands.append((step, d))
+    cands.sort()
+    prune = [d for step, d in cands[:-keep] if step != latest]
+    for d in prune:
+        for f in d.iterdir():
+            f.unlink()
+        d.rmdir()
+    return prune
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

@@ -1,0 +1,212 @@
+"""KV block pool + prefix trie: refcount conservation property tests.
+
+Pins the PR-6 kvpool contract:
+  * insert/match/release conserve references — after ANY interleaving of
+    admit / retire (release) / migrate (release + re-admit elsewhere) /
+    publish, every block is exactly free xor referenced and the reference
+    total equals slot-table references + trie nodes (``KVPool.check``);
+  * ``close`` always reaches zero allocated blocks (no leak), and the
+    ``BlockPool`` primitives reject double-free / stray incref;
+  * sharing caps: at least one suffix token stays private, the table's
+    final block is never shared, and a matched prefix returns the SAME
+    physical blocks that published it.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serve.kvpool import BlockPool, KVPool, PrefixTrie
+
+
+class TestBlockPool:
+    def test_alloc_free_cycle(self):
+        p = BlockPool(4, 8)
+        blocks = [p.alloc() for _ in range(4)]
+        assert sorted(blocks) == [0, 1, 2, 3] and p.alloc() is None
+        assert p.free_blocks == 0 and p.allocated_blocks == 4
+        for b in blocks:
+            assert p.decref(b)
+        assert p.free_blocks == 4
+        p.check()
+
+    def test_double_free_rejected(self):
+        p = BlockPool(2, 4)
+        b = p.alloc()
+        p.decref(b)
+        with pytest.raises(AssertionError):
+            p.decref(b)
+
+    def test_incref_of_free_block_rejected(self):
+        p = BlockPool(2, 4)
+        with pytest.raises(AssertionError):
+            p.incref(0)
+
+    def test_refcounted_sharing(self):
+        p = BlockPool(2, 4)
+        b = p.alloc()
+        p.incref(b)
+        assert not p.decref(b)          # still held
+        assert p.decref(b)              # now freed
+        p.check()
+
+
+class TestTrieSharing:
+    def test_publish_then_match_returns_same_blocks(self):
+        kv = KVPool(num_blocks=16, block_size=4, slots=2, blocks_per_slot=4)
+        prompt = np.arange(13, dtype=np.int32)       # 3 full blocks + 1
+        t0, m0 = kv.admit(0, prompt)
+        assert m0 == 0                               # cold trie
+        kv.publish(0)
+        t1, m1 = kv.admit(1, prompt)
+        assert m1 == 3                               # all full blocks shared
+        assert list(t1[:3]) == list(t0[:3])          # the SAME physical blocks
+        assert set(t1[3:]).isdisjoint(set(t0[3:]))   # private remainder
+        kv.check()
+        kv.close()
+
+    def test_at_least_one_suffix_token(self):
+        """A prompt of exactly N full blocks shares at most N-1 of them —
+        the admission still needs the last position's logits."""
+        kv = KVPool(num_blocks=16, block_size=4, slots=2, blocks_per_slot=4)
+        prompt = np.arange(8, dtype=np.int32)        # exactly 2 full blocks
+        kv.admit(0, prompt)
+        kv.publish(0)
+        _, m = kv.admit(1, prompt)
+        assert m == 1
+        assert kv.match_len(prompt) == 1
+        kv.close()
+
+    def test_final_table_block_never_shared(self):
+        """Overflow decode writes clamp into the last table block, so it
+        must stay private even when the prompt could fill the table."""
+        kv = KVPool(num_blocks=16, block_size=4, slots=2, blocks_per_slot=2)
+        prompt = np.arange(8, dtype=np.int32)        # would fill both blocks
+        kv.admit(0, prompt)
+        kv.publish(0)
+        _, m = kv.admit(1, prompt)
+        assert m <= 1                                # block 1 of 2 private
+        kv.close()
+
+    def test_divergent_suffix_shares_common_prefix_only(self):
+        kv = KVPool(num_blocks=32, block_size=4, slots=2, blocks_per_slot=4)
+        a = np.concatenate([np.arange(8), np.full(5, 7)]).astype(np.int32)
+        b = np.concatenate([np.arange(8), np.full(5, 9)]).astype(np.int32)
+        kv.admit(0, a)
+        kv.publish(0)
+        _, m = kv.admit(1, b)
+        assert m == 2                                # shared header only
+        kv.close()
+
+    def test_eviction_frees_trie_only_blocks(self):
+        kv = KVPool(num_blocks=8, block_size=4, slots=2, blocks_per_slot=4)
+        kv.admit(0, np.arange(16, dtype=np.int32))
+        kv.publish(0)
+        kv.release(0)                                 # trie-only now
+        assert kv.pool.allocated_blocks > 0
+        # both slot tables demand all 8 blocks: the trie must yield
+        kv.admit(0, np.full(16, 3, np.int32), share=False)
+        kv.admit(1, np.full(16, 5, np.int32), share=False)
+        kv.check()
+        kv.close()
+
+
+class TestRefcountConservation:
+    """Property tests over randomized admit/retire/migrate/publish
+    interleavings: no block leaked or double-freed, ever."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3),      # op
+                              st.integers(0, 3),      # slot
+                              st.integers(0, 2),      # header id
+                              st.integers(1, 17)),    # prompt len
+                    min_size=1, max_size=40))
+    def test_any_interleaving_conserves_blocks(self, ops):
+        slots, bs, nb = 4, 4, 4
+        kv = KVPool(num_blocks=2 * slots * nb, block_size=bs, slots=slots,
+                    blocks_per_slot=nb)
+        published = [False] * slots
+        for op, slot, header, plen in ops:
+            if op == 0:                               # admit (shared)
+                prompt = np.concatenate([
+                    np.full(8, 100 + header), np.arange(plen)]).astype(
+                        np.int32)[:nb * bs]
+                kv.admit(slot, prompt)
+                published[slot] = False
+            elif op == 1 and kv.table(slot) is not None:   # publish
+                if not published[slot]:
+                    kv.publish(slot)
+                    published[slot] = True
+            elif op == 2:                             # retire / export
+                kv.release(slot)
+                published[slot] = False
+            else:                                     # migrate: re-admit
+                dst = (slot + 1) % slots
+                toks = kv._tokens[slot]
+                kv.release(slot)
+                published[slot] = False
+                if toks is not None:
+                    kv.admit(dst, toks)
+                    published[dst] = False
+            kv.check()                                # invariant after EVERY op
+        kv.close()                                    # and zero blocks leaked
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.lists(st.integers(0, 4), min_size=1, max_size=12))
+    def test_shared_blocks_survive_publisher_exit(self, headers):
+        """The publisher releasing its table must not free blocks a later
+        admission still maps (trie holds them); dropping the trie too must
+        free everything."""
+        kv = KVPool(num_blocks=24, block_size=4, slots=3, blocks_per_slot=4)
+        for h in headers:
+            prompt = np.concatenate(
+                [np.full(8, 50 + h), np.arange(6)]).astype(np.int32)
+            kv.admit(0, prompt)
+            kv.publish(0)
+            t1, m1 = kv.admit(1, prompt)
+            kv.release(0)                 # publisher gone
+            if m1:
+                for b in t1[:m1]:
+                    assert kv.pool.refcount(b) >= 2   # table + trie
+            kv.check()
+            kv.release(1)
+        kv.trie.drop_all()
+        kv.check()
+        assert kv.pool.allocated_blocks == 0
+
+    def test_close_after_heavy_churn_is_leak_free(self):
+        rng = np.random.RandomState(0)
+        kv = KVPool(num_blocks=32, block_size=4, slots=4, blocks_per_slot=4)
+        for i in range(200):
+            slot = int(rng.randint(4))
+            if rng.rand() < 0.25:
+                kv.release(slot)
+                continue
+            header = int(rng.randint(3))
+            prompt = np.concatenate([
+                np.full(8, 200 + header),
+                rng.randint(0, 99, size=int(rng.randint(1, 9)))]).astype(
+                    np.int32)
+            kv.admit(slot, prompt)
+            if rng.rand() < 0.8:
+                kv.publish(slot)
+        kv.check()
+        kv.close()
+        assert kv.pool.free_blocks == 32
+
+
+class TestTrieLRU:
+    def test_evict_prefers_least_recent(self):
+        pool = BlockPool(8, 2)
+        trie = PrefixTrie(pool)
+        a, b = pool.alloc(), pool.alloc()
+        trie.insert(np.asarray([1, 2], np.int32), [a])
+        trie.insert(np.asarray([3, 4], np.int32), [b])
+        pool.decref(a)
+        pool.decref(b)                   # both now trie-only
+        trie.match(np.asarray([1, 2], np.int32))      # touch a (and incref)
+        pool.decref(a)                   # give the match ref back
+        assert trie.evict(1) == 1
+        assert trie.n_nodes == 1
+        # the stale chain [3,4] was evicted, the touched one survives
+        assert trie.match_len(np.asarray([1, 2], np.int32)) == 1
+        assert trie.match_len(np.asarray([3, 4], np.int32)) == 0

@@ -197,6 +197,60 @@ class TestCheckpoint:
                 np.testing.assert_array_equal(np.asarray(got[k]),
                                               np.asarray(tree[k]))
 
+    def test_gc_keeps_last_n_and_latest(self, rng):
+        """save(keep=2) prunes old v2 step dirs after a successful save;
+        the newest ``keep`` and the LATEST step always survive."""
+        import pathlib
+        tree = {"w": jnp.ones((3,))}
+        like = {"w": jax.ShapeDtypeStruct((3,), jnp.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            for step in (1, 2, 3, 4):
+                CKPT.save(d, step, jax.tree.map(lambda x: x * step, tree),
+                          keep=2)
+            dirs = sorted(p.name for p in pathlib.Path(d).glob("step_*"))
+            assert dirs == ["step_00000003", "step_00000004"]
+            got, step, _ = CKPT.restore(d, like)
+            assert step == 4
+            np.testing.assert_array_equal(np.asarray(got["w"]),
+                                          np.full((3,), 4.0))
+            # explicit gc with keep=1 leaves only the LATEST step
+            CKPT.gc(d, 1)
+            dirs = sorted(p.name for p in pathlib.Path(d).glob("step_*"))
+            assert dirs == ["step_00000004"]
+
+    def test_gc_never_touches_v1_checkpoints(self, rng):
+        """Retention must not eat checkpoints written before the span
+        format: a v1 dir (arrays.npz, format-1 manifest) survives any
+        number of keep-N saves, even as old v2 dirs around it are pruned."""
+        import json
+        import pathlib
+        tree = {"w": jax.random.normal(rng, (4, 4))}
+        with tempfile.TemporaryDirectory() as d:
+            # fabricate an OLD v1 checkpoint at step 1
+            v1 = pathlib.Path(d) / "step_00000001"
+            v1.mkdir(parents=True)
+            np.savez(v1 / "arrays.npz", **{"['w']": np.asarray(tree["w"])})
+            (v1 / "manifest.json").write_text(json.dumps(
+                {"step": 1, "extra": {},
+                 "leaves": {"['w']": {"shape": [4, 4],
+                                      "dtype": "float32"}}}))
+            # plus a torn dir with no manifest at all — also off-limits
+            torn = pathlib.Path(d) / "step_00000002"
+            torn.mkdir()
+            (torn / "shard_000.npz").write_bytes(b"")
+            # several v2 saves with aggressive retention
+            for step in (3, 4, 5, 6):
+                CKPT.save(d, step, tree, keep=1)
+            dirs = sorted(p.name for p in pathlib.Path(d).glob("step_*"))
+            assert dirs == ["step_00000001", "step_00000002",
+                           "step_00000006"]
+            # the v1 checkpoint still restores bitwise
+            like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+            got, step, _ = CKPT.restore(d, like, step=1)
+            assert step == 1
+            np.testing.assert_array_equal(np.asarray(got["w"]),
+                                          np.asarray(tree["w"]))
+
     def test_v1_checkpoint_still_restores(self, rng):
         """PR-1..4 checkpoints (single arrays.npz, no format field) load
         transparently."""
