@@ -21,6 +21,7 @@ BENCHES = [
     "fleet_serving",         # fleet scaling/failure/autoscale -> BENCH_fleet.json
     "mixed_tenancy",         # elastic train+serve tenancy -> BENCH_tenancy.json
     "kv_prefix",             # prefix-shared KV pool -> BENCH_kvprefix.json
+    "quantization",          # int8 weights + compressed grads -> BENCH_quant.json
 ]
 
 

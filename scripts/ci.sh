@@ -58,6 +58,13 @@ if [[ "${1:-}" != "--fast" ]]; then
     # prefix_affinity routing beats least_eta on prefix hit-rate
     python benchmarks/kv_prefix.py --quick
 
+    echo "== quant stage: quantized fast path benchmark -> BENCH_quant.json =="
+    # gates: int8-storage vs materialized-dequant greedy outputs bitwise
+    # identical; int8 vs full-width token divergence <= 1%; >= 1.25x decode
+    # tokens/s OR >= 1.8x lower weight-HBM bytes/token; grad int8 payload
+    # ~4x below fp32 (payload-only accounting) with final loss within 5%
+    python benchmarks/quantization.py --quick
+
     echo "== archive benchmark artifacts =="
     mkdir -p artifacts
     cp BENCH_*.json artifacts/

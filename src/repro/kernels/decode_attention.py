@@ -32,10 +32,14 @@ from repro.kernels import resolve_interpret
 NEG_INF = -1e30
 
 
-def _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *,
-                   scale: float, window: Optional[int],
-                   softcap: Optional[float], bk: int, nk: int):
+def _decode_body(sl_ref, q_ref, load_kv, o_ref,
+                 m_ref, l_ref, acc_ref, *,
+                 scale: float, window: Optional[int],
+                 softcap: Optional[float], bk: int, nk: int):
+    """Shared online-softmax body; ``load_kv()`` yields this grid step's
+    (bk, d) k and v tiles — raw VMEM loads on the full-width path, an
+    int8-row dequant (1-byte rows + a per-row scale broadcast) on the
+    quantized path."""
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -56,10 +60,10 @@ def _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(reachable)
     def _():
+        k, v = load_kv()                             # (bk, d) each
         q = q_ref[0].astype(jnp.float32) * scale     # (1, d)
-        k = k_ref[0, :, 0].astype(jnp.float32)       # (bk, d)
         s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)      # (1, bk)
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
@@ -75,7 +79,7 @@ def _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
         acc_ref[...] = (acc_ref[...] * alpha[:, None]
                         + jax.lax.dot_general(
-                            p.astype(v_ref.dtype), v_ref[0, :, 0],
+                            p.astype(v.dtype), v,
                             (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32))
         m_ref[...] = m_new
@@ -86,12 +90,33 @@ def _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, **kw):
+    _decode_body(sl_ref, q_ref,
+                 lambda: (k_ref[0, :, 0], v_ref[0, :, 0]),
+                 o_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _decode_kernel_q(sl_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+                     m_ref, l_ref, acc_ref, **kw):
+    """int8-KV variant: k/v tiles arrive as int8 rows + per-row fp32 scales
+    (models/quant.quantize_kv layout) and dequantise in VMEM right after the
+    DMA — the HBM stream is 1 byte/element."""
+    def load_kv():
+        k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+        v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+        return k, v
+    _decode_body(sl_ref, q_ref, load_kv, o_ref, m_ref, l_ref, acc_ref, **kw)
+
+
 def paged_decode_attention_kernel_call(
         q: jax.Array, k: jax.Array, v: jax.Array, seq_lens: jax.Array, *,
         window: Optional[int] = None,
         softcap: Optional[float] = None,
         scale: Optional[float] = None,
         bk: int = 128,
+        k_scale: Optional[jax.Array] = None,
+        v_scale: Optional[jax.Array] = None,
         interpret: Optional[bool] = None) -> jax.Array:
     """q (B, H, d); k, v (B, S, KH, d); seq_lens (B,) int32 -> (B, H, d).
 
@@ -100,10 +125,15 @@ def paged_decode_attention_kernel_call(
     GQA handled by per-head index mapping (H % KH == 0).  The cache length S
     is padded to a multiple of ``bk``; padded rows sit past every seq_len and
     are never touched.
+
+    int8 KV: pass ``k``/``v`` as int8 with per-row fp32 ``k_scale``/
+    ``v_scale`` (B, S, KH) — ``models/quant.quantize_kv`` layout.  Rows
+    stream through VMEM as 1-byte lanes and dequantise in-kernel.
     """
     B, H, d = q.shape
     S, KH = k.shape[1], k.shape[2]
     G = H // KH
+    quantized = k_scale is not None
     if scale is None:
         scale = d ** -0.5
     bk = min(bk, S)
@@ -111,21 +141,37 @@ def paged_decode_attention_kernel_call(
         pad = bk - S % bk
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if quantized:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
         S += pad
     nk = S // bk
     seq_lens = seq_lens.astype(jnp.int32)
 
-    kern = functools.partial(
-        _decode_kernel, scale=scale, window=window, softcap=softcap,
-        bk=bk, nk=nk)
+    kv_spec = pl.BlockSpec((1, bk, 1, d), lambda b, h, j, sl: (b, j, h // G, 0))
+    sc_spec = pl.BlockSpec((1, bk, 1), lambda b, h, j, sl: (b, j, h // G))
+    if quantized:
+        kern = functools.partial(
+            _decode_kernel_q, scale=scale, window=window, softcap=softcap,
+            bk=bk, nk=nk)
+        in_specs = [
+            pl.BlockSpec((1, 1, d), lambda b, h, j, sl: (b, h, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+        ]
+        operands = (q, k, k_scale, v, v_scale)
+    else:
+        kern = functools.partial(
+            _decode_kernel, scale=scale, window=window, softcap=softcap,
+            bk=bk, nk=nk)
+        in_specs = [
+            pl.BlockSpec((1, 1, d), lambda b, h, j, sl: (b, h, 0)),
+            kv_spec, kv_spec,
+        ]
+        operands = (q, k, v)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, H, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, d), lambda b, h, j, sl: (b, h, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda b, h, j, sl: (b, j, h // G, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda b, h, j, sl: (b, j, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, d), lambda b, h, j, sl: (b, h, 0)),
         scratch_shapes=[
             pltpu.VMEM((1,), jnp.float32),
@@ -139,7 +185,7 @@ def paged_decode_attention_kernel_call(
         out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
         interpret=resolve_interpret(interpret),
     )
-    return fn(seq_lens, q, k, v)
+    return fn(seq_lens, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -154,14 +200,18 @@ def paged_decode_attention_kernel_call(
 
 
 def _decode_kernel_bt(sl_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
-                      m_ref, l_ref, acc_ref, *,
-                      scale: float, window: Optional[int],
-                      softcap: Optional[float], bk: int, nk: int):
+                      m_ref, l_ref, acc_ref, **kw):
     # the table is consumed by the index maps; the math is position-based
     del bt_ref
     _decode_kernel(sl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                   acc_ref, scale=scale, window=window, softcap=softcap,
-                   bk=bk, nk=nk)
+                   acc_ref, **kw)
+
+
+def _decode_kernel_bt_q(sl_ref, bt_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                        o_ref, m_ref, l_ref, acc_ref, **kw):
+    del bt_ref
+    _decode_kernel_q(sl_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+                     m_ref, l_ref, acc_ref, **kw)
 
 
 def paged_decode_attention_bt_kernel_call(
@@ -170,6 +220,8 @@ def paged_decode_attention_bt_kernel_call(
         window: Optional[int] = None,
         softcap: Optional[float] = None,
         scale: Optional[float] = None,
+        k_scale: Optional[jax.Array] = None,
+        v_scale: Optional[jax.Array] = None,
         interpret: Optional[bool] = None) -> jax.Array:
     """q (B, H, d); k, v (NB, bs, KH, d) physical block pool;
     seq_lens (B,) int32; tables (B, nb) int32 logical->physical block map
@@ -179,11 +231,16 @@ def paged_decode_attention_bt_kernel_call(
     just-written token; lanes past it are masked, so garbage in partially
     written or stale pool blocks never contributes.  The kernel block size
     equals the pool block size ``bs`` (one grid step streams one physical
-    block)."""
+    block).
+
+    int8 KV: int8 ``k``/``v`` pools + per-row fp32 ``k_scale``/``v_scale``
+    (NB, bs, KH); the indirection tables address scale blocks and value
+    blocks identically."""
     B, H, d = q.shape
     NB, bs, KH = k.shape[0], k.shape[1], k.shape[2]
     nk = tables.shape[1]
     G = H // KH
+    quantized = k_scale is not None
     if scale is None:
         scale = d ** -0.5
     seq_lens = seq_lens.astype(jnp.int32)
@@ -192,19 +249,32 @@ def paged_decode_attention_bt_kernel_call(
     # masks the compute — mirrors the reference's clamped gather
     tables = jnp.clip(tables.astype(jnp.int32), 0, NB - 1)
 
-    kern = functools.partial(
-        _decode_kernel_bt, scale=scale, window=window, softcap=softcap,
-        bk=bs, nk=nk)
+    kv_spec = pl.BlockSpec((1, bs, 1, d),
+                           lambda b, h, j, sl, bt: (bt[b, j], 0, h // G, 0))
+    sc_spec = pl.BlockSpec((1, bs, 1),
+                           lambda b, h, j, sl, bt: (bt[b, j], 0, h // G))
+    if quantized:
+        kern = functools.partial(
+            _decode_kernel_bt_q, scale=scale, window=window,
+            softcap=softcap, bk=bs, nk=nk)
+        in_specs = [
+            pl.BlockSpec((1, 1, d), lambda b, h, j, sl, bt: (b, h, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+        ]
+        operands = (q, k, k_scale, v, v_scale)
+    else:
+        kern = functools.partial(
+            _decode_kernel_bt, scale=scale, window=window, softcap=softcap,
+            bk=bs, nk=nk)
+        in_specs = [
+            pl.BlockSpec((1, 1, d), lambda b, h, j, sl, bt: (b, h, 0)),
+            kv_spec, kv_spec,
+        ]
+        operands = (q, k, v)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, d), lambda b, h, j, sl, bt: (b, h, 0)),
-            pl.BlockSpec((1, bs, 1, d),
-                         lambda b, h, j, sl, bt: (bt[b, j], 0, h // G, 0)),
-            pl.BlockSpec((1, bs, 1, d),
-                         lambda b, h, j, sl, bt: (bt[b, j], 0, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, d), lambda b, h, j, sl, bt: (b, h, 0)),
         scratch_shapes=[
             pltpu.VMEM((1,), jnp.float32),
@@ -218,4 +288,4 @@ def paged_decode_attention_bt_kernel_call(
         out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
         interpret=resolve_interpret(interpret),
     )
-    return fn(seq_lens, tables, q, k, v)
+    return fn(seq_lens, tables, *operands)

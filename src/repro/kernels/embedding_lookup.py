@@ -167,26 +167,85 @@ def _fused_lookup_kernel(rows_ref, slots_ref, means_ref, table_ref, out_ref,
         out_ref[0, 0, :] = acc.astype(out_ref.dtype)
 
 
+def _fused_lookup_kernel_q(rows_ref, slots_ref, means_ref, table_ref,
+                           scale_ref, out_ref, acc_ref, cnt_ref, *,
+                           n_desc: int, tile: int):
+    """int8-table variant: dequantise the gathered row in VMEM before the
+    accumulate.  ``table_ref`` block is (1, Dm) int8, ``scale_ref`` block is
+    (1, nt) f32 with ``nt * tile == Dm`` (QTensor per-row tile scales)."""
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    slot = slots_ref[s]
+    prev_same = jnp.where(s > 0, slots_ref[jnp.maximum(s - 1, 0)] == slot,
+                          False)
+
+    @pl.when(jnp.logical_not(prev_same))
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    valid = rows_ref[b, s] >= 0
+
+    @pl.when(valid)
+    def _():
+        q = table_ref[0, :].astype(jnp.float32).reshape(-1, tile)
+        row = (q * scale_ref[0, :][:, None]).reshape(-1)
+        acc_ref[...] += row
+        cnt_ref[...] += 1.0
+
+    last = jnp.where(s < n_desc - 1,
+                     slots_ref[jnp.minimum(s + 1, n_desc - 1)] != slot, True)
+
+    @pl.when(last)
+    def _():
+        acc = acc_ref[...]
+        acc = jnp.where(means_ref[slot] > 0,
+                        acc / jnp.maximum(cnt_ref[0], 1.0), acc)
+        out_ref[0, 0, :] = acc.astype(out_ref.dtype)
+
+
 def fused_lookup_kernel_call(table: jax.Array, rows: jax.Array,
                              slots: jax.Array, means: jax.Array, *,
+                             scales: jax.Array = None,
                              interpret: bool = True) -> jax.Array:
     """One launch over every table of a fused row space.
 
     table (R, Dm); rows (B, S) absolute fused row ids (-1 invalid);
     slots (S,) i32 non-decreasing output-slot id per descriptor column;
     means (K,) i32, 1 where slot k mean-combines -> (B, K, Dm) combined.
+
+    int8 tables (inference serving): pass ``table`` as int8 with per-row
+    tile-wise fp32 ``scales (R, nt)`` (``models/quant.QTensor`` layout,
+    ``nt = Dm // tile``).  Each grid step then DMAs a 1-byte row plus its
+    scale row and dequantises inside the accumulate — the HBM row stream
+    shrinks ~4x while the combine math stays fp32.
     """
     R, Dm = table.shape
     B, S = rows.shape
     K = means.shape[0]
+    quantized = scales is not None
+    in_specs = [
+        pl.BlockSpec((1, Dm),
+                     lambda b, s, rows, slots, means:
+                     (jnp.maximum(rows[b, s], 0), 0)),
+    ]
+    operands = [table]
+    kern = functools.partial(_fused_lookup_kernel, n_desc=S)
+    out_dtype = table.dtype
+    if quantized:
+        nt = scales.shape[1]
+        in_specs.append(
+            pl.BlockSpec((1, nt),
+                         lambda b, s, rows, slots, means:
+                         (jnp.maximum(rows[b, s], 0), 0)))
+        operands.append(scales)
+        kern = functools.partial(_fused_lookup_kernel_q, n_desc=S,
+                                 tile=Dm // nt)
+        out_dtype = jnp.float32
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, S),
-        in_specs=[
-            pl.BlockSpec((1, Dm),
-                         lambda b, s, rows, slots, means:
-                         (jnp.maximum(rows[b, s], 0), 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, Dm),
                                lambda b, s, rows, slots, means:
                                (b, slots[s], 0)),
@@ -194,9 +253,9 @@ def fused_lookup_kernel_call(table: jax.Array, rows: jax.Array,
                         pltpu.VMEM((1,), jnp.float32)],
     )
     fn = pl.pallas_call(
-        functools.partial(_fused_lookup_kernel, n_desc=S),
+        kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, K, Dm), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, K, Dm), out_dtype),
         interpret=interpret,
     )
-    return fn(rows, slots, means, table)
+    return fn(rows, slots, means, *operands)

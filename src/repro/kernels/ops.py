@@ -85,6 +85,18 @@ def _fused_lookup_bwd(res, g):
 fused_lookup.defvjp(_fused_lookup_fwd, _fused_lookup_bwd)
 
 
+@functools.partial(jax.jit, static_argnames=())
+def fused_lookup_q(table, scales, rows, slots, means):
+    """Serving-side fused lookup over an int8 table (forward only).
+
+    table (R, Dm) int8 + scales (R, nt) f32 (``models/quant.QTensor``
+    per-row tile scales, ``nt`` tiles of ``Dm // nt`` lanes) -> (B, K, Dm)
+    f32.  The row stream out of HBM is 1 byte/lane; dequantisation happens
+    in VMEM inside the combine.  Inference path — no custom VJP."""
+    return fused_lookup_kernel_call(table, rows, slots, means,
+                                    scales=scales, interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "scale", "bq", "bk"))
 def flash_attention(q, k, v, *, causal: bool = True,
@@ -97,6 +109,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 def paged_decode_attention(q, k, v, seq_lens, *,
+                           k_scale=None, v_scale=None,
                            window=None,
                            softcap: Optional[float] = None,
                            scale: Optional[float] = None,
@@ -111,18 +124,28 @@ def paged_decode_attention(q, k, v, seq_lens, *,
     hot loop, and the dense XLA form is what host backends lower well.
     The Pallas path needs a STATIC window (block skipping); a traced window
     (scanned per-layer schedule) falls back to XLA.
+
+    int8 KV cache: pass k, v as int8 with per-row f32 ``k_scale``/``v_scale``
+    (B, S, KH) (``models/quant.quantize_kv`` layout).  The Pallas path
+    dequantises per block inside the kernel; the XLA fallback widens first.
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "pallas" and (window is None or isinstance(window, int)):
         return paged_decode_attention_kernel_call(
-            q, k, v, seq_lens, window=window, softcap=softcap, scale=scale,
+            q, k, v, seq_lens, k_scale=k_scale, v_scale=v_scale,
+            window=window, softcap=softcap, scale=scale,
             bk=bk, interpret=None)
+    if k_scale is not None:
+        from repro.models import quant as QUANT
+        k = QUANT.dequantize_kv(k, k_scale, dtype=q.dtype)
+        v = QUANT.dequantize_kv(v, v_scale, dtype=q.dtype)
     return REF.paged_decode_attention_ref(
         q, k, v, seq_lens, window=window, softcap=softcap, scale=scale)
 
 
 def paged_decode_attention_bt(q, k, v, seq_lens, tables, *,
+                              k_scale=None, v_scale=None,
                               window=None,
                               softcap: Optional[float] = None,
                               scale: Optional[float] = None,
@@ -133,13 +156,18 @@ def paged_decode_attention_bt(q, k, v, seq_lens, tables, *,
     logical->physical block map -> (B, H, d).  Same backend policy as
     ``paged_decode_attention``: the Pallas kernel (table in scalar-prefetch
     SMEM) natively on TPU with a static window, the gather-based dense
-    reference elsewhere."""
+    reference elsewhere.  int8 pools take (NB, bs, KH) f32 scale pools via
+    ``k_scale``/``v_scale`` (same convention as `paged_decode_attention`)."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "pallas" and (window is None or isinstance(window, int)):
         return paged_decode_attention_bt_kernel_call(
-            q, k, v, seq_lens, tables, window=window, softcap=softcap,
-            scale=scale, interpret=None)
+            q, k, v, seq_lens, tables, k_scale=k_scale, v_scale=v_scale,
+            window=window, softcap=softcap, scale=scale, interpret=None)
+    if k_scale is not None:
+        from repro.models import quant as QUANT
+        k = QUANT.dequantize_kv(k, k_scale, dtype=q.dtype)
+        v = QUANT.dequantize_kv(v, v_scale, dtype=q.dtype)
     return REF.paged_decode_attention_bt_ref(
         q, k, v, seq_lens, tables, window=window, softcap=softcap,
         scale=scale)

@@ -124,46 +124,101 @@ def pick_accum_steps(cfg: ModelConfig, shape: ShapeConfig,
     return max(accum, 1)
 
 
+def _pmean(x, axes):
+    for a in axes:
+        x = jax.lax.pmean(x, a)
+    return x
+
+
 def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
                     pcfg: ParallelConfig, ocfg: OptimizerConfig,
                     ctx: ParallelContext, *,
                     accum_steps: Optional[int] = None) -> Callable:
+    """The ONE train-step builder — `Trainer` and the dry-run both route
+    through here (via `shapes_and_shardings`), so every knob on
+    `ParallelConfig` — `grad_compression` included — behaves identically
+    from every entry point.
+
+    `grad_compression != "none"` on a multi-shard data-parallel mesh wraps
+    the whole grad computation in a shard_map over the batch axes: each
+    shard computes grads on its local batch and the exchange itself runs
+    compressed (`parallel/compression.compressed_allreduce` — shared-scale
+    int8 payload psum / exact-k sparse exchange).  Without a mesh (or with
+    model parallelism in play, where XLA owns the fused reduction) the same
+    schemes apply as a post-reduction numerics roundtrip.  Either way the
+    metrics carry per-device wire-bytes accounting for one exchange.
+    """
     accum = accum_steps or pick_accum_steps(cfg, shape, ctx,
                                             xent_chunk=pcfg.xent_chunk)
+    scheme = pcfg.grad_compression
+    from repro.parallel import compression as COMP
 
-    def grads_of(params, batch):
+    def grads_of(params, batch, gctx):
         return jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, batch, ctx, remat=pcfg.remat,
+            lambda p: loss_fn(cfg, p, batch, gctx, remat=pcfg.remat,
                               xent_chunk=pcfg.xent_chunk,
                               attn_impl=pcfg.attn_impl),
             has_aux=True)(params)
 
-    def train_step(params, opt_state, batch):
+    def accumulated(params, batch, gctx):
+        """(grads, metrics) with gradient-accumulation microstepping."""
         if accum == 1:
-            (loss, metrics), grads = grads_of(params, batch)
+            (loss, metrics), grads = grads_of(params, batch, gctx)
+            return grads, dict(metrics)
+
+        mb = jax.tree.map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+            batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, xs):
+            g_acc, loss_acc = acc
+            (loss, _), g = grads_of(params, xs, gctx)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / accum, g_acc, g)
+            return (g_acc, loss_acc + loss / accum), None
+
+        (grads, loss), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32)), mb)
+        return grads, {"loss": loss}
+
+    # compressed DP exchange: data-parallel shards only (with model
+    # parallelism XLA owns the fused backward reduction, so compression
+    # falls back to the post-reduction roundtrip)
+    ndp = 1
+    for a in ctx.batch_axes:
+        ndp *= ctx.axis_size(a)
+    dp_exchange = (scheme != "none" and ndp > 1
+                   and ctx.model_axis_size == 1
+                   and shape.global_batch % (ndp * accum) == 0)
+
+    def dp_step(params, batch):
+        from repro.parallel.context import shard_map
+        axes = tuple(ctx.batch_axes)
+
+        def body(p, b):
+            g, metrics = accumulated(p, b, LOCAL)
+            g = COMP.compressed_allreduce(g, scheme, axes)
+            metrics = {k: _pmean(v, axes) for k, v in metrics.items()}
+            return g, metrics
+
+        return shard_map(body, mesh=ctx.mesh,
+                         in_specs=(P(), P(axes)),
+                         out_specs=(P(), P()))(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if dp_exchange:
+            grads, metrics = dp_step(params, batch)
         else:
-            def micro(b):
-                return jax.tree.map(
-                    lambda x: x.reshape((accum, x.shape[0] // accum)
-                                        + x.shape[1:]), b)
-            mb = micro(batch)
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                              params)
-
-            def body(acc, xs):
-                g_acc, loss_acc = acc
-                (loss, _), g = grads_of(params, xs)
-                g_acc = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32) / accum, g_acc, g)
-                return (g_acc, loss_acc + loss / accum), None
-
-            (grads, loss), _ = jax.lax.scan(
-                body, (g0, jnp.zeros((), jnp.float32)), mb)
-            metrics = {"loss": loss}
-
-        if pcfg.grad_compression != "none":
-            from repro.parallel.compression import compress_grads
-            grads = compress_grads(grads, pcfg.grad_compression)
+            grads, metrics = accumulated(params, batch, ctx)
+            if scheme != "none":
+                grads = COMP.compress_grads(grads, scheme)
+        wb = COMP.wire_bytes(grads, scheme)
+        metrics = dict(metrics,
+                       wire_bytes=jnp.float32(wb["wire_bytes"]),
+                       wire_bytes_full=jnp.float32(wb["wire_bytes_full"]),
+                       wire_overhead_bytes=jnp.float32(
+                           wb["wire_overhead_bytes"]))
         params, opt_state, om = OPT.apply(ocfg, params, grads, opt_state)
         metrics = dict(metrics, **om)
         return params, opt_state, metrics
@@ -202,7 +257,8 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
 
 def shapes_and_shardings(cfg: ModelConfig, shape: ShapeConfig,
                          pcfg: ParallelConfig, ocfg: OptimizerConfig,
-                         ctx: ParallelContext):
+                         ctx: ParallelContext, *,
+                         accum_steps: Optional[int] = None):
     """(abstract args, in_shardings, out_shardings, step_fn) for one cell."""
     key = jax.random.PRNGKey(0)
     params_shape = jax.eval_shape(lambda: api.init_params(cfg, key, ctx))
@@ -214,7 +270,8 @@ def shapes_and_shardings(cfg: ModelConfig, shape: ShapeConfig,
         opt_shape = jax.eval_shape(
             lambda: OPT.init(ocfg, _concretize(params_shape)))
         ospecs = _opt_specs(opt_shape, pspecs)
-        step = make_train_step(cfg, shape, pcfg, ocfg, ctx)
+        step = make_train_step(cfg, shape, pcfg, ocfg, ctx,
+                               accum_steps=accum_steps)
         args = (params_shape, opt_shape, batch_shape)
         in_sh = (pspecs, ospecs, bspecs)
         out_sh = (pspecs, ospecs, None)

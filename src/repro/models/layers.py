@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import AttentionConfig, ModelConfig
+from repro.models import quant as Q
 from repro.parallel.context import active_ctx, hint
 
 NEG_INF = -1e30
@@ -359,9 +360,9 @@ def attention_init(cfg: ModelConfig, key, stacked: Optional[int] = None,
 def attention_qkv(p, x, a: AttentionConfig, positions, *, rope: bool = True,
                   dtype=jnp.bfloat16):
     """Project to q, k, v and apply RoPE.  x: (B, T, D)."""
-    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dtype))
-    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dtype))
-    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dtype))
+    q = jnp.einsum("btd,dhk->bthk", x, Q.cast(p["wq"], dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, Q.cast(p["wk"], dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, Q.cast(p["wv"], dtype))
     if "bq" in p:
         q = q + p["bq"].astype(dtype)
         k = k + p["bk"].astype(dtype)
@@ -379,7 +380,7 @@ def attention_out(p, o, dtype=jnp.bfloat16):
     B, T, H, D = o.shape
     return jnp.einsum("bthk,hkd->btd",
                       o.astype(dtype),
-                      p["wo"].reshape(H, D, -1).astype(dtype))
+                      Q.cast(p["wo"], dtype).reshape(H, D, -1))
 
 
 def self_attention(p, x, a: AttentionConfig, positions, *,
@@ -423,13 +424,13 @@ def _act(name: str, x):
 
 def mlp_apply(cfg: ModelConfig, p, x, dtype=jnp.bfloat16):
     if cfg.ffn_glu:
-        g = jnp.einsum("btd,df->btf", x, p["wg"].astype(dtype))
-        u = jnp.einsum("btd,df->btf", x, p["wu"].astype(dtype))
+        g = jnp.einsum("btd,df->btf", x, Q.cast(p["wg"], dtype))
+        u = jnp.einsum("btd,df->btf", x, Q.cast(p["wu"], dtype))
         h = _act(cfg.act, g) * u
     else:
-        h = _act(cfg.act, jnp.einsum("btd,df->btf", x, p["wi"].astype(dtype)))
+        h = _act(cfg.act, jnp.einsum("btd,df->btf", x, Q.cast(p["wi"], dtype)))
     h = hint(h, "batch", None, "model")
-    return jnp.einsum("btf,fd->btd", h, p["wo"].astype(dtype))
+    return jnp.einsum("btf,fd->btd", h, Q.cast(p["wo"], dtype))
 
 
 # ---------------------------------------------------------------------------

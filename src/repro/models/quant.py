@@ -1,0 +1,250 @@
+"""Mixed-precision policy + tile-wise int8 weight storage (the quantized
+fast path).
+
+TPU v4's perf/Watt story is "move fewer bits per useful FLOP" (paper §7);
+the serving analogue is weight *storage*: decode is HBM-bandwidth-bound, so
+streaming 1-byte weights instead of 4-byte ones is a direct bytes/token win.
+Two pieces:
+
+  * ``Policy`` — a jmp-style mixed-precision policy (param storage dtype,
+    compute dtype, output dtype).  ``cast_to_compute`` is the single choke
+    point the hot matmuls use: for plain arrays it is ``astype``; for
+    ``QTensor`` leaves it dequantises tile-wise right at the consuming
+    einsum, so the full-width copy only ever exists as a fused temporary.
+  * ``QTensor`` — int8 values + per-tile float32 scales over the last axis,
+    registered as a pytree so quantized param trees flow through the same
+    jit'd serve programs (lax.scan over stacked layers included) untouched.
+
+Numerics contract (benchmarks/quantization.py enforces it):
+  * storage-only arm: running with ``QTensor`` params is BITWISE identical
+    to running with the materialised ``dequantize_params`` tree — on-the-fly
+    dequant is an execution strategy, not an approximation;
+  * int8-compute arm: quantize->run vs the original full-width weights is
+    bounded-divergence (<=1% greedy-token disagreement on the bench traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TILE = 128
+
+# Param-tree keys that are matmul weights consumed through
+# ``layers.attention_qkv/attention_out/mlp_apply`` or
+# ``transformer.embed_tokens/unembed`` — the only code paths taught to
+# dequantise.  Everything else (norm scales, biases, SSM state kernels,
+# MoE experts/routers) stays full-width.
+QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo", "wg", "wu", "wi",
+                        "embed", "head"})
+_EXCLUDE = re.compile(r"(^|/)(moe|router|experts?)(/|$)")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """int8 weight + per-tile fp32 scales over the last axis.
+
+    ``q`` has the logical weight shape; ``scale`` has shape
+    ``q.shape[:-1] + (last // tile,)``.  ``w ~= q * scale`` per tile.
+    """
+    q: jax.Array
+    scale: jax.Array
+    tile: int = DEFAULT_TILE
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.tile,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q, scale, aux[0])
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def nbytes(self):
+        return self.q.nbytes + self.scale.nbytes
+
+    def dequant(self, dtype=jnp.bfloat16):
+        lead, last = self.q.shape[:-1], self.q.shape[-1]
+        nt = last // self.tile
+        r = self.q.reshape(lead + (nt, self.tile)).astype(jnp.float32)
+        w = r * self.scale[..., None]
+        return w.reshape(self.q.shape).astype(dtype)
+
+
+def quantize(w: jax.Array, tile: int = DEFAULT_TILE) -> QTensor:
+    """Symmetric int8 quantisation, one scale per `tile` of the last axis
+    (whole-row tiles when the axis doesn't divide)."""
+    last = w.shape[-1]
+    if last % tile:
+        tile = last
+    nt = last // tile
+    lead = w.shape[:-1]
+    r = w.astype(jnp.float32).reshape(lead + (nt, tile))
+    scale = jnp.maximum(jnp.max(jnp.abs(r), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(r / scale[..., None]), -127, 127)
+    return QTensor(q.reshape(w.shape).astype(jnp.int8), scale, tile)
+
+
+def cast(w: Any, dtype=jnp.bfloat16):
+    """The mixed-precision choke point: dequantise-or-cast to compute dtype."""
+    if isinstance(w, QTensor):
+        return w.dequant(dtype)
+    return w.astype(dtype)
+
+
+def take(w: Any, ids: jax.Array, dtype=jnp.bfloat16):
+    """Row gather for embedding tables: gathers int8 rows + their scales and
+    dequantises ONLY the gathered rows (tile-wise), never the full table."""
+    if isinstance(w, QTensor):
+        rows = QTensor(jnp.take(w.q, ids, axis=0),
+                       jnp.take(w.scale, ids, axis=0), w.tile)
+        return rows.dequant(dtype)
+    return jnp.take(w, ids, axis=0).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# jmp-style policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Mixed-precision policy (jmp idiom): where each tensor class lives.
+
+    ``storage="int8"`` additionally swaps eligible param leaves to
+    ``QTensor`` via ``quantize_params``; ``cast_to_compute`` then
+    dequantises at the consuming matmul.
+    """
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    output_dtype: str = "float32"
+    storage: str = "none"              # "none" | "int8"
+    tile: int = DEFAULT_TILE
+
+    @classmethod
+    def parse(cls, s: str) -> "Policy":
+        """``"params=float32,compute=bfloat16,storage=int8"`` (any subset)."""
+        kw = {}
+        names = {"params": "param_dtype", "compute": "compute_dtype",
+                 "output": "output_dtype", "storage": "storage"}
+        for part in s.split(","):
+            if not part.strip():
+                continue
+            k, v = part.split("=")
+            kw[names[k.strip()]] = v.strip()
+        return cls(**kw)
+
+    def _cast(self, tree, dtype_name: str):
+        dt = jnp.dtype(dtype_name)
+
+        def one(x):
+            if isinstance(x, QTensor):
+                return x.dequant(dt)
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+                return x.astype(dt)
+            return x
+
+        return jax.tree.map(one, tree,
+                            is_leaf=lambda x: isinstance(x, QTensor))
+
+    def cast_to_compute(self, tree):
+        return self._cast(tree, self.compute_dtype)
+
+    def cast_to_param(self, tree):
+        return self._cast(tree, self.param_dtype)
+
+    def cast_to_output(self, tree):
+        return self._cast(tree, self.output_dtype)
+
+
+POLICY_INT8 = Policy(storage="int8")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _eligible(path: str, leaf) -> bool:
+    if isinstance(leaf, QTensor) or not hasattr(leaf, "ndim"):
+        return False
+    if leaf.ndim < 2 or _EXCLUDE.search(path):
+        return False
+    name = path.rsplit("/", 1)[-1]
+    return name in QUANT_KEYS
+
+
+def quantize_params(cfg, params, policy: Policy = POLICY_INT8):
+    """Swap eligible matmul/embedding weights for ``QTensor`` storage.
+
+    Returns ``params`` unchanged for ``storage="none"``.  The result is a
+    drop-in argument for every serve program (same tree paths; QTensor
+    leaves flatten to (q, scale) pairs so scan/tree_map/jit see ordinary
+    arrays).
+    """
+    if policy.storage == "none":
+        return params
+    assert policy.storage == "int8", policy.storage
+
+    def one(path, leaf):
+        p = _path_str(path)
+        if _eligible(p, leaf):
+            return quantize(leaf, policy.tile)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def dequantize_params(params, dtype=jnp.bfloat16):
+    """Materialise every QTensor leaf at full width (the bitwise baseline
+    arm: running this tree must match running the quantized tree exactly)."""
+    return jax.tree.map(
+        lambda x: x.dequant(dtype) if isinstance(x, QTensor) else x,
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def storage_bytes(tree) -> int:
+    """HBM weight-storage footprint (== bytes streamed per decode step for
+    a batch of active slots, since decode touches every weight once)."""
+    return int(sum(x.nbytes for x in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache blocks (consumed inside the paged-decode Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(kv: jax.Array):
+    """Per-row KV quantisation: ``kv (..., D) -> (int8 (..., D), f32 (...))``.
+
+    One scale per cache row keeps the in-kernel dequant a single broadcast
+    multiply right after the block DMA (the "tile" is the row the kernel
+    streams).
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -27,6 +27,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import moe as MOE
+from repro.models import quant as Q
 from repro.models import ssm as SSM
 from repro.parallel.context import LOCAL, ParallelContext, hint
 
@@ -148,15 +149,16 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 def embed_tokens(cfg: ModelConfig, p, tokens, dtype=jnp.bfloat16):
-    x = jnp.take(p["embed"], tokens, axis=0).astype(dtype)
+    x = Q.take(p["embed"], tokens, dtype)
     if cfg.embed_scale:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
     return x
 
 
 def unembed(cfg: ModelConfig, p, x, dtype=jnp.bfloat16):
-    w = p["embed"].T if cfg.tie_embeddings else p["head"]
-    logits = jnp.einsum("btd,dv->btv", x, w.astype(dtype),
+    w = (Q.cast(p["embed"], dtype).T if cfg.tie_embeddings
+         else Q.cast(p["head"], dtype))
+    logits = jnp.einsum("btd,dv->btv", x, w,
                         preferred_element_type=jnp.float32)
     logits = hint(logits, "batch", None, "model")
     return L.softcap(logits, cfg.final_logit_softcap)

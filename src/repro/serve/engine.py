@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import api
+from repro.models import quant as QUANT
 from repro.parallel.context import LOCAL, ParallelContext, activate
 from repro.serve.kvpool import KVPool
 
@@ -79,10 +80,14 @@ class SliceSpec:
     kv_blocks: int = 0              # pool size (0 = 2 * slots * table width)
     suffix_len: int = 0             # suffix-prefill dispatch width
                                     # (0 = prompt_len)
+    quant: str = "none"             # weight storage: "none" | "int8"
+                                    # (models/quant.py tile-wise int8; the
+                                    # engine quantises its params at init)
 
     def __post_init__(self):
         assert self.slots >= 1 and 0 < self.prompt_len <= self.max_len, self
         assert self.chunk >= 1, self
+        assert self.quant in ("none", "int8"), self
         if self.kv_block:
             assert self.max_len % self.kv_block == 0, \
                 f"max_len {self.max_len} not a multiple of kv_block " \
@@ -236,6 +241,8 @@ class ServeEngine:
                  ctx: ParallelContext = LOCAL):
         spec = spec or SliceSpec()
         self.cfg = cfg
+        if spec.quant == "int8":
+            params = QUANT.quantize_params(cfg, params)
         self.params = params
         self.spec = spec
         self.slots = spec.slots
@@ -612,6 +619,12 @@ class ServeEngine:
             return 0
         seq = np.asarray(prompt, np.int32)[-self.prompt_len:]
         return self.kvpool.match_len(seq) * self.spec.kv_block
+
+    def weight_stream_bytes(self) -> int:
+        """HBM weight bytes streamed per decode *step* (every weight is read
+        once per step regardless of batch width).  Divide by active slots
+        for bytes/token — the meter the quantization benchmark gates on."""
+        return QUANT.storage_bytes(self.params)
 
     def kv_stats(self) -> Dict[str, int]:
         """Sharing/migration counters, plus pool accounting when pooled.

@@ -77,12 +77,12 @@ class Trainer:
         self.metrics_log: List[Dict[str, float]] = []
 
         with mesh_scope(mesh):
+            # ONE step builder for every entry point (shapes_and_shardings
+            # -> make_train_step), so ParallelConfig knobs — notably
+            # grad_compression — can't silently apply on one path only
             args, in_sh, out_sh, step = STEPS.shapes_and_shardings(
-                run.model, run.shape, run.parallel, run.optimizer, self.ctx)
-            if accum_steps is not None:
-                step = STEPS.make_train_step(
-                    run.model, run.shape, run.parallel, run.optimizer,
-                    self.ctx, accum_steps=accum_steps)
+                run.model, run.shape, run.parallel, run.optimizer, self.ctx,
+                accum_steps=accum_steps)
             self._in_sh = jax.tree.map(self._named, in_sh,
                                        is_leaf=self._is_spec)
             self._out_sh = jax.tree.map(self._named, out_sh,

@@ -225,4 +225,59 @@ for i in range(S):
 check("pipeline_matches_sequential", np.allclose(
     np.asarray(y), np.asarray(refp), rtol=2e-5, atol=2e-5))
 
+# ---- 7. compressed data-parallel gradient exchange --------------------------
+from repro.parallel import compression as COMP
+
+mesh_d = make_mesh((8, 1), ("data", "model"))
+xs8 = np.asarray(jax.random.normal(jax.random.PRNGKey(21), (8, 256),
+                                   jnp.float32))
+ref_mean = xs8.mean(axis=0, keepdims=True)
+
+with mesh_scope(mesh_d):
+    out8 = shard_map(
+        lambda g: COMP.compressed_allreduce(g, "int8", ("data",)),
+        mesh=mesh_d, in_specs=P("data", None), out_specs=P(),
+        check_vma=False)(jnp.asarray(xs8))
+shared_scale = np.abs(xs8).max() / 127.0
+check("compressed_allreduce_int8_bounded",
+      np.abs(np.asarray(out8) - ref_mean).max() <= 0.51 * shared_scale)
+
+k = int(256 * COMP.TOPK_FRAC)
+sp = np.zeros_like(xs8)
+for d in range(8):
+    idx = np.argsort(-np.abs(xs8[d]), kind="stable")[:k]
+    sp[d, idx] = xs8[d, idx]
+with mesh_scope(mesh_d):
+    outk = shard_map(
+        lambda g: COMP.compressed_allreduce(g, "topk", ("data",)),
+        mesh=mesh_d, in_specs=P("data", None), out_specs=P(),
+        check_vma=False)(jnp.asarray(xs8))
+check("compressed_allreduce_topk_exact_k",
+      np.allclose(np.asarray(outk), sp.mean(axis=0, keepdims=True),
+                  rtol=1e-5, atol=1e-6))
+
+# train step with the compressed exchange active: the shard_map'd int8
+# collective runs inside the jitted step, loss matches the local step, and
+# the wire-bytes metric shows the ~4x payload cut
+rcfg = registry.get_reduced("olmo-1b")
+shape_c = ShapeConfig("t", "train", 16, 8)
+pcfg_c = ParallelConfig(remat="none", grad_compression="int8")
+sctx_d = SH.make_context(mesh_d, pcfg_c)
+key = jax.random.PRNGKey(23)
+params = api.init_params(rcfg, key)
+opt = OPT.init(OptimizerConfig(), params)
+batch = api.make_batch(rcfg, shape_c, key)
+from repro.parallel.context import LOCAL as _LOCAL
+step_l = STEPS.make_train_step(rcfg, shape_c, ParallelConfig(remat="none"),
+                               OptimizerConfig(), _LOCAL, accum_steps=1)
+_, _, m_l = jax.jit(step_l)(params, opt, batch)
+with mesh_scope(mesh_d):
+    step_c = STEPS.make_train_step(rcfg, shape_c, pcfg_c, OptimizerConfig(),
+                                   sctx_d, accum_steps=1)
+    _, _, m_c = jax.jit(step_c)(params, opt, batch)
+check("compressed_train_step_loss_matches_local",
+      np.isclose(float(m_l["loss"]), float(m_c["loss"]), rtol=2e-2))
+check("compressed_train_step_wire_cut",
+      float(m_c["wire_bytes_full"]) / float(m_c["wire_bytes"]) >= 3.9)
+
 print("ALL_SPMD_OK", flush=True)
