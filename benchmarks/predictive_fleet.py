@@ -1,0 +1,299 @@
+"""Predictive fleet benchmark -> BENCH_predict.json.
+
+Three gated scenarios over the PR-8 fleet engine:
+
+  * **vectorize** — the structure-of-arrays traffic generator
+    (`generate_trace`) vs the per-request legacy generator
+    (`generate_legacy`) on the SAME (spec, seed): small traces must match
+    BITWISE on every column, and at fleet scale (1M requests) the
+    vectorized path must clear ``GATE_SPEEDUP_X`` (100x).  The legacy cost
+    is measured on a few thousand requests and extrapolated linearly — the
+    scalar loop is O(n) with no cache effects worth 46 s of CI time.
+  * **predictive** — one diurnal day-with-failures trace served twice:
+    reactive watermark autoscaling vs the same autoscaler with the
+    `RateForecaster` pre-provisioning ahead of known peaks.  A serving
+    block dies mid-day and is repaired in both arms.  Gates: the
+    predictive arm's SLO-goodput is >= the reactive arm's, and the
+    burst-edge p95 TTFT (requests arriving while the diurnal rate ramps
+    up, where reactive scaling is always ``provision_s`` late) drops by
+    at least ``GATE_EDGE_SHRINK`` (30%).
+  * **straggler** — the same trace served with one block pinned 2x slow:
+    a fleet without a detector drags every synchronous step to the
+    straggler's pace; a fleet with `StragglerConfig` must fire >= 1 spare
+    swap and finish with a faster virtual makespan (step time recovered).
+
+Deterministic virtual timing throughout the control arms; tokens decoded
+are real.
+
+    python benchmarks/predictive_fleet.py            # full run + gates
+    python benchmarks/predictive_fleet.py --quick    # CI-sized, same gates
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_predict.json"
+
+ARCH = "olmo-1b"
+CHUNK_S = 0.01                  # virtual chunk cost of the control arms
+
+GATE_SPEEDUP_X = 100.0          # vectorized vs legacy traffic generation
+GATE_EDGE_SHRINK = 0.30        # burst-edge p95 must drop by >= 30%
+
+
+# -- scenario 1: vectorized traffic ------------------------------------------
+
+PIN_SPECS = {
+    "poisson": dict(duration_s=30.0, rate_rps=16.0, pattern="poisson"),
+    "bursty": dict(duration_s=30.0, rate_rps=12.0, pattern="bursty",
+                   burst_x=4.0, burst_period_s=4.0, burst_len_s=1.0),
+    "diurnal": dict(duration_s=32.0, rate_rps=10.0, pattern="diurnal",
+                    diurnal_period_s=8.0, trough_frac=0.2),
+    "header_fewshot": dict(duration_s=20.0, rate_rps=20.0,
+                           header_len=6, fewshot_len=8, fewshot_pool=3,
+                           fewshot_prob=0.5),
+}
+
+
+def _assert_pin(spec, seed: int) -> int:
+    """Bitwise equivalence of the two generators on one (spec, seed)."""
+    from repro.fleet.traffic import generate_legacy, generate_trace
+    trace = generate_trace(spec, seed)
+    legacy = generate_legacy(spec, seed)
+    assert len(trace) == len(legacy), (len(trace), len(legacy))
+    mat = trace.materialize()
+    for a, b in zip(mat, legacy):
+        assert a.fid == b.fid
+        assert a.t_arrival == b.t_arrival              # bitwise, no tol
+        assert a.max_new_tokens == b.max_new_tokens
+        assert a.tier == b.tier and a.ttft_slo_s == b.ttft_slo_s
+        assert a.prompt.dtype == b.prompt.dtype
+        assert np.array_equal(a.prompt, b.prompt)
+    return len(legacy)
+
+
+def scenario_vectorize(quick: bool):
+    from repro.fleet.traffic import (TrafficSpec, generate_legacy,
+                                     generate_trace)
+    pins = {name: _assert_pin(TrafficSpec(**kw), seed=11 + i)
+            for i, (name, kw) in enumerate(PIN_SPECS.items())}
+
+    n_target = 200_000 if quick else 1_000_000
+    big = TrafficSpec(duration_s=n_target / 4000.0, rate_rps=4000.0)
+    t0 = time.perf_counter()
+    trace = generate_trace(big, seed=3)
+    vec_s = time.perf_counter() - t0
+
+    # legacy cost measured at small n, extrapolated (scalar loop is O(n))
+    small = TrafficSpec(duration_s=1.0, rate_rps=4000.0)
+    t0 = time.perf_counter()
+    sample = generate_legacy(small, seed=3)
+    legacy_us_per_req = (time.perf_counter() - t0) / len(sample) * 1e6
+    legacy_est_s = legacy_us_per_req * len(trace) / 1e6
+    speedup = legacy_est_s / max(vec_s, 1e-9)
+
+    return {
+        "bitwise_pin_requests": pins,
+        "requests": len(trace),
+        "vectorized_s": round(vec_s, 4),
+        "vectorized_us_per_req": round(vec_s / len(trace) * 1e6, 3),
+        "legacy_us_per_req": round(legacy_us_per_req, 2),
+        "legacy_extrapolated_s": round(legacy_est_s, 2),
+        "legacy_sample_n": len(sample),
+        "speedup_x": round(speedup, 1),
+        "gate": {"threshold_x": GATE_SPEEDUP_X,
+                 "passed": bool(speedup >= GATE_SPEEDUP_X)},
+    }
+
+
+# -- scenario 2: predictive vs reactive pre-provisioning ----------------------
+
+DIURNAL_PERIOD_S = 8.0
+FAIL_PLAN = [(10.0, "replica:0")]          # mid-day block loss
+REPAIR_PLAN = [(12.0, "last_failed")]
+
+
+def _edge_p95(svc, spec) -> float:
+    """p95 TTFT of requests arriving while the diurnal rate ramps up
+    (phase [0.25, 0.5) of each period) — where a reactive autoscaler is
+    structurally ``provision_s`` late and the TTFT spike lives."""
+    ttfts = []
+    for r in svc.requests:
+        if r.t_first is None:
+            continue
+        phase = (r.t_arrival % spec.diurnal_period_s) / spec.diurnal_period_s
+        if 0.25 <= phase < 0.5:
+            ttfts.append(r.t_first - r.t_arrival)
+    return float(np.percentile(ttfts, 95)) if ttfts else 0.0
+
+
+def scenario_predictive(cfg, params, sspec, quick: bool):
+    from repro.cluster import Supercomputer
+    from repro.fleet import (AutoscalerConfig, FleetService, ForecastConfig,
+                             TrafficSpec, generate_trace)
+    spec = TrafficSpec(duration_s=16.0 if quick else 24.0, rate_rps=100.0,
+                       pattern="diurnal", diurnal_period_s=DIURNAL_PERIOD_S,
+                       trough_frac=0.15)
+    trace = generate_trace(spec, seed=5)
+    autoscale = AutoscalerConfig(min_replicas=1, max_replicas=4, tick_s=0.25,
+                                 cooldown_s=1.0, provision_s=1.0)
+    arms = {}
+    for kind in ("reactive", "predictive"):
+        sc = Supercomputer(num_blocks=20)
+        svc = FleetService(
+            sc, cfg, params, sspec, geometry=(4, 4, 4),
+            initial_replicas=1, timing=CHUNK_S, max_wait_queue=100_000,
+            autoscale=autoscale,
+            forecast=(ForecastConfig(bin_s=0.25, period_s=DIURNAL_PERIOD_S,
+                                     min_history_s=1.0)
+                      if kind == "predictive" else None))
+        rep = svc.run(trace, fail_plan=FAIL_PLAN, repair_plan=REPAIR_PLAN,
+                      settle_s=2.0, max_iters=2_000_000)
+        arms[kind] = {"report": rep, "edge_p95": _edge_p95(svc, spec)}
+    ra, pa = arms["reactive"]["report"], arms["predictive"]["report"]
+    edge_r = arms["reactive"]["edge_p95"]
+    edge_p = arms["predictive"]["edge_p95"]
+    shrink = 1.0 - edge_p / max(edge_r, 1e-9)
+    return {
+        "trace": {"requests": len(trace),
+                  "tokens_offered": trace.tokens_offered,
+                  "duration_s": spec.duration_s,
+                  "diurnal_period_s": spec.diurnal_period_s},
+        "fail_plan": [[t, str(b)] for t, b in FAIL_PLAN],
+        "repair_plan": [[t, str(b)] for t, b in REPAIR_PLAN],
+        "reactive": ra.to_dict(),
+        "predictive": pa.to_dict(),
+        "predictive_ups": pa.predictive_ups,
+        "edge_p95_ttft_reactive_s": round(edge_r, 4),
+        "edge_p95_ttft_predictive_s": round(edge_p, 4),
+        "edge_p95_shrink": round(shrink, 4),
+        "gate": {
+            "slo_goodput_predictive": pa.slo_goodput,
+            "slo_goodput_reactive": ra.slo_goodput,
+            "edge_shrink_needed": GATE_EDGE_SHRINK,
+            "passed": bool(pa.slo_goodput >= ra.slo_goodput
+                           and shrink >= GATE_EDGE_SHRINK
+                           and pa.predictive_ups >= 1),
+        },
+    }
+
+
+# -- scenario 3: automatic straggler swap -------------------------------------
+
+def scenario_straggler(cfg, params, sspec, quick: bool):
+    from repro.cluster import StragglerConfig, Supercomputer
+    from repro.fleet import FleetService, TrafficSpec, generate_trace
+    spec = TrafficSpec(duration_s=2.0 if quick else 4.0, rate_rps=8.0)
+    trace = generate_trace(spec, seed=7)
+    arms = {}
+    for kind in ("tolerate", "detect"):
+        sc = Supercomputer(num_blocks=8)
+        svc = FleetService(
+            sc, cfg, params, sspec, geometry=(8, 4, 4),
+            initial_replicas=1, timing=CHUNK_S,
+            straggler=(StragglerConfig(threshold=1.25, ema_alpha=0.5,
+                                       patience=3, cooldown_steps=4)
+                       if kind == "detect" else None))
+        slow = svc.replicas[0].slice._job.blocks[1]
+        sc.set_block_slowdown(slow, 2.0)
+        rep = svc.run(trace)
+        arms[kind] = {
+            "report": rep,
+            "slowdown_after": svc.replicas[0].slice.slowdown_factor(),
+        }
+    tol, det = arms["tolerate"]["report"], arms["detect"]["report"]
+    return {
+        "trace": {"requests": len(trace),
+                  "tokens_offered": trace.tokens_offered},
+        "injected_slowdown_x": 2.0,
+        "tolerate": tol.to_dict(),
+        "detect": det.to_dict(),
+        "swaps": det.straggler_swaps,
+        "slowdown_after_detect": arms["detect"]["slowdown_after"],
+        "makespan_tolerate_s": tol.makespan_s,
+        "makespan_detect_s": det.makespan_s,
+        "gate": {
+            "passed": bool(det.straggler_swaps >= 1
+                           and arms["detect"]["slowdown_after"] == 1.0
+                           and det.makespan_s < tol.makespan_s),
+        },
+    }
+
+
+def run(quick: bool = False):
+    import jax
+
+    from repro.cluster import SliceSpec
+    from repro.configs import registry
+    from repro.models import api
+    cfg = registry.get_reduced(ARCH)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    sspec = SliceSpec(slots=2, max_len=48, prompt_len=8, chunk=4)
+
+    vec = scenario_vectorize(quick)
+    pred = scenario_predictive(cfg, params, sspec, quick)
+    strag = scenario_straggler(cfg, params, sspec, quick)
+    record = {
+        "arch": ARCH,
+        "quick": bool(quick),
+        "virtual_chunk_s": CHUNK_S,
+        "vectorize": vec,
+        "predictive": pred,
+        "straggler": strag,
+    }
+    OUT.write_text(json.dumps(record, indent=2) + "\n")
+    rows = [
+        ("predict_traffic_vectorize", vec["vectorized_us_per_req"],
+         f"n={vec['requests']};speedup={vec['speedup_x']}x;"
+         f"need>={GATE_SPEEDUP_X}x;ok={vec['gate']['passed']}"),
+        ("predict_preprovision", 0.0,
+         f"slo_goodput={pred['gate']['slo_goodput_predictive']}"
+         f"_vs_{pred['gate']['slo_goodput_reactive']};"
+         f"edge_p95={pred['edge_p95_ttft_predictive_s']}"
+         f"_vs_{pred['edge_p95_ttft_reactive_s']};"
+         f"pred_ups={pred['predictive_ups']};ok={pred['gate']['passed']}"),
+        ("predict_straggler_swap", 0.0,
+         f"swaps={strag['swaps']};"
+         f"makespan={strag['makespan_detect_s']}"
+         f"_vs_{strag['makespan_tolerate_s']};"
+         f"ok={strag['gate']['passed']}"),
+    ]
+    if not vec["gate"]["passed"]:
+        raise AssertionError(
+            f"traffic vectorization gate: {vec['speedup_x']}x < "
+            f"{GATE_SPEEDUP_X}x at n={vec['requests']}")
+    if not pred["gate"]["passed"]:
+        raise AssertionError(
+            "predictive gate: slo_goodput "
+            f"{pred['gate']['slo_goodput_predictive']} vs reactive "
+            f"{pred['gate']['slo_goodput_reactive']}, edge-p95 shrink "
+            f"{pred['edge_p95_shrink']} (need >= {GATE_EDGE_SHRINK}), "
+            f"predictive_ups={pred['predictive_ups']}")
+    if not strag["gate"]["passed"]:
+        raise AssertionError(
+            f"straggler gate: swaps={strag['swaps']}, makespan "
+            f"{strag['makespan_detect_s']} vs {strag['makespan_tolerate_s']}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (smaller traces), same gates")
+    args = ap.parse_args()
+    try:
+        for name, us, derived in run(quick=args.quick):
+            print(f"{name},{us:.1f},{derived}")
+    except AssertionError as e:
+        print(f"GATE FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,8 @@ BENCHES = [
     "mixed_tenancy",         # elastic train+serve tenancy -> BENCH_tenancy.json
     "kv_prefix",             # prefix-shared KV pool -> BENCH_kvprefix.json
     "quantization",          # int8 weights + compressed grads -> BENCH_quant.json
+    "predictive_fleet",      # vectorized traffic + predictive autoscale +
+                             # straggler swap -> BENCH_predict.json
 ]
 
 

@@ -65,6 +65,15 @@ if [[ "${1:-}" != "--fast" ]]; then
     # ~4x below fp32 (payload-only accounting) with final loss within 5%
     python benchmarks/quantization.py --quick
 
+    echo "== predict stage: predictive fleet benchmark -> BENCH_predict.json =="
+    # gates: vectorized traffic generation >= 100x the legacy per-request
+    # generator (with small-trace bitwise equivalence); the forecasting
+    # autoscaler matches-or-beats reactive watermarks on SLO-goodput
+    # through a diurnal day-with-failures and shrinks the burst-edge p95
+    # TTFT >= 30%; the straggler detector fires >= 1 spare swap that
+    # recovers step time under an injected 2x-slow block
+    python benchmarks/predictive_fleet.py --quick
+
     echo "== archive benchmark artifacts =="
     mkdir -p artifacts
     cp BENCH_*.json artifacts/

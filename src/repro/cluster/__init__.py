@@ -16,6 +16,7 @@ importable for tests and benchmarks, but workloads should not need it.
 from repro.cluster.slices import (BoundCollectives, ServeSession, Slice,
                                   SliceError, SliceEvent, SliceSession,
                                   TrainSession)
+from repro.cluster.straggler import StragglerConfig, StragglerDetector
 from repro.cluster.supercomputer import (CapacityError, JobTicket,
                                          Supercomputer)
 from repro.cluster.tenancy import (ElasticTrainJob, MixedTenancyDriver,
@@ -25,6 +26,7 @@ from repro.serve.engine import SliceSpec
 __all__ = [
     "BoundCollectives", "CapacityError", "ElasticTrainJob", "JobTicket",
     "MixedTenancyDriver", "ServeSession", "Slice", "SliceError",
-    "SliceEvent", "SliceSession", "SliceSpec", "Supercomputer",
-    "TenancyReport", "TrainSession", "TrainTenantSpec",
+    "SliceEvent", "SliceSession", "SliceSpec", "StragglerConfig",
+    "StragglerDetector", "Supercomputer", "TenancyReport", "TrainSession",
+    "TrainTenantSpec",
 ]

@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.autotopo import (Evaluation, ModelProfile, ParallelSpec,
                                  estimate_step_time, search)
-from repro.core.ocs import SWITCH_TIME_S
+from repro.core.ocs import reconfig_time
 from repro.core.topology import SliceTopology, is_twistable
 from repro.parallel.context import LOCAL, ParallelContext
 from repro.serve.engine import ServeEngine, SliceSpec
@@ -179,7 +179,7 @@ class TrainSession(SliceSession):
         return self.trainer.preempted
 
     def run(self, num_steps: int, *, fail_at: Optional[int] = None,
-            log_every: int = 10, state=None):
+            log_every: int = 10, state=None, straggler=None):
         """Train to ``num_steps`` (absolute), resuming from ``state``, the
         session's previous state, or the latest checkpoint.
 
@@ -189,15 +189,37 @@ class TrainSession(SliceSession):
           fail_at: inject a block failure at this step (the §2.3 drill).
           log_every: metric logging period in steps.
           state: explicit `TrainerState` to continue from.
+          straggler: optional `repro.cluster.straggler.StragglerDetector` —
+            fed this slice's modeled per-block step times after every step;
+            when it confirms a slow block and the payback check clears
+            (time recovered over the remaining steps beats the ACOS
+            reconfiguration blackout), the session swaps the block via
+            `Slice.swap_straggler` and keeps training.
 
         Returns the final `TrainerState` (early if preempted — check
         `preempted`)."""
         self._check_live()
         sc = self.slice._sc
+
+        on_step = None
+        if straggler is not None:
+            def on_step(step: int, step_s: float) -> None:
+                if self.lost or self.slice.status != "active":
+                    return
+                blk = straggler.observe(self.slice.block_times(step_s))
+                if blk is None:
+                    return
+                if not straggler.worth_swapping(
+                        blk, step_s, self.slice.swap_cost_s(blk),
+                        remaining_steps=max(0, num_steps - step)):
+                    return
+                if self.slice.swap_straggler(blk) is not None:
+                    straggler.fired(blk)
+
         self.state = self.trainer.train(
             num_steps, state=state or self.state, fail_at=fail_at,
             scheduler=sc.scheduler, job_id=self.slice.job_id,
-            log_every=log_every)
+            log_every=log_every, on_step=on_step)
         return self.state
 
 
@@ -479,7 +501,7 @@ class Slice:
         self._job.twisted = twisted
         self._notify(SliceEvent(
             "retwist", f"twisted={twisted}", circuits_moved=changed,
-            downtime_s=SWITCH_TIME_S if changed else 0.0))
+            downtime_s=reconfig_time(changed)))
         return changed
 
     def request_preempt(self, detail: str = "preemption requested") -> bool:
@@ -498,7 +520,9 @@ class Slice:
         return self.status != "active"
 
     def swap_straggler(self, slow_block: int) -> Optional[SliceEvent]:
-        """Replace a slow-but-healthy block with a spare (§2.3)."""
+        """Replace a slow-but-healthy block with the fastest spare (§2.3).
+        Returns the emitted event, or None when the scheduler refused (no
+        spare, or no spare faster than the block)."""
         self._check_active()
         res = self._sc.scheduler.swap_straggler(self.job_id, slow_block)
         if res is None:
@@ -508,6 +532,35 @@ class Slice:
                         circuits_moved=moved, downtime_s=secs)
         self._notify(ev)
         return ev
+
+    # -- straggler telemetry ---------------------------------------------------
+
+    def slowdown_factor(self) -> float:
+        """Step-time multiplier of the slice's SLOWEST block: a synchronous
+        (data-parallel) step finishes when the last block does, so one
+        straggler drags the whole slice to its pace."""
+        sched = self._sc.scheduler
+        return max((sched.slowdown_of(b) for b in self._job.blocks),
+                   default=1.0)
+
+    def block_times(self, base_s: float) -> Dict[int, float]:
+        """Per-block step time under a nominal per-block cost of
+        ``base_s``: what a per-block step timer would report this step —
+        the straggler detector's input signal."""
+        sched = self._sc.scheduler
+        return {b: base_s * sched.slowdown_of(b) for b in self._job.blocks}
+
+    def swap_cost_s(self, block: Optional[int] = None) -> float:
+        """Predicted blackout of swapping ``block`` (any owned block by
+        default — circuit counts are uniform) for a spare, through the
+        ACOS-style `CollectiveCostModel.reconfig_time`.  The payback side
+        of the repair decision: swap only if the steady-state gain
+        amortizes this."""
+        if block is None:
+            block = self._job.blocks[0]
+        moved = sum(1 for c in self._job.config.circuits
+                    if block in (c.block_plus, c.block_minus))
+        return self._sc.costs.reconfig_time(moved)
 
     # -- lifecycle ------------------------------------------------------------
 

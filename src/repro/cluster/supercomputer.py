@@ -229,6 +229,13 @@ class Supercomputer:
         set unless a slice still maps it)."""
         self.scheduler.repair_block(block)
 
+    def set_block_slowdown(self, block: int, factor: float) -> None:
+        """Mark a block as a straggler: healthy but ``factor``x slower per
+        synchronous step (1.0 clears it).  Sessions on slices owning the
+        block model their step time off it; the straggler detector is what
+        should notice and `Slice.swap_straggler` it away."""
+        self.scheduler.set_slowdown(block, factor)
+
     def _on_failure(self, block: int, result) -> None:
         if result is None:
             return                          # idle block, nobody to notify

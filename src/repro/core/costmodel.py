@@ -137,6 +137,21 @@ class CollectiveCostModel:
     def p2p(self, bytes_: float, hops: int = 1) -> float:
         return hops * bytes_ / self.hw.link_bw
 
+    # -- reconfiguration --------------------------------------------------------
+
+    def reconfig_time(self, circuits_moved: int,
+                      arrays: Optional[int] = None) -> float:
+        """Seconds of slice blackout to re-program ``circuits_moved`` OCS
+        circuits (spare swap, straggler swap, re-twist): the ACOS-style
+        per-switch-array model — arrays reconfigure in parallel, each
+        serializes its own circuit programming, plus one MEMS settle.
+        This is the price a repair decision trades against steady-state
+        gain (a straggler swap only pays off if the recovered step time
+        amortizes the blackout)."""
+        from repro.core.ocs import NUM_OCS, reconfig_time
+        return reconfig_time(circuits_moved,
+                             NUM_OCS if arrays is None else arrays)
+
     # -- compute / memory -------------------------------------------------------
 
     def compute_time(self, flops_per_chip: float,

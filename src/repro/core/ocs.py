@@ -18,6 +18,7 @@ twisting free (§2.8).  ``reconfigure_around_failure`` swaps a spare block in
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -28,6 +29,23 @@ OCS_PORTS = 136                 # 128 usable + 8 spares
 OCS_USABLE_PORTS = 128
 NUM_OCS = 48
 SWITCH_TIME_S = 10e-3           # MEMS mirrors switch in milliseconds
+# ACOS-style per-switch-array programming cost: each OCS serializes the
+# re-programming of its own circuits (control-plane writes + mirror
+# settling per circuit), while the 48 arrays work in parallel — so the
+# reconfiguration tail grows with ceil(moved / arrays), not with the raw
+# circuit count.  The MEMS switch time is paid once on top.
+OCS_PROGRAM_S_PER_CIRCUIT = 1e-3
+
+
+def reconfig_time(circuits_moved: int, arrays: int = NUM_OCS) -> float:
+    """Seconds to re-program ``circuits_moved`` circuits across ``arrays``
+    parallel switch arrays: one MEMS settle plus the per-array serialized
+    programming of its share of the moves.  Zero moves cost zero — an
+    identity reconfiguration never blacks the slice out."""
+    if circuits_moved <= 0:
+        return 0.0
+    per_array = math.ceil(circuits_moved / max(1, arrays))
+    return SWITCH_TIME_S + per_array * OCS_PROGRAM_S_PER_CIRCUIT
 
 
 @dataclass(frozen=True)
@@ -148,8 +166,8 @@ class OCSFabric:
             new_circuits.append(Circuit(c.ocs, c.dim, c.pair, bp, bm))
         cfg.circuits = new_circuits
         self._claim(new_circuits)
-        # all moves happen in parallel across OCSes; MEMS switch time dominates
-        return moved, SWITCH_TIME_S
+        # arrays reprogram in parallel; each serializes its own moves
+        return moved, reconfig_time(moved)
 
     # -- twist-as-reconfiguration --------------------------------------------------
 

@@ -64,6 +64,11 @@ class SliceScheduler:
         self.free: Set[int] = set(range(num_blocks))
         self.jobs: Dict[int, Job] = {}
         self.events: List[str] = []
+        # block -> step-time multiplier (>= 1.0; absent = nominal).  A slow
+        # block is healthy — it answers, it just drags every synchronous
+        # step (§2.3's "stragglers" as distinct from failures) — so it
+        # stays allocatable, but spare selection avoids it.
+        self.slowdown: Dict[int, float] = {}
         self._next = 0
 
     # -- allocation -----------------------------------------------------------
@@ -155,6 +160,30 @@ class SliceScheduler:
 
     # -- failures / stragglers ----------------------------------------------------
 
+    def set_slowdown(self, block: int, factor: float) -> None:
+        """Mark ``block`` as running ``factor``x slower than nominal (1.0
+        clears the mark).  Pure telemetry state: sessions model their
+        synchronous step time off it, the detector reads it back, and
+        spare selection prefers fast blocks."""
+        assert factor > 0.0, factor
+        if factor <= 1.0:
+            self.slowdown.pop(block, None)
+        else:
+            self.slowdown[block] = float(factor)
+        self.events.append(f"slowdown block{block} x{factor:g}")
+
+    def slowdown_of(self, block: int) -> float:
+        """Current step-time multiplier of ``block`` (1.0 = nominal)."""
+        return self.slowdown.get(block, 1.0)
+
+    def _best_spare(self) -> Optional[int]:
+        """Fastest healthy free block (ties to the lowest id — keeps the
+        no-slowdown behavior identical to the historical sorted()[0])."""
+        spares = self.free & self.healthy
+        if not spares:
+            return None
+        return min(spares, key=lambda b: (self.slowdown_of(b), b))
+
     def fail_block(self, block: int) -> Optional[Tuple[int, int, float]]:
         """Mark a block failed.  If a job owned it, swap in a spare.
 
@@ -172,13 +201,12 @@ class SliceScheduler:
             self.events.append(f"fail block{block}: job{owner.job_id} DOWN")
             self.release(owner.job_id)
             return (owner.job_id, 0, float("inf"))
-        spares = sorted(self.free & self.healthy)
-        if not spares:
+        spare = self._best_spare()
+        if spare is None:
             self.events.append(f"fail block{block}: no spares, "
                                f"job{owner.job_id} DOWN")
             self.release(owner.job_id)
             return (owner.job_id, 0, float("inf"))
-        spare = spares[0]
         self.free.discard(spare)
         moved, secs = self.fabric.reconfigure_around_failure(
             owner.config, block, spare)
@@ -196,12 +224,22 @@ class SliceScheduler:
 
     def swap_straggler(self, job_id: int, slow_block: int
                        ) -> Optional[Tuple[int, float]]:
-        """Straggler mitigation: replace a slow (but healthy) block."""
+        """Straggler mitigation: replace a slow (but healthy) block with
+        the FASTEST spare.  Refuses (None) when no spare exists or every
+        spare is at least as slow as the block being evicted — swapping
+        sideways would pay the reconfiguration blackout for nothing."""
         job = self.jobs[job_id]
-        spares = sorted(self.free & self.healthy)
-        if not spares:
+        spare = self._best_spare()
+        if spare is None:
+            self.events.append(
+                f"straggler: job{job_id} block{slow_block} kept (no spare)")
             return None
-        spare = spares[0]
+        if (self.slowdown_of(slow_block) > 1.0
+                and self.slowdown_of(spare) >= self.slowdown_of(slow_block)):
+            self.events.append(
+                f"straggler: job{job_id} block{slow_block} kept "
+                f"(no faster spare)")
+            return None
         self.free.discard(spare)
         moved, secs = self.fabric.reconfigure_around_failure(
             job.config, slow_block, spare)

@@ -14,15 +14,19 @@ is elastic (`autoscaler` drives `Supercomputer.allocate`/`Slice.free`), and
 a `fail_block` on a serving slice re-routes its in-flight requests to the
 surviving replicas instead of erroring the service (`service`).
 """
-from repro.fleet.autoscaler import Autoscaler, AutoscalerConfig
+from repro.fleet.autoscaler import (Autoscaler, AutoscalerConfig,
+                                    ForecastConfig, RateForecaster)
 from repro.fleet.replica import ReplicaError, ServeReplica
 from repro.fleet.router import Router, RouterConfig
 from repro.fleet.service import FleetReport, FleetService
-from repro.fleet.traffic import (FleetRequest, SLOTier, TrafficSpec,
-                                 generate, uniform_burst)
+from repro.fleet.traffic import (FleetRequest, FleetTrace, SLOTier,
+                                 TrafficSpec, generate, generate_legacy,
+                                 generate_trace, uniform_burst)
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "FleetReport", "FleetRequest",
-    "FleetService", "ReplicaError", "Router", "RouterConfig", "SLOTier",
-    "ServeReplica", "TrafficSpec", "generate", "uniform_burst",
+    "FleetService", "FleetTrace", "ForecastConfig", "RateForecaster",
+    "ReplicaError", "Router", "RouterConfig", "SLOTier", "ServeReplica",
+    "TrafficSpec", "generate", "generate_legacy", "generate_trace",
+    "uniform_burst",
 ]

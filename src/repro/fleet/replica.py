@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.cluster.slices import ServeSession, Slice, SliceEvent
+from repro.cluster.straggler import StragglerDetector
 from repro.fleet.traffic import FleetRequest
 
 PROVISIONING = "provisioning"
@@ -43,7 +44,8 @@ class ReplicaError(RuntimeError):
 class ServeReplica:
     def __init__(self, rep_id: int, slice_: Slice, session: ServeSession, *,
                  now: float, provision_s: float = 0.0,
-                 chunk_s: Optional[float] = None):
+                 chunk_s: Optional[float] = None,
+                 straggler: Optional[StragglerDetector] = None):
         self.rep_id = rep_id
         self.slice = slice_
         self.session = session
@@ -51,6 +53,8 @@ class ServeReplica:
         self.ready_at = now + provision_s
         self.busy_until = self.ready_at
         self.chunk_s = chunk_s              # None = measure real wall time
+        self.straggler = straggler          # per-replica detector (optional)
+        self.straggler_swaps = 0
         # engine rid -> (fleet request, out_tokens length at dispatch,
         #               engine request)
         self._assigned: Dict[int, Tuple[FleetRequest, int, object]] = {}
@@ -153,13 +157,16 @@ class ServeReplica:
 
     def step(self, now: float) -> List[FleetRequest]:
         """Run ONE real admission+decode chunk; charge its latency (measured
-        or fixed) plus any pending reconfiguration stall to the virtual
-        clock.  Returns the fleet requests that completed in this chunk,
-        stamped with virtual times."""
+        or fixed, dragged by the slice's slowest block — a synchronous step
+        finishes when the last block does) plus any pending reconfiguration
+        stall to the virtual clock.  Returns the fleet requests that
+        completed in this chunk, stamped with virtual times."""
         t0 = time.perf_counter()
         self.session.step_chunk()
-        lat = (time.perf_counter() - t0 if self.chunk_s is None
-               else self.chunk_s)
+        base = (time.perf_counter() - t0 if self.chunk_s is None
+                else self.chunk_s)
+        lat = base * self.slice.slowdown_factor()
+        self._maybe_swap_straggler(base)
         stall = self.session.stall_s - self._stall_seen
         self._stall_seen = self.session.stall_s
         end = now + lat + stall
@@ -167,6 +174,24 @@ class ServeReplica:
         self.busy_s += lat + stall
         self.chunks_run += 1
         return self._harvest(end)
+
+    def _maybe_swap_straggler(self, base_s: float) -> None:
+        """Feed this chunk's modeled per-block times to the detector; when
+        it confirms a straggler AND the recovered time pays for the
+        reconfiguration blackout, swap the block.  The `SliceEvent`'s
+        downtime lands in the session's stall clock and is charged on this
+        very step."""
+        det = self.straggler
+        if det is None or self.state not in (ACTIVE, DRAINING):
+            return
+        blk = det.observe(self.slice.block_times(base_s))
+        if blk is None:
+            return
+        if not det.worth_swapping(blk, base_s, self.slice.swap_cost_s(blk)):
+            return
+        if self.slice.swap_straggler(blk) is not None:
+            det.fired(blk)
+            self.straggler_swaps += 1
 
     def _harvest(self, t: float) -> List[FleetRequest]:
         """Sync engine progress into the fleet requests after a chunk."""
@@ -259,6 +284,7 @@ class ServeReplica:
             "chunks_run": self.chunks_run,
             "busy_s": round(self.busy_s, 4),
             "truncated_migrations": self.truncated_migrations,
+            "straggler_swaps": self.straggler_swaps,
         }
         eng = getattr(self.session, "engine", None)
         kv = eng.kv_stats() if eng is not None and hasattr(eng, "kv_stats") \

@@ -30,17 +30,20 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.cluster.slices import Slice, SliceEvent
+from repro.cluster.straggler import StragglerConfig, StragglerDetector
 from repro.cluster.supercomputer import Supercomputer
 from repro.configs.base import ModelConfig
-from repro.fleet.autoscaler import Autoscaler, AutoscalerConfig
+from repro.fleet.autoscaler import (Autoscaler, AutoscalerConfig,
+                                    ForecastConfig)
 from repro.fleet.replica import (ACTIVE, DEAD, DRAINING, FREED,
                                  PROVISIONING, ServeReplica)
 from repro.fleet.router import Router, RouterConfig
-from repro.fleet.traffic import FleetRequest
+from repro.fleet.traffic import FleetRequest, FleetTrace
 from repro.serve.engine import ServeEngine, SliceSpec, _pct
 
 Geometry = Union[int, Tuple[int, int, int]]
 FailPlan = Sequence[Tuple[float, Union[int, str]]]   # (virtual_t, block)
+Arrivals = Union[FleetTrace, Sequence[FleetRequest]]
 
 
 @dataclasses.dataclass
@@ -61,6 +64,8 @@ class FleetReport:
     slo_goodput: float              # tokens of SLO-met requests / offered
     scale_ups: int
     scale_downs: int
+    predictive_ups: int             # scale-ups fired by the forecaster
+    straggler_swaps: int            # detector-fired spare swaps
     failures: int                   # fail_block hits on fleet slices
     replicas_seen: int
     replica_stats: List[Dict[str, Any]]
@@ -102,11 +107,13 @@ class FleetService:
                  initial_replicas: int = 1,
                  router: Optional[RouterConfig] = None,
                  autoscale: Optional[AutoscalerConfig] = None,
+                 forecast: Optional[ForecastConfig] = None,
                  timing: Union[str, float] = "measured",
                  max_wait_queue: int = 256,
                  ttft_window_s: float = 2.0,
                  priority: int = 1,
-                 preempt_on_allocate: bool = False):
+                 preempt_on_allocate: bool = False,
+                 straggler: Optional[StragglerConfig] = None):
         assert model_cfg.family != "audio", \
             "fleet serving rides the fast path; the whisper enc-dec " \
             "family has no per-slot cache insert yet"
@@ -116,7 +123,8 @@ class FleetService:
         self.spec = spec or SliceSpec()
         self.geometry = geometry
         self.router = Router(router)
-        self.autoscaler = Autoscaler(autoscale) if autoscale else None
+        self.autoscaler = (Autoscaler(autoscale, forecast=forecast)
+                           if autoscale else None)
         self.chunk_s: Optional[float] = (
             None if timing == "measured" else float(timing))
         self.max_wait_queue = max_wait_queue
@@ -128,12 +136,25 @@ class FleetService:
         # the serving-burst-evicts-training story of cluster/tenancy.py.
         self.priority = priority
         self.preempt_on_allocate = preempt_on_allocate
+        # straggler policy: every replica gets its own detector (its slice
+        # is its synchronization domain; cross-replica steps never sync)
+        self.straggler_cfg = straggler
         self.deferred_scale_ups = 0     # scale-ups the machine could not place
 
         self.replicas: List[ServeReplica] = []
         self.retired: List[ServeReplica] = []   # freed/dead, stats only
         self.wait: deque = deque()
         self.requests: List[FleetRequest] = []
+        # trace-mode accounting: when `run` serves a FleetTrace, requests
+        # materialize lazily at arrival; entries dropped before ever
+        # materializing are counted here instead of built just to be marked
+        self._trace: Optional[FleetTrace] = None
+        self._trace_stranded = 0
+        # running completion counters: the measured per-replica service
+        # rate (tokens/busy-second over mean tokens/request) that converts
+        # an arrival-rate forecast into a replica target
+        self._completed_n = 0
+        self._tokens_done = 0
         self.log: List[str] = []
         self.now = 0.0
         self.failures = 0
@@ -175,8 +196,11 @@ class FleetService:
         if provision_s is None:
             provision_s = (self.autoscaler.cfg.provision_s
                            if self.autoscaler else 0.0)
+        det = (StragglerDetector(self.straggler_cfg)
+               if self.straggler_cfg else None)
         rep = ServeReplica(self._next_rep, sl, session, now=now,
-                           provision_s=provision_s, chunk_s=self.chunk_s)
+                           provision_s=provision_s, chunk_s=self.chunk_s,
+                           straggler=det)
         self._next_rep += 1
         self.replicas.append(rep)
         self._by_job[sl.job_id] = rep
@@ -300,11 +324,27 @@ class FleetService:
             return None
         return _pct([v for _, v in self._ttfts], 95)
 
+    def capacity_rps(self) -> Optional[float]:
+        """Measured per-replica request service rate: decode throughput per
+        busy replica-second over the observed mean tokens per completed
+        request.  None until enough completions have been seen to trust
+        the estimate — the forecaster abstains until then."""
+        if self._completed_n < 8:
+            return None
+        toks = sum(r.tokens_served for r in self.replicas) \
+            + sum(r.stats()["tokens_served"] for r in self.retired)
+        busy = sum(r.busy_s for r in self.replicas) \
+            + sum(r.stats()["busy_s"] for r in self.retired)
+        if busy <= 0.0 or toks <= 0:
+            return None
+        mean_new = self._tokens_done / self._completed_n
+        return (toks / busy) / max(1.0, mean_new)
+
     def _tick_autoscaler(self) -> None:
         assert self.autoscaler is not None
         action, victim = self.autoscaler.decide(
             self.now, self.replicas, len(self.wait),
-            self._window_p95_ttft())
+            self._window_p95_ttft(), capacity_rps=self.capacity_rps())
         if action == "up":
             if self._scale_up(self.now) is not None:
                 self.autoscaler.record("up", self.now)
@@ -326,7 +366,7 @@ class FleetService:
 
     # -- the event loop -------------------------------------------------------
 
-    def run(self, requests: Sequence[FleetRequest], *,
+    def run(self, requests: Arrivals, *,
             fail_plan: Optional[FailPlan] = None,
             repair_plan: Optional[FailPlan] = None,
             settle_s: float = 0.0,
@@ -334,6 +374,14 @@ class FleetService:
             on_advance=None) -> FleetReport:
         """Serve one arrival trace to completion (plus ``settle_s`` virtual
         seconds of autoscaler cool-down, so drains/frees become visible).
+
+        ``requests`` is either a `FleetTrace` (the structure-of-arrays
+        form: arrivals are cursor-indexed straight off the numpy columns
+        and each `FleetRequest` materializes only when its arrival time
+        comes — a million-request day costs a million cheap column reads,
+        not a million up-front objects) or a plain request sequence.  A
+        sequence already sorted by arrival is used as-is (one O(n)
+        monotonicity scan); only out-of-order input pays the sort.
 
         ``fail_plan``/``repair_plan`` inject `fail_block`/`repair_block`
         calls at virtual times; a repair target of ``"last_failed"``
@@ -348,8 +396,23 @@ class FleetService:
         slices, so their compute overlaps in virtual time)."""
         if self.chunk_s is None:
             self.warmup()
-        arrivals = sorted(requests, key=lambda r: (r.t_arrival, r.fid))
-        self.requests = list(arrivals)
+        trace = requests if isinstance(requests, FleetTrace) else None
+        if trace is not None:
+            n_arr = len(trace)
+            arr_t = trace.t_arrival
+            self.requests = []          # filled as arrivals materialize
+            arrivals: List[FleetRequest] = []
+        else:
+            arrivals = list(requests)
+            key = lambda r: (r.t_arrival, r.fid)        # noqa: E731
+            if any(key(arrivals[i]) > key(arrivals[i + 1])
+                   for i in range(len(arrivals) - 1)):
+                arrivals.sort(key=key)
+            n_arr = len(arrivals)
+            arr_t = None
+            self.requests = list(arrivals)
+        self._trace = trace
+        self._trace_stranded = 0
         fails = sorted(fail_plan or [], key=lambda f: f[0])
         repairs = sorted(repair_plan or [], key=lambda f: f[0])
         ai = fi = ri = 0
@@ -361,8 +424,12 @@ class FleetService:
         # tick time to drain surplus replicas
         last_event_t = self.now
 
+        def next_arrival_t() -> float:
+            return float(arr_t[ai]) if trace is not None \
+                else arrivals[ai].t_arrival
+
         def work_remaining() -> bool:
-            if (ai < len(arrivals) or fi < len(fails) or ri < len(repairs)
+            if (ai < n_arr or fi < len(fails) or ri < len(repairs)
                     or self.wait):
                 return True
             return any(r.state in (PROVISIONING, ACTIVE, DRAINING)
@@ -393,8 +460,8 @@ class FleetService:
 
             # -- next event time ---------------------------------------------
             cands: List[float] = []
-            if ai < len(arrivals):
-                cands.append(arrivals[ai].t_arrival)
+            if ai < n_arr:
+                cands.append(next_arrival_t())
             if fi < len(fails):
                 cands.append(fails[fi][0])
             if ri < len(repairs):
@@ -413,7 +480,7 @@ class FleetService:
             dead_end = (not self.live_replicas and ri >= len(repairs)
                         and not (self.sc.scheduler.free
                                  & self.sc.scheduler.healthy))
-            if dead_end and (self.wait or ai < len(arrivals)):
+            if dead_end and (self.wait or ai < n_arr):
                 # before declaring the requests stranded, try one scale-up:
                 # with `preempt_on_allocate` the machine may still carve a
                 # slice out of a lower-priority tenant (e.g. an elastic
@@ -423,14 +490,23 @@ class FleetService:
                     # new replica appears in the next event-time sweep
                     self._flush_wait()
                     continue
-            if not cands or (dead_end and (self.wait or ai < len(arrivals))):
-                stranded = list(self.wait) + arrivals[ai:]
+            if not cands or (dead_end and (self.wait or ai < n_arr)):
+                stranded = list(self.wait)
                 self.wait.clear()
-                ai = len(arrivals)
+                n_unmat = 0
+                if trace is not None:
+                    # never-materialized trace entries are counted dropped,
+                    # not built just to be stamped — at fleet scale that is
+                    # the difference between a counter and a million objects
+                    n_unmat = n_arr - ai
+                    self._trace_stranded += n_unmat
+                else:
+                    stranded += arrivals[ai:]
+                ai = n_arr
                 for req in stranded:
                     req.status = "dropped"
                 self._log(f"no capacity and no path to any: dropped "
-                          f"{len(stranded)} stranded requests")
+                          f"{len(stranded) + n_unmat} stranded requests")
                 break
             self.now = max(self.now, min(cands))
             if on_advance is not None:
@@ -473,8 +549,15 @@ class FleetService:
                     self.sc.repair_block(block)
                     last_event_t = self.now
             # -- arrivals ----------------------------------------------------
-            while ai < len(arrivals) and arrivals[ai].t_arrival <= self.now:
-                self._admit_or_wait(arrivals[ai])
+            while ai < n_arr and next_arrival_t() <= self.now:
+                if trace is not None:
+                    req = trace.request(ai)
+                    self.requests.append(req)
+                else:
+                    req = arrivals[ai]
+                if self.autoscaler is not None:
+                    self.autoscaler.observe_arrival(req.t_arrival)
+                self._admit_or_wait(req)
                 ai += 1
             # -- autoscaler tick ---------------------------------------------
             if tick and self.now >= next_tick:
@@ -485,6 +568,8 @@ class FleetService:
                 if r.runnable(self.now):
                     for done in r.step(self.now):
                         self._ttfts.append((done.t_done, done.ttft_s))
+                        self._completed_n += 1
+                        self._tokens_done += len(done.out_tokens)
                         last_event_t = max(last_event_t, done.t_done)
             # completions freed slots; drain the wait queue into them
             self._flush_wait()
@@ -504,19 +589,29 @@ class FleetService:
     def _report(self, requests: Optional[Sequence[FleetRequest]] = None
                 ) -> FleetReport:
         reqs = list(requests) if requests is not None else self.requests
+        trace = self._trace if requests is None else None
         done = [r for r in reqs if r.status == "done"]
         dropped = [r for r in reqs if r.status == "dropped"]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
         tokens = sum(len(r.out_tokens) for r in done)
+        offered_n = len(reqs)
+        dropped_n = len(dropped)
         offered_tok = sum(r.max_new_tokens for r in reqs)
         t0 = min((r.t_arrival for r in reqs), default=0.0)
+        if trace is not None and len(trace):
+            # trace-mode: offered load comes from the columns — entries the
+            # dead-end path dropped without materializing still count
+            offered_n = len(trace)
+            dropped_n += self._trace_stranded
+            offered_tok = trace.tokens_offered
+            t0 = float(trace.t_arrival[0])
         t1 = max((r.t_done for r in done if r.t_done), default=t0)
         makespan = max(t1 - t0, 1e-9)
         asc = self.autoscaler
         return FleetReport(
-            offered=len(reqs),
+            offered=offered_n,
             completed=len(done),
-            dropped=len(dropped),
+            dropped=dropped_n,
             migrated=sum(1 for r in reqs if r.migrations > 0),
             tokens_served=tokens,
             tokens_offered=offered_tok,
@@ -525,13 +620,16 @@ class FleetService:
             p50_ttft_s=round(_pct(ttfts, 50), 4),
             p95_ttft_s=round(_pct(ttfts, 95), 4),
             slo_attainment=round(
-                sum(1 for r in done if r.met_slo) / max(1, len(reqs)), 4),
+                sum(1 for r in done if r.met_slo) / max(1, offered_n), 4),
             served_goodput=round(tokens / max(1, offered_tok), 4),
             slo_goodput=round(
                 sum(len(r.out_tokens) for r in done if r.met_slo)
                 / max(1, offered_tok), 4),
             scale_ups=asc.scale_ups if asc else 0,
             scale_downs=asc.scale_downs if asc else 0,
+            predictive_ups=asc.predictive_ups if asc else 0,
+            straggler_swaps=sum(r.straggler_swaps
+                                for r in self.retired + self.replicas),
             failures=self.failures,
             replicas_seen=self._next_rep,
             replica_stats=[r.stats()

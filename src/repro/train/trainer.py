@@ -170,7 +170,9 @@ class Trainer:
               preempt_at: Optional[int] = None,
               scheduler: Optional[SliceScheduler] = None,
               job_id: Optional[int] = None,
-              log_every: int = 10) -> TrainerState:
+              log_every: int = 10,
+              on_step: Optional[Callable[[int, float], None]] = None
+              ) -> TrainerState:
         """Run the loop to ``num_steps`` (absolute step count).
 
         Args:
@@ -183,6 +185,9 @@ class Trainer:
             cooperative-eviction path without a cluster driver).
           scheduler/job_id: OCS scheduler wiring for the fault drill.
           log_every: metric logging period.
+          on_step: called after every executed step with
+            ``(step, step_wall_s)`` — the hook the straggler detector
+            rides (`TrainSession.run` feeds per-block step times from it).
 
         Returns the final `TrainerState`.  If a preemption request arrived
         (externally or via ``preempt_at``), the loop checkpointed, set
@@ -217,12 +222,15 @@ class Trainer:
                     self.metrics_log.append(
                         {"step": step, "event": 1.0})
                     continue
+            t_step = time.perf_counter()
             batch = self._put_batch(step)
             with mesh_scope(self.mesh):
                 params, opt, metrics = self.train_step(
                     state.params, state.opt_state, batch)
             state = TrainerState(params, opt, step + 1)
             step += 1
+            if on_step is not None:
+                on_step(step, time.perf_counter() - t_step)
             if step % log_every == 0 or step == num_steps:
                 m = {k: float(v) for k, v in metrics.items()}
                 m.update(step=step, wall_s=round(time.time() - t0, 2))

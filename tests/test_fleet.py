@@ -24,8 +24,9 @@ from repro.cluster import SliceError, SliceSpec, Supercomputer
 from repro.configs import registry
 from repro.core.goodput import goodput_ocs, goodput_static, served_goodput
 from repro.fleet import (Autoscaler, AutoscalerConfig, FleetService,
-                         ReplicaError, RouterConfig, TrafficSpec, generate,
-                         uniform_burst)
+                         ForecastConfig, RateForecaster, ReplicaError,
+                         RouterConfig, TrafficSpec, generate,
+                         generate_trace, uniform_burst)
 from repro.models import api
 
 CHUNK_S = 0.01                      # fixed virtual chunk cost (deterministic)
@@ -253,6 +254,131 @@ class TestAutoscalerDecisions:
         asc = Autoscaler(AutoscalerConfig(min_replicas=2))
         action, _ = asc.decide(0.0, [], wait_len=0, p95_ttft_s=None)
         assert action == "up"
+
+
+class TestTraceRun:
+    def test_trace_and_list_runs_match(self, small_model):
+        """`run(FleetTrace)` (lazy materialization, cursor arrivals) and
+        `run(list)` of the SAME trace must produce the same report — the
+        structure-of-arrays path changes cost, never behavior."""
+        spec = TrafficSpec(duration_s=3.0, rate_rps=6.0, pattern="bursty")
+        reports = {}
+        for form in ("trace", "list"):
+            _, svc = _service(small_model, replicas=2)
+            trace = generate_trace(spec, seed=13)
+            arrivals = trace if form == "trace" else trace.materialize()
+            reports[form] = svc.run(arrivals).to_dict()
+        assert reports["trace"] == reports["list"]
+
+    def test_unsorted_list_still_served(self, small_model):
+        """A caller-shuffled request list is re-sorted once (the O(n)
+        sortedness scan catches it); nothing is lost."""
+        _, svc = _service(small_model, replicas=1)
+        reqs = generate(TrafficSpec(duration_s=2.0, rate_rps=6.0), seed=3)
+        shuffled = list(reversed(reqs))
+        rep = svc.run(shuffled)
+        _assert_conserved(reqs, rep)
+        assert rep.offered == len(reqs)
+
+    def test_trace_stranded_counted_without_materializing(self, small_model):
+        """Kill all capacity mid-trace: arrivals never admitted must still
+        be counted as dropped even though they were never materialized."""
+        cfg, params = small_model
+        sc = Supercomputer(num_blocks=1)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=(4, 4, 4),
+                           initial_replicas=1, timing=CHUNK_S)
+        trace = generate_trace(
+            TrafficSpec(duration_s=4.0, rate_rps=8.0), seed=5)
+        rep = svc.run(trace, fail_plan=[(2 * CHUNK_S, "replica:0")])
+        assert rep.offered == len(trace)
+        assert rep.completed + rep.dropped == rep.offered
+        assert rep.dropped > 0
+        assert len(svc.requests) < len(trace), \
+            "stranded arrivals must not be materialized just to be dropped"
+
+
+class TestForecaster:
+    def test_abstains_before_min_history(self):
+        f = RateForecaster(ForecastConfig(bin_s=0.25, min_history_s=2.0))
+        f.observe(0.1)
+        assert f.forecast_peak(1.0, 1.0, 1.5) is None
+
+    def test_persistence_tracks_recent_rate(self):
+        f = RateForecaster(ForecastConfig(bin_s=0.25, recent_window_s=1.0,
+                                          min_history_s=1.0))
+        for i in range(40):                  # 10 rps over 4 seconds
+            f.observe(i * 0.1)
+        got = f.forecast_peak(4.0, 4.0, 4.5)
+        assert got == pytest.approx(10.0)
+
+    def test_periodic_fold_predicts_peak_from_past_cycles(self):
+        """Square-wave traffic with period 4: after two cycles the fold
+        must predict the upcoming peak from the same phase of history —
+        BEFORE the rate actually rises."""
+        cfg = ForecastConfig(bin_s=0.25, period_s=4.0, min_history_s=1.0)
+        f = RateForecaster(cfg)
+        rng = np.random.default_rng(0)
+        for cycle in range(2):
+            base = cycle * 4.0
+            for t in sorted(rng.uniform(0, 2, 8)):     # 4 rps quiet half
+                f.observe(base + t)
+            for t in sorted(rng.uniform(2, 4, 64)):    # 32 rps peak half
+                f.observe(base + t)
+        # now at the START of cycle 3's quiet half, look ahead into the
+        # peak half: the fold must see the historical peak coming
+        pred = f.forecast_peak(8.1, 10.0, 10.5)
+        assert pred is not None and pred > 16.0
+        # while a look-ahead into the quiet phase stays low
+        low = f.forecast_peak(8.1, 8.5, 9.0)
+        assert low is not None and low < pred / 2
+
+    def test_predictive_up_bypasses_cooldown(self, small_model):
+        """decide() returns "up" on a forecast-implied target even inside
+        the reactive cooldown window, and record() counts it."""
+        _, svc = _service(small_model, replicas=1)
+        live = list(svc.replicas)
+        asc = Autoscaler(AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                          cooldown_s=100.0, tick_s=0.25,
+                                          provision_s=0.75),
+                         forecast=ForecastConfig(bin_s=0.25,
+                                                 min_history_s=0.5,
+                                                 recent_window_s=1.0))
+        for i in range(80):                  # 20 rps sustained
+            asc.observe_arrival(2.0 + i * 0.05)
+        asc.record("up", 6.0)                # cooldown just started
+        action, _ = asc.decide(6.1, live, wait_len=0, p95_ttft_s=None,
+                               capacity_rps=4.0)   # needs ceil(20*1.15/4)=6
+        assert action == "up"
+        asc.record("up", 6.1)
+        assert asc.predictive_ups == 1
+
+    def test_forecast_holds_capacity_through_predicted_peak(self):
+        """The down rule must not drain into a predicted peak."""
+        asc = Autoscaler(AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                          cooldown_s=0.0, tick_s=0.25),
+                         forecast=ForecastConfig(bin_s=0.25,
+                                                 min_history_s=0.5,
+                                                 recent_window_s=1.0))
+        for i in range(80):
+            asc.observe_arrival(2.0 + i * 0.05)
+
+        class _Idle:
+            state = "active"
+            depth = 0
+            rep_id = 0
+
+            def tokens_owed(self):
+                return 0
+        live = [_Idle(), _Idle(), _Idle()]
+        live[1].rep_id, live[2].rep_id = 1, 2
+        # forecast wants ceil(20*1.15/8)=3 replicas: no victim
+        action, victim = asc.decide(6.0, live, wait_len=0, p95_ttft_s=None,
+                                    capacity_rps=8.0)
+        assert action == "hold" and victim is None
+        # with capacity to spare (forecast wants 1), the drain proceeds
+        action, victim = asc.decide(6.0, live, wait_len=0, p95_ttft_s=None,
+                                    capacity_rps=30.0)
+        assert action == "down" and victim is not None
 
 
 class TestThroughputScaling:

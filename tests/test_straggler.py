@@ -1,0 +1,241 @@
+"""Straggler detection, spare-swap economics, and the OCS reconfig cost.
+
+Three layers, bottom up:
+
+  * `SliceScheduler.swap_straggler` / `_best_spare` — spare selection
+    prefers fast blocks, refuses sideways swaps (no spare faster than the
+    straggler) and degrades to a logged no-op with no spare at all;
+  * `StragglerDetector` — hysteresis (one noisy step never fires; a
+    persistent straggler fires after exactly `patience` steps), cooldown,
+    and the payback decision against the ACOS-style reconfiguration cost;
+  * live sessions — a fired swap emits a ``"straggler"`` `SliceEvent` that
+    propagates into every attached session and charges the blackout to its
+    stall clock, and the end-to-end serve/train drills recover step time.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (SliceSpec, StragglerConfig, StragglerDetector,
+                           Supercomputer)
+from repro.cluster.slices import SliceSession
+from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
+                           ShapeConfig, registry)
+from repro.core import ocs
+from repro.core.costmodel import CollectiveCostModel
+from repro.fleet import FleetService, TrafficSpec, generate_trace
+from repro.models import api
+
+CHUNK_S = 0.01
+SPEC = SliceSpec(slots=2, max_len=48, prompt_len=8, chunk=4)
+CFG = StragglerConfig(threshold=1.25, ema_alpha=0.5, patience=3,
+                      cooldown_steps=4)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = registry.get_reduced("olmo-1b")
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+class TestReconfigCost:
+    def test_zero_moves_is_free(self):
+        assert ocs.reconfig_time(0) == 0.0
+        assert CollectiveCostModel().reconfig_time(0) == 0.0
+
+    def test_acos_shape(self):
+        """Base MEMS switch time + per-switch-array programming rounds."""
+        one_array = ocs.reconfig_time(ocs.NUM_OCS)
+        assert one_array == pytest.approx(
+            ocs.SWITCH_TIME_S + ocs.OCS_PROGRAM_S_PER_CIRCUIT)
+        # a second full array adds exactly one more programming round
+        assert ocs.reconfig_time(2 * ocs.NUM_OCS) == pytest.approx(
+            one_array + ocs.OCS_PROGRAM_S_PER_CIRCUIT)
+        assert ocs.reconfig_time(1) == ocs.reconfig_time(ocs.NUM_OCS)
+
+    def test_costmodel_delegates(self):
+        assert CollectiveCostModel().reconfig_time(64) == pytest.approx(
+            ocs.reconfig_time(64))
+
+    def test_retwist_charges_reconfig_time(self):
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((4, 4, 8))
+        moved = sl.retwist(True)
+        assert moved > 0
+        ev = [e for e in sl.events if e.kind == "retwist"][-1]
+        assert ev.downtime_s == pytest.approx(ocs.reconfig_time(moved))
+
+
+class TestDetectorHysteresis:
+    def test_single_noisy_step_never_fires(self):
+        det = StragglerDetector(CFG)
+        for i in range(12):
+            times = {b: 0.01 for b in range(4)}
+            if i == 5:
+                times[2] = 0.08        # one wild outlier
+            assert det.observe(times) is None, i
+
+    def test_persistent_straggler_fires_after_patience(self):
+        det = StragglerDetector(CFG)
+        hits = []
+        for i in range(CFG.patience + 2):
+            blk = det.observe({0: 0.01, 1: 0.01, 2: 0.02, 3: 0.01})
+            if blk is not None:
+                hits.append((i, blk))
+        assert hits and hits[0] == (CFG.patience - 1, 2)
+        assert det.slowdown_estimate(2) > CFG.threshold
+
+    def test_flapping_load_never_fires(self):
+        """Alternating slow/normal steps reset the streak every time."""
+        det = StragglerDetector(CFG)
+        for i in range(20):
+            t2 = 0.02 if i % 2 == 0 else 0.01
+            assert det.observe({0: 0.01, 1: 0.01, 2: t2, 3: 0.01}) is None
+
+    def test_cooldown_silences_next_candidate(self):
+        det = StragglerDetector(CFG)
+        while det.observe({0: 0.01, 1: 0.02, 2: 0.01, 3: 0.01}) is None:
+            pass
+        det.fired(1)
+        for i in range(CFG.cooldown_steps):
+            assert det.observe({0: 0.01, 2: 0.02, 3: 0.01,
+                                9: 0.01}) is None, i
+
+    def test_single_block_slice_abstains(self):
+        assert StragglerDetector(CFG).observe({0: 0.05}) is None
+
+    def test_payback(self):
+        det = StragglerDetector(CFG)
+        for _ in range(CFG.patience):
+            det.observe({0: 0.01, 1: 0.02, 2: 0.01, 3: 0.01})
+        # 2x straggler at 10ms steps recovers ~10ms/step: a 12ms blackout
+        # pays back over 200 steps but never over 1
+        assert det.worth_swapping(1, 0.01, blackout_s=0.012)
+        assert not det.worth_swapping(1, 0.01, blackout_s=0.012,
+                                      remaining_steps=1)
+
+
+class TestSchedulerSwap:
+    def test_best_spare_prefers_fast_block(self):
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((8, 4, 4))              # blocks [0, 1]
+        sc.set_block_slowdown(2, 1.5)            # next-in-line spare is slow
+        res = sc.scheduler.swap_straggler(sl.job_id, sl._job.blocks[0])
+        assert res is not None
+        assert 3 in sl._job.blocks and 2 not in sl._job.blocks
+
+    def test_refuses_without_faster_spare(self):
+        sc = Supercomputer(num_blocks=3)
+        sl = sc.allocate((8, 4, 4))              # blocks [0, 1]; spare: 2
+        sc.set_block_slowdown(1, 1.5)
+        sc.set_block_slowdown(2, 2.0)            # spare even slower
+        assert sc.scheduler.swap_straggler(sl.job_id, 1) is None
+        assert 1 in sl._job.blocks
+        assert any("no faster spare" in e for e in sc.scheduler.events)
+
+    def test_no_spare_fallback(self):
+        sc = Supercomputer(num_blocks=2)
+        sl = sc.allocate((8, 4, 4))              # whole machine
+        sc.set_block_slowdown(1, 2.0)
+        assert sl.swap_straggler(1) is None
+        assert sl._job.blocks == [0, 1]
+        assert sl.status == "active"
+        assert any("no spare" in e for e in sc.scheduler.events)
+
+    def test_swap_frees_straggler_and_takes_spare(self):
+        sc = Supercomputer(num_blocks=4)
+        sl = sc.allocate((8, 4, 4))
+        sc.set_block_slowdown(1, 2.0)
+        ev = sl.swap_straggler(1)
+        assert ev is not None and ev.kind == "straggler"
+        assert ev.circuits_moved > 0
+        assert ev.downtime_s == pytest.approx(
+            ocs.reconfig_time(ev.circuits_moved))
+        assert 1 not in sl._job.blocks
+        assert 1 in sc.scheduler.free          # evicted straggler is a spare
+        assert sl.slowdown_factor() == 1.0
+
+
+class TestSliceTelemetry:
+    def test_slowdown_factor_and_block_times(self):
+        sc = Supercomputer(num_blocks=4)
+        sl = sc.allocate((8, 4, 4))
+        assert sl.slowdown_factor() == 1.0
+        sc.set_block_slowdown(sl._job.blocks[1], 1.7)
+        assert sl.slowdown_factor() == pytest.approx(1.7)
+        bt = sl.block_times(0.01)
+        assert bt[sl._job.blocks[0]] == pytest.approx(0.01)
+        assert bt[sl._job.blocks[1]] == pytest.approx(0.017)
+
+    def test_swap_cost_positive_and_uniform(self):
+        sc = Supercomputer(num_blocks=4)
+        sl = sc.allocate((8, 4, 4))
+        costs = {sl.swap_cost_s(b) for b in sl._job.blocks}
+        assert len(costs) == 1 and costs.pop() > 0
+
+    def test_event_propagates_into_live_session(self):
+        sc = Supercomputer(num_blocks=4)
+        sl = sc.allocate((8, 4, 4))
+        session = SliceSession(sl)
+        seen = []
+        session.add_listener(lambda s, ev: seen.append(ev.kind))
+        sc.set_block_slowdown(sl._job.blocks[0], 2.0)
+        ev = sl.swap_straggler(sl._job.blocks[0])
+        assert ev is not None
+        assert seen == ["straggler"]
+        assert session.stall_s == pytest.approx(ev.downtime_s)
+        assert not session.closed and not session.lost
+
+
+class TestEndToEnd:
+    def test_serve_detects_and_recovers(self, small_model):
+        cfg, params = small_model
+        sc = Supercomputer(num_blocks=8)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=(8, 4, 4),
+                           initial_replicas=1, timing=CHUNK_S,
+                           straggler=CFG)
+        rep = svc.replicas[0]
+        slow = rep.slice._job.blocks[1]
+        sc.set_block_slowdown(slow, 2.0)
+        report = svc.run(generate_trace(
+            TrafficSpec(duration_s=3.0, rate_rps=8.0,
+                        vocab_size=cfg.vocab_size), seed=7))
+        assert report.straggler_swaps >= 1
+        assert slow not in rep.slice._job.blocks
+        assert rep.slice.slowdown_factor() == 1.0
+        assert any(e.kind == "straggler" for e in rep.session.interruptions)
+        assert report.completed + report.dropped == report.offered
+
+    def test_serve_without_detector_stays_slow(self, small_model):
+        cfg, params = small_model
+        sc = Supercomputer(num_blocks=8)
+        svc = FleetService(sc, cfg, params, SPEC, geometry=(8, 4, 4),
+                           initial_replicas=1, timing=CHUNK_S)
+        slow = svc.replicas[0].slice._job.blocks[1]
+        sc.set_block_slowdown(slow, 2.0)
+        report = svc.run(generate_trace(
+            TrafficSpec(duration_s=1.5, rate_rps=8.0,
+                        vocab_size=cfg.vocab_size), seed=7))
+        assert report.straggler_swaps == 0
+        assert slow in svc.replicas[0].slice._job.blocks
+        assert svc.replicas[0].slice.slowdown_factor() == 2.0
+
+    def test_train_detects_and_swaps(self, small_model):
+        cfg, _ = small_model
+        sc = Supercomputer(num_blocks=8)
+        sl = sc.allocate((8, 4, 4))
+        slow = sl._job.blocks[1]
+        sc.set_block_slowdown(slow, 2.0)
+        run = RunConfig(model=cfg, shape=ShapeConfig("t", "train", 16, 2),
+                        parallel=ParallelConfig(remat="none"),
+                        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2))
+        sess = sl.train(run)
+        det = StragglerDetector(StragglerConfig(
+            threshold=1.25, ema_alpha=0.5, patience=2, cooldown_steps=2))
+        # enough remaining steps that the recovered time amortizes the
+        # reconfiguration blackout (the payback check is remaining-aware)
+        sess.run(30, straggler=det, log_every=100)
+        assert det.fired_log and det.fired_log[0][1] == slow
+        assert slow not in sl._job.blocks
+        assert any(e.kind == "straggler" for e in sess.interruptions)
+        assert sess.stall_s > 0

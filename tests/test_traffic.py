@@ -1,0 +1,115 @@
+"""Vectorized traffic engine invariants.
+
+The structure-of-arrays generator (`generate_trace`) must be a *bitwise*
+drop-in for the per-request legacy generator (`generate_legacy`) — same
+(spec, seed) in, same arrivals, prompts, tiers, and deadlines out, down to
+the float — because the fleet benchmarks compare runs across both forms
+and any drift would silently unpin every downstream artifact.  The
+per-column RNG substreams make that equivalence structural (array fills
+and scalar draws consume the same bits); these tests are the lock on it.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet import TrafficSpec, generate, generate_trace
+from repro.fleet.traffic import generate_legacy
+
+SPECS = {
+    "poisson": TrafficSpec(duration_s=20.0, rate_rps=8.0),
+    "bursty": TrafficSpec(duration_s=16.0, rate_rps=6.0, pattern="bursty",
+                          burst_x=4.0, burst_period_s=4.0, burst_len_s=1.0),
+    "diurnal": TrafficSpec(duration_s=16.0, rate_rps=8.0, pattern="diurnal",
+                           diurnal_period_s=8.0, trough_frac=0.25),
+    "header_fewshot": TrafficSpec(duration_s=10.0, rate_rps=10.0,
+                                  header_len=6, fewshot_len=8,
+                                  fewshot_pool=3, fewshot_prob=0.5),
+}
+
+
+def _assert_request_equal(a, b):
+    assert a.fid == b.fid
+    assert a.t_arrival == b.t_arrival        # bitwise float, no tolerance
+    assert a.max_new_tokens == b.max_new_tokens
+    assert a.tier == b.tier
+    assert a.ttft_slo_s == b.ttft_slo_s
+    assert a.prompt.dtype == b.prompt.dtype == np.int32
+    assert np.array_equal(a.prompt, b.prompt)
+
+
+class TestBitwisePin:
+    @pytest.mark.parametrize("name", sorted(SPECS))
+    def test_trace_matches_legacy_bitwise(self, name):
+        spec = SPECS[name]
+        trace = generate_trace(spec, seed=17)
+        legacy = generate_legacy(spec, seed=17)
+        assert len(trace) == len(legacy) > 0
+        for a, b in zip(trace.materialize(), legacy):
+            _assert_request_equal(a, b)
+
+    def test_generate_is_materialized_trace(self):
+        spec = SPECS["bursty"]
+        for a, b in zip(generate(spec, seed=4),
+                        generate_trace(spec, seed=4).materialize()):
+            _assert_request_equal(a, b)
+
+    def test_lazy_request_matches_materialize(self):
+        trace = generate_trace(SPECS["poisson"], seed=9)
+        mat = trace.materialize()
+        for i in (0, len(trace) // 2, len(trace) - 1):
+            _assert_request_equal(trace.request(i), mat[i])
+
+
+class TestTraceColumns:
+    def test_sorted_and_consistent(self):
+        spec = SPECS["diurnal"]
+        trace = generate_trace(spec, seed=2)
+        n = len(trace)
+        assert np.all(np.diff(trace.t_arrival) >= 0)
+        assert float(trace.t_arrival[-1]) < spec.duration_s
+        # flat token buffer: offsets are the exclusive prefix sum of lengths
+        off = np.zeros(n, dtype=np.int64)
+        np.cumsum(trace.prompt_len[:-1], dtype=np.int64, out=off[1:])
+        assert np.array_equal(trace.prompt_off, off)
+        assert trace.tail_tokens.size == int(trace.prompt_len.sum())
+        assert trace.tokens_offered == int(trace.new_tokens.sum())
+        assert np.all((trace.tier_idx >= 0)
+                      & (trace.tier_idx < len(spec.tiers)))
+
+    def test_prompt_slicing(self):
+        trace = generate_trace(SPECS["poisson"], seed=6)
+        i = len(trace) // 3
+        p = trace.prompt(i)
+        o = int(trace.prompt_off[i])
+        assert np.array_equal(
+            p[-int(trace.prompt_len[i]):],
+            trace.tail_tokens[o:o + int(trace.prompt_len[i])])
+
+
+class TestVectorizedRate:
+    @pytest.mark.parametrize("name", sorted(SPECS))
+    def test_rate_at_array_matches_scalar(self, name):
+        spec = SPECS[name]
+        ts = np.linspace(0.0, spec.duration_s, 101)
+        vec = spec.rate_at(ts)
+        assert isinstance(vec, np.ndarray) and vec.dtype == np.float64
+        scalars = np.array([spec.rate_at(float(t)) for t in ts])
+        assert np.array_equal(vec, scalars)
+        assert isinstance(spec.rate_at(0.0), float)
+        assert float(np.max(vec)) <= spec.rate_max + 1e-12
+
+    def test_mean_offered_tokens_per_s(self):
+        spec = TrafficSpec(duration_s=10.0, rate_rps=4.0)
+        got = spec.mean_offered_tokens_per_s()
+        assert got == pytest.approx(4.0 * spec.mean_new_tokens())
+
+    def test_thinning_tracks_diurnal_shape(self):
+        """Arrivals must be denser at the diurnal peak than the trough —
+        the thinning is against the true rate, not the peak envelope."""
+        spec = TrafficSpec(duration_s=400.0, rate_rps=8.0,
+                           pattern="diurnal", diurnal_period_s=8.0,
+                           trough_frac=0.1)
+        ts = generate_trace(spec, seed=1).t_arrival
+        phase = ts % spec.diurnal_period_s
+        near_peak = np.sum(np.abs(phase - 4.0) < 1.0)
+        near_trough = np.sum((phase < 1.0) | (phase > 7.0))
+        assert near_peak > 3 * near_trough
