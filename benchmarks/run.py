@@ -24,6 +24,8 @@ BENCHES = [
     "quantization",          # int8 weights + compressed grads -> BENCH_quant.json
     "predictive_fleet",      # vectorized traffic + predictive autoscale +
                              # straggler swap -> BENCH_predict.json
+    "observability",         # tracing overhead + noninterference + trace
+                             # reconstruction -> BENCH_obs.json
 ]
 
 

@@ -1,0 +1,111 @@
+"""Schema-check every committed BENCH_*.json against docs/benchmarks.md.
+
+The benchmarks doc is the schema: each ``## BENCH_<name>.json`` section
+documents its artifact's fields as backticked paths in the first column of
+a markdown table (dotted for nesting, ``*`` wildcards allowed, ``a / b``
+and ``a``, ``b`` listing several fields in one row).  This checker keeps
+doc and artifact from drifting:
+
+  * every committed ``BENCH_*.json`` must have a doc section;
+  * every documented field pattern must match at least one key path in
+    the artifact it documents (a doc row pointing at nothing is stale).
+
+Exit 0 = clean; 1 = drift, with one line per problem.
+
+    python scripts/check_bench.py
+"""
+import fnmatch
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC = ROOT / "docs" / "benchmarks.md"
+
+_FIELD_RE = re.compile(r"`([^`]+)`")
+_PATH_RE = re.compile(r"^[A-Za-z0-9_.*]+$")
+
+
+def doc_sections(text):
+    """``{artifact filename: [field patterns]}`` from the doc's tables."""
+    sections = {}
+    current = None
+    for line in text.splitlines():
+        m = re.match(r"^##\s+(BENCH_\w+\.json)\s*$", line)
+        if m:
+            current = sections.setdefault(m.group(1), [])
+            continue
+        if line.startswith("## "):
+            current = None
+            continue
+        if current is None or not line.startswith("|"):
+            continue
+        first = line.split("|")[1].strip()
+        if first in ("field", "") or set(first) <= {"-", " "}:
+            continue
+        for token in _FIELD_RE.findall(first):
+            # one row may document several fields: "a / b", "a, b"
+            for piece in re.split(r"[/,]", token):
+                piece = piece.strip()
+                if piece and _PATH_RE.match(piece):
+                    current.append(piece)
+    return sections
+
+
+def key_paths(obj, prefix=""):
+    """Every dotted key path in a JSON object, intermediate nodes
+    included (lists are leaves)."""
+    paths = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{prefix}.{k}" if prefix else str(k)
+            paths.append(p)
+            paths.extend(key_paths(v, p))
+    return paths
+
+
+def matches(pattern, paths):
+    return any(fnmatch.fnmatchcase(p, pattern) for p in paths)
+
+
+def main() -> int:
+    sections = doc_sections(DOC.read_text())
+    problems = []
+    artifacts = sorted(ROOT.glob("BENCH_*.json"))
+    if not artifacts:
+        problems.append("no BENCH_*.json artifacts found at repo root")
+    for art in artifacts:
+        name = art.name
+        if name not in sections:
+            problems.append(f"{name}: no `## {name}` section in "
+                            f"docs/benchmarks.md")
+            continue
+        if not sections[name]:
+            problems.append(f"{name}: doc section documents no fields")
+            continue
+        try:
+            data = json.loads(art.read_text())
+        except ValueError as e:
+            problems.append(f"{name}: unparseable JSON ({e})")
+            continue
+        paths = key_paths(data)
+        for pattern in sections[name]:
+            if not matches(pattern, paths):
+                problems.append(
+                    f"{name}: documented field `{pattern}` matches "
+                    f"nothing in the artifact")
+    for sec in sections:
+        if not (ROOT / sec).exists():
+            problems.append(f"docs/benchmarks.md documents {sec} but no "
+                            f"such artifact is committed")
+    for p in problems:
+        print(f"DRIFT: {p}", file=sys.stderr)
+    if not problems:
+        print(f"check_bench: {len(artifacts)} artifacts match "
+              f"docs/benchmarks.md")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""Measure line coverage of src/repro under the test suite — stdlib only.
+
+The container ships neither pytest-cov nor coverage.py, so this uses
+`sys.settrace` scoped to repro frames: the global trace function returns
+None for any frame whose code lives outside ``src/repro`` (no line-event
+cost there — jax/XLA and test files run untraced), and records
+``(file, line)`` hits inside it.  Executable lines come from compiling
+each source file and walking its code objects' ``co_lines()`` tables, the
+same basis coverage.py uses.
+
+    python scripts/measure_coverage.py [pytest args...]
+    python scripts/measure_coverage.py --fail-under 75 -x -q
+
+Writes per-file and total percentages to stdout and the JSON summary to
+``results/coverage.json``.  The measured total is the number the ci.sh
+``--cov-fail-under`` ratchet is set from.
+"""
+import json
+import pathlib
+import sys
+import threading
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src" / "repro")
+
+
+def executable_lines(path: pathlib.Path):
+    """Line numbers the compiler would emit code for in one source file."""
+    try:
+        code = compile(path.read_text(), str(path), "exec")
+    except SyntaxError:
+        return set()
+    lines = set()
+    stack = [code]
+    while stack:
+        co = stack.pop()
+        for _, _, line in co.co_lines():
+            if line is not None:
+                lines.add(line)
+        for const in co.co_consts:
+            if hasattr(const, "co_lines"):
+                stack.append(const)
+    return lines
+
+
+class LineCollector:
+    def __init__(self):
+        self.hits = {}                      # filename -> set of lines
+
+    def _local(self, frame, event, arg):
+        if event == "line":
+            self.hits[frame.f_code.co_filename].add(frame.f_lineno)
+        return self._local
+
+    def global_trace(self, frame, event, arg):
+        if event != "call":
+            return None
+        fname = frame.f_code.co_filename
+        if not fname.startswith(SRC):
+            return None                     # untraced: no line-event cost
+        if fname not in self.hits:
+            self.hits[fname] = set()
+        return self._local
+
+    def install(self):
+        sys.settrace(self.global_trace)
+        threading.settrace(self.global_trace)
+
+    def uninstall(self):
+        sys.settrace(None)
+        threading.settrace(None)
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    fail_under = None
+    if "--fail-under" in args:
+        i = args.index("--fail-under")
+        fail_under = float(args[i + 1])
+        del args[i:i + 2]
+    pytest_args = args or ["-x", "-q"]
+
+    import pytest
+    collector = LineCollector()
+    collector.install()
+    try:
+        rc = pytest.main(pytest_args)
+    finally:
+        collector.uninstall()
+    if rc != 0:
+        print(f"pytest exited {rc}; coverage not ratcheted", file=sys.stderr)
+        return int(rc)
+
+    per_file = {}
+    total_exec = total_hit = 0
+    for path in sorted(pathlib.Path(SRC).rglob("*.py")):
+        exe = executable_lines(path)
+        if not exe:
+            continue
+        hit = collector.hits.get(str(path), set()) & exe
+        rel = str(path.relative_to(ROOT))
+        per_file[rel] = {"lines": len(exe), "covered": len(hit),
+                         "pct": round(100.0 * len(hit) / len(exe), 1)}
+        total_exec += len(exe)
+        total_hit += len(hit)
+
+    total_pct = 100.0 * total_hit / max(total_exec, 1)
+    width = max(len(f) for f in per_file) if per_file else 10
+    for rel, row in sorted(per_file.items(), key=lambda kv: kv[1]["pct"]):
+        print(f"{rel:<{width}}  {row['covered']:>5}/{row['lines']:<5} "
+              f"{row['pct']:>6.1f}%")
+    print(f"{'TOTAL':<{width}}  {total_hit:>5}/{total_exec:<5} "
+          f"{total_pct:>6.1f}%")
+
+    out = ROOT / "results" / "coverage.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps({
+        "total_pct": round(total_pct, 2),
+        "lines": total_exec, "covered": total_hit,
+        "files": per_file,
+    }, indent=1) + "\n")
+    print(f"wrote {out}")
+
+    if fail_under is not None and total_pct < fail_under:
+        print(f"FAIL: coverage {total_pct:.1f}% < floor {fail_under}%",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,9 @@
-"""Render results/dryrun.json into the EXPERIMENTS.md tables."""
+"""Render results/dryrun.json into the EXPERIMENTS.md tables, or a
+`MetricsRegistry.dump()` flat metrics file into a readable table:
+
+    python scripts/render_results.py [tag]          # dry-run tables
+    python scripts/render_results.py metrics <file> # telemetry dump
+"""
 import json
 import pathlib
 import sys
@@ -16,7 +21,30 @@ def fmt_bytes(b):
     return f"{b:.2f}PiB"
 
 
-def main(tag="baseline"):
+def render_metrics(path):
+    """Render one flat `MetricsRegistry.dump()` JSON (the exporter's
+    ``name{label=value,...}: value`` keys) grouped by subsystem prefix.
+    Histogram summaries and Series marker counts render as compact
+    ``k=v`` strings."""
+    data = json.loads(pathlib.Path(path).read_text())
+    groups = {}
+    for key, val in sorted(data.items()):
+        prefix = key.split(".", 1)[0] if "." in key else "(other)"
+        groups.setdefault(prefix, []).append((key, val))
+    for prefix, rows in groups.items():
+        print(f"\n### {prefix}\n")
+        print("| metric | value |")
+        print("|---|---|")
+        for key, val in rows:
+            if isinstance(val, dict):
+                val = " ".join(f"{k}={v}" for k, v in val.items())
+            print(f"| `{key}` | {val} |")
+
+
+def main(tag="baseline", *rest):
+    if tag == "metrics":
+        render_metrics(rest[0])
+        return
     data = json.loads((RESULTS / "dryrun.json").read_text())
     rows = [(k, v) for k, v in sorted(data.items())
             if k.startswith(tag + "/") and v.get("ok")]

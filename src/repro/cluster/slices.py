@@ -346,6 +346,7 @@ class Slice:
         self._mesh = mesh
         self._sessions: List[SliceSession] = []
         self.status = "active"              # "active" | "lost" | "freed"
+        self._obs_span = None               # lifecycle span (tracing only)
         self.events: List[SliceEvent] = [SliceEvent(
             "allocate", f"{job.dims_chips} twisted={job.twisted} "
                         f"blocks={job.blocks}")]
@@ -439,7 +440,8 @@ class Slice:
         from repro.train.trainer import Trainer
         trainer = Trainer(run, self.mesh, ckpt_dir=ckpt_dir,
                           ckpt_every=ckpt_every, accum_steps=accum_steps,
-                          slice_dims=self.dims)
+                          slice_dims=self.dims, obs=self._sc.obs,
+                          obs_labels={"job": self.job_id})
         session = TrainSession(self, trainer)
         if num_steps is not None:
             session.run(num_steps, fail_at=fail_at, log_every=log_every)
@@ -451,7 +453,8 @@ class Slice:
         """Open a serving session on this slice."""
         self._check_active()
         engine = ServeEngine(model_cfg, params, spec or SliceSpec(),
-                             ctx=ctx or LOCAL)
+                             ctx=ctx or LOCAL, obs=self._sc.obs,
+                             obs_labels={"job": self.job_id})
         return ServeSession(self, engine)
 
     def dryrun(self, profile: ModelProfile,
@@ -566,6 +569,7 @@ class Slice:
 
     def _notify(self, ev: SliceEvent) -> None:
         self.events.append(ev)
+        self._sc._obs_slice_event(self, ev)
         for s in list(self._sessions):
             s._on_event(ev)
 

@@ -20,11 +20,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from repro.cluster.slices import Slice, SliceEvent
 from repro.core.costmodel import CollectiveCostModel, HardwareParams, TPU_V4
 from repro.core.goodput import goodput_ocs, goodput_static
 from repro.core.scheduler import SliceScheduler
 from repro.core.topology import geometries_for, is_twistable
+from repro.obs import Telemetry
 
 Geometry = Union[int, Tuple[int, int, int]]
 
@@ -69,7 +72,8 @@ class Supercomputer:
     """Facade over one OCS-reconfigurable machine (default: 4096 chips)."""
 
     def __init__(self, num_blocks: int = 64, *,
-                 hw: HardwareParams = TPU_V4, contiguous: bool = False):
+                 hw: HardwareParams = TPU_V4, contiguous: bool = False,
+                 obs: Optional[Telemetry] = None):
         self.scheduler = _NotifyingScheduler(
             num_blocks, contiguous=contiguous, on_failure=self._on_failure)
         self.hw = hw
@@ -78,6 +82,10 @@ class Supercomputer:
         self.queue: List[JobTicket] = []
         self._next_ticket = 0
         self._subscribers: List[Callable[[Slice, SliceEvent], None]] = []
+        # machine telemetry: a private wall-clock Telemetry unless the
+        # caller shares one (the fleet layer injects a virtual-clock handle
+        # so machine and fleet events land on one timeline)
+        self.obs = obs if obs is not None else Telemetry()
 
     @property
     def fabric(self):
@@ -153,6 +161,17 @@ class Supercomputer:
             return None
         sl = Slice(self, job, mesh=mesh)
         self.slices[job.job_id] = sl
+        obs = self.obs
+        obs.metrics.counter("machine.allocations").inc()
+        obs.event("slice.allocate", cat="slice",
+                  track=f"slice:job{job.job_id}",
+                  dims=dims, blocks=list(job.blocks))
+        if obs.tracer.enabled:
+            # slice lifecycle span: allocate -> free/lost (ended by
+            # _obs_slice_event); long-lived, so begin/end not a `with`
+            sl._obs_span = obs.tracer.begin(
+                "slice.lifetime", cat="slice",
+                track=f"slice:job{job.job_id}", dims=str(dims))
         return sl
 
     def request_preemption(self, geometry: Geometry, priority: int, *,
@@ -204,6 +223,27 @@ class Supercomputer:
         for fn in list(self._subscribers):
             fn(sl, ev)
 
+    def _obs_slice_event(self, sl: Slice, ev: SliceEvent) -> None:
+        """Telemetry for every post-allocation `SliceEvent` (called from
+        `Slice._notify`): one instant event on the slice's lane, labeled
+        counters, downtime histograms, the lifecycle span end on
+        free/lost, and a flight-recorder postmortem on lost/preempt."""
+        obs = self.obs
+        track = f"slice:job{sl.job_id}"
+        obs.metrics.counter("machine.slice_events", kind=ev.kind).inc()
+        if ev.downtime_s > 0 and np.isfinite(ev.downtime_s):
+            obs.metrics.histogram("machine.reconfig_downtime_s").observe(
+                ev.downtime_s)
+        obs.event(f"slice.{ev.kind}", cat="slice", track=track,
+                  detail=ev.detail, circuits_moved=ev.circuits_moved,
+                  downtime_s=ev.downtime_s)
+        if ev.kind in ("lost", "free") and sl._obs_span is not None:
+            obs.tracer.end(sl._obs_span)
+            sl._obs_span = None
+        if ev.kind in ("lost", "preempt"):
+            obs.postmortem(f"slice_{ev.kind}", job_id=sl.job_id,
+                           detail=ev.detail)
+
     def _release(self, sl: Slice) -> None:
         self.scheduler.release(sl.job_id)
         self.slices.pop(sl.job_id, None)
@@ -222,11 +262,15 @@ class Supercomputer:
         """Fail a block machine-wide; the owning slice (if any) is re-routed
         onto a spare or, with no spares, marked lost — and every live session
         on it is notified.  Returns the scheduler's (job_id, moved, secs)."""
+        self.obs.metrics.counter("machine.block_failures").inc()
+        self.obs.event("machine.fail_block", cat="failure", block=block)
         return self.scheduler.fail_block(block)
 
     def repair_block(self, block: int) -> None:
         """Return a failed block to the healthy pool (it rejoins the free
         set unless a slice still maps it)."""
+        self.obs.metrics.counter("machine.block_repairs").inc()
+        self.obs.event("machine.repair_block", cat="failure", block=block)
         self.scheduler.repair_block(block)
 
     def set_block_slowdown(self, block: int, factor: float) -> None:
@@ -234,6 +278,10 @@ class Supercomputer:
         synchronous step (1.0 clears it).  Sessions on slices owning the
         block model their step time off it; the straggler detector is what
         should notice and `Slice.swap_straggler` it away."""
+        self.obs.metrics.gauge("machine.block_slowdown",
+                               block=block).set(factor)
+        self.obs.event("machine.set_slowdown", cat="straggler",
+                       block=block, factor=factor)
         self.scheduler.set_slowdown(block, factor)
 
     def _on_failure(self, block: int, result) -> None:

@@ -29,6 +29,7 @@ import numpy as np
 from repro.cluster.slices import ServeSession, Slice, SliceEvent
 from repro.cluster.straggler import StragglerDetector
 from repro.fleet.traffic import FleetRequest
+from repro.obs import NOOP_TRACER
 
 PROVISIONING = "provisioning"
 ACTIVE = "active"
@@ -45,10 +46,13 @@ class ServeReplica:
     def __init__(self, rep_id: int, slice_: Slice, session: ServeSession, *,
                  now: float, provision_s: float = 0.0,
                  chunk_s: Optional[float] = None,
-                 straggler: Optional[StragglerDetector] = None):
+                 straggler: Optional[StragglerDetector] = None,
+                 tracer=NOOP_TRACER):
         self.rep_id = rep_id
         self.slice = slice_
         self.session = session
+        self.tracer = tracer                # fleet tracer (virtual time)
+        self.track = f"replica:{rep_id}"
         self.state = PROVISIONING if provision_s > 0 else ACTIVE
         self.ready_at = now + provision_s
         self.busy_until = self.ready_at
@@ -173,6 +177,11 @@ class ServeReplica:
         self.busy_until = end
         self.busy_s += lat + stall
         self.chunks_run += 1
+        if self.tracer.enabled:
+            # the chunk's virtual interval, known only after the fact —
+            # the explicit-timestamp form exists for exactly this
+            self.tracer.complete("replica.chunk", now, end, cat="serve",
+                                 track=self.track, stall_s=stall)
         return self._harvest(end)
 
     def _maybe_swap_straggler(self, base_s: float) -> None:
@@ -207,6 +216,11 @@ class ServeReplica:
             if er.done:
                 req.status = "done"
                 req.t_done = t
+                if self.tracer.enabled:
+                    self.tracer.complete(
+                        "req.lifetime", req.t_arrival, t, cat="request",
+                        track=self.track, fid=req.fid,
+                        migrations=req.migrations)
                 finished.append(req)
                 del self._assigned[rid]
         return finished

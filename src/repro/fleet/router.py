@@ -35,6 +35,7 @@ from typing import List, Optional
 
 from repro.fleet.replica import ServeReplica
 from repro.fleet.traffic import FleetRequest
+from repro.obs import Telemetry
 
 POLICIES = ("least_loaded", "least_eta", "round_robin", "prefix_affinity")
 
@@ -56,13 +57,38 @@ class Router:
     TTFT, or `round_robin`), with per-replica queue bounds as the
     backpressure surface."""
 
-    def __init__(self, cfg: Optional[RouterConfig] = None):
+    def __init__(self, cfg: Optional[RouterConfig] = None,
+                 obs: Optional[Telemetry] = None):
         self.cfg = cfg or RouterConfig()
-        self.routed = 0
-        self.rerouted = 0               # migration re-dispatches
-        self.prefix_hits = 0            # routed to a replica holding a
-        self.prefix_misses = 0          # shared prefix / no replica held one
+        # routing counters live in the metrics registry; the old attribute
+        # names (routed/rerouted/prefix_hits/prefix_misses) are property
+        # views below, so existing readers are unchanged
+        self.obs = obs if obs is not None else Telemetry()
+        reg = self.obs.metrics
+        self._c_routed = reg.counter("fleet.routed")
+        self._c_rerouted = reg.counter("fleet.rerouted")
+        self._c_hits = reg.counter("fleet.prefix_lookups", outcome="hit")
+        self._c_misses = reg.counter("fleet.prefix_lookups", outcome="miss")
         self._rr = 0
+
+    @property
+    def routed(self) -> int:
+        return self._c_routed.value
+
+    @property
+    def rerouted(self) -> int:
+        """Migration re-dispatches."""
+        return self._c_rerouted.value
+
+    @property
+    def prefix_hits(self) -> int:
+        """Routed to a replica already holding a shared prefix."""
+        return self._c_hits.value
+
+    @property
+    def prefix_misses(self) -> int:
+        """No replica held any of the request's prefix."""
+        return self._c_misses.value
 
     def eligible(self, replicas: List[ServeReplica]) -> List[ServeReplica]:
         """Replicas that may accept new work (accepting state and below
@@ -88,10 +114,10 @@ class Router:
                               lambda _p: 0)(req.prompt) for r in cands]
             best = max(scores)
             if best > 0:
-                self.prefix_hits += 1
+                self._c_hits.inc()
                 cands = [r for r, s in zip(cands, scores) if s == best]
             else:
-                self.prefix_misses += 1
+                self._c_misses.inc()
         if self.cfg.policy in ("least_eta", "prefix_affinity"):
             # price fresh replicas with the fleet-wide observed chunk cost,
             # not the static prior — otherwise a cold (sample-free) replica
@@ -111,7 +137,12 @@ class Router:
         if chosen is None:
             return None
         chosen.dispatch(req)
-        self.routed += 1
+        self._c_routed.inc()
         if req.migrations:
-            self.rerouted += 1
+            self._c_rerouted.inc()
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.event("req.route", cat="request",
+                     track=f"replica:{chosen.rep_id}", t=now,
+                     fid=req.fid, migrations=req.migrations)
         return chosen

@@ -39,6 +39,7 @@ from repro.fleet.replica import (ACTIVE, DEAD, DRAINING, FREED,
                                  PROVISIONING, ServeReplica)
 from repro.fleet.router import Router, RouterConfig
 from repro.fleet.traffic import FleetRequest, FleetTrace
+from repro.obs import Telemetry, VirtualClock
 from repro.serve.engine import ServeEngine, SliceSpec, _pct
 
 Geometry = Union[int, Tuple[int, int, int]]
@@ -52,6 +53,7 @@ class FleetReport:
     offered: int
     completed: int
     dropped: int
+    drops_by_reason: Dict[str, int]  # "wait_queue_full" / "stranded"
     migrated: int                   # requests that survived a replica death
     tokens_served: int
     tokens_offered: int
@@ -113,7 +115,8 @@ class FleetService:
                  ttft_window_s: float = 2.0,
                  priority: int = 1,
                  preempt_on_allocate: bool = False,
-                 straggler: Optional[StragglerConfig] = None):
+                 straggler: Optional[StragglerConfig] = None,
+                 obs: Optional[Telemetry] = None):
         assert model_cfg.family != "audio", \
             "fleet serving rides the fast path; the whisper enc-dec " \
             "family has no per-slot cache insert yet"
@@ -122,7 +125,17 @@ class FleetService:
         self.params = params
         self.spec = spec or SliceSpec()
         self.geometry = geometry
-        self.router = Router(router)
+        # telemetry: share the machine's handle by default, so machine and
+        # fleet events land on one timeline; when its clock is a
+        # VirtualClock, the event loop advances it in step with `self.now`
+        # (fleet traces read in virtual seconds)
+        self.obs = obs if obs is not None else sc.obs
+        self._vclock = (self.obs.clock
+                        if isinstance(self.obs.clock, VirtualClock) else None)
+        # service-local drop breakdown (the registry counters are shared
+        # across services on one Telemetry; the report stays per-service)
+        self.drops_by_reason: Dict[str, int] = {}
+        self.router = Router(router, obs=self.obs)
         self.autoscaler = (Autoscaler(autoscale, forecast=forecast)
                            if autoscale else None)
         self.chunk_s: Optional[float] = (
@@ -175,6 +188,17 @@ class FleetService:
     def _log(self, msg: str) -> None:
         self.log.append(f"[t={self.now:8.3f}s] {msg}")
 
+    def _drop(self, reason: str, n: int = 1, **detail) -> None:
+        """Account one (or n) dropped request(s): labeled counter, a
+        flight-recorder event, and a postmortem snapshot of the telemetry
+        leading up to the drop (the drop-reporting trigger)."""
+        self.drops_by_reason[reason] = self.drops_by_reason.get(reason, 0) + n
+        self.obs.metrics.counter("fleet.drops", reason=reason).inc(n)
+        self.obs.event("req.drop", cat="drop", track="router", t=self.now,
+                       reason=reason, n=n, **detail)
+        self.obs.postmortem("request_drop", t=self.now,
+                            drop_reason=reason, n=n, **detail)
+
     def _scale_up(self, now: float, *,
                   provision_s: Optional[float] = None
                   ) -> Optional[ServeReplica]:
@@ -184,6 +208,9 @@ class FleetService:
             if r.state == DRAINING:
                 r.undrain()
                 self._log(f"scale-up: undrained replica {r.rep_id}")
+                self.obs.event("fleet.scale_up", cat="autoscaler",
+                               track="autoscaler", t=now,
+                               rep_id=r.rep_id, undrained=True)
                 return r
         sl = self.sc.allocate(self.geometry, required=False,
                               priority=self.priority,
@@ -200,18 +227,23 @@ class FleetService:
                if self.straggler_cfg else None)
         rep = ServeReplica(self._next_rep, sl, session, now=now,
                            provision_s=provision_s, chunk_s=self.chunk_s,
-                           straggler=det)
+                           straggler=det, tracer=self.obs.tracer)
         self._next_rep += 1
         self.replicas.append(rep)
         self._by_job[sl.job_id] = rep
         self._log(f"scale-up: replica {rep.rep_id} on job{sl.job_id} "
                   f"blocks={sl.blocks} (ready t+{provision_s:.2f}s)")
+        self.obs.event("fleet.scale_up", cat="autoscaler", track="autoscaler",
+                       t=now, rep_id=rep.rep_id, job_id=sl.job_id)
         return rep
 
     def _scale_down(self, victim: ServeReplica) -> None:
         victim.drain()
         self._log(f"scale-down: draining replica {victim.rep_id} "
                   f"(depth={victim.depth})")
+        self.obs.event("fleet.scale_down", cat="autoscaler",
+                       track="autoscaler", t=self.now,
+                       rep_id=victim.rep_id, depth=victim.depth)
 
     def _free_drained(self) -> None:
         for r in self.replicas:
@@ -259,6 +291,10 @@ class FleetService:
             orphans = rep.evacuate()
             self._log(f"replica {rep.rep_id} LOST ({ev.detail}); "
                       f"re-routing {len(orphans)} in-flight requests")
+            self.obs.metrics.counter("fleet.evacuated").inc(len(orphans))
+            self.obs.event("fleet.evacuate", cat="failure",
+                           track=f"replica:{rep.rep_id}", t=self.now,
+                           rep_id=rep.rep_id, orphans=len(orphans))
             # orphans jump the wait queue: they have already waited once
             for req in reversed(orphans):
                 self.wait.appendleft(req)
@@ -304,6 +340,7 @@ class FleetService:
         else:
             req.status = "dropped"
             self._log(f"DROP req{req.fid} (wait queue full)")
+            self._drop("wait_queue_full", fid=req.fid)
 
     def _flush_wait(self) -> None:
         while self.wait:
@@ -346,8 +383,14 @@ class FleetService:
             self.now, self.replicas, len(self.wait),
             self._window_p95_ttft(), capacity_rps=self.capacity_rps())
         if action == "up":
+            prev_pred = self.autoscaler.predictive_ups
             if self._scale_up(self.now) is not None:
                 self.autoscaler.record("up", self.now)
+                if self.autoscaler.predictive_ups > prev_pred:
+                    # forecaster-fired pre-provision: mark it on the trace
+                    # so a replay can tell predictive ups from reactive
+                    self.obs.event("fleet.predictive_up", cat="autoscaler",
+                                   track="autoscaler", t=self.now)
         elif action == "down":
             self._scale_down(victim)
             self.autoscaler.record("down", self.now)
@@ -454,6 +497,8 @@ class FleetService:
                 if steady:
                     break
                 self.now = max(self.now, next_tick)
+                if self._vclock is not None:
+                    self._vclock.advance(self.now)
                 self._tick_autoscaler()
                 next_tick = self.now + tick
                 continue
@@ -507,8 +552,12 @@ class FleetService:
                     req.status = "dropped"
                 self._log(f"no capacity and no path to any: dropped "
                           f"{len(stranded) + n_unmat} stranded requests")
+                if stranded or n_unmat:
+                    self._drop("stranded", n=len(stranded) + n_unmat)
                 break
             self.now = max(self.now, min(cands))
+            if self._vclock is not None:
+                self._vclock.advance(self.now)
             if on_advance is not None:
                 on_advance(self.now)
 
@@ -557,6 +606,10 @@ class FleetService:
                     req = arrivals[ai]
                 if self.autoscaler is not None:
                     self.autoscaler.observe_arrival(req.t_arrival)
+                tr = self.obs.tracer
+                if tr.enabled:
+                    tr.event("req.arrival", cat="request", track="router",
+                             t=req.t_arrival, fid=req.fid)
                 self._admit_or_wait(req)
                 ai += 1
             # -- autoscaler tick ---------------------------------------------
@@ -612,6 +665,7 @@ class FleetService:
             offered=offered_n,
             completed=len(done),
             dropped=dropped_n,
+            drops_by_reason=dict(self.drops_by_reason),
             migrated=sum(1 for r in reqs if r.migrations > 0),
             tokens_served=tokens,
             tokens_offered=offered_tok,

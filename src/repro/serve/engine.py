@@ -46,6 +46,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.models import quant as QUANT
+from repro.obs import Telemetry
 from repro.parallel.context import LOCAL, ParallelContext, activate
 from repro.serve.kvpool import KVPool
 
@@ -238,7 +239,9 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params,
                  spec: Optional[SliceSpec] = None, *,
-                 ctx: ParallelContext = LOCAL):
+                 ctx: ParallelContext = LOCAL,
+                 obs: Optional[Telemetry] = None,
+                 obs_labels: Optional[Dict[str, Any]] = None):
         spec = spec or SliceSpec()
         self.cfg = cfg
         if spec.quant == "int8":
@@ -274,12 +277,21 @@ class ServeEngine:
         self._pooled = self._fast and spec.kv_block > 0
         # prefill-cost proxy (dispatch width x batch rows, summed over
         # prefill dispatches) + prefix-sharing counters — the kv-prefix
-        # benchmark compares these across pooled/legacy arms
-        self.prefill_flops_proxy = 0
-        self.kv_prompt_tokens = 0
-        self.kv_shared_tokens = 0
-        self.kv_migrated_shared_blocks = 0
-        self.kv_migrated_suffix_blocks = 0
+        # benchmark compares these across pooled/legacy arms.  They live in
+        # the metrics registry (labeled, so a shared fleet-wide Telemetry
+        # keeps engines apart); the old attribute names stay as property
+        # views below.
+        self.obs = obs if obs is not None else Telemetry()
+        labels = dict(obs_labels or {})
+        reg = self.obs.metrics
+        self._c_prefill = reg.counter("serve.prefill_flops_proxy", **labels)
+        self._c_kv_prompt = reg.counter("serve.kv_prompt_tokens", **labels)
+        self._c_kv_shared = reg.counter("serve.kv_shared_tokens", **labels)
+        self._c_mig_shared = reg.counter(
+            "serve.kv_migrated_shared_blocks", **labels)
+        self._c_mig_suffix = reg.counter(
+            "serve.kv_migrated_suffix_blocks", **labels)
+        self._h_chunk = reg.histogram("serve.chunk_s", **labels)
 
         if self._pooled:
             assert cfg.family == "dense", \
@@ -355,7 +367,7 @@ class ServeEngine:
             prompts[row, -len(seq):] = seq
         rids = np.zeros((self.slots,), np.int32)
         rids[:n] = [r.rid for r in admitted]
-        self.prefill_flops_proxy += self.prompt_len * self.slots
+        self._c_prefill.inc(self.prompt_len * self.slots)
         batch = {"tokens": jnp.asarray(prompts),
                  **self._extra_inputs(self.slots)}
         nxt, self.cache, self.seq_lens, self.last_tokens, self.sample_salt = \
@@ -401,8 +413,8 @@ class ServeEngine:
             table, matched = self.kvpool.admit(
                 slot, seq, share=self.spec.kv_share)
             self._tables_np[slot] = table
-            self.kv_prompt_tokens += len(seq)
-            self.kv_shared_tokens += matched * bs
+            self._c_kv_prompt.inc(len(seq))
+            self._c_kv_shared.inc(matched * bs)
             rows.append((slot, r, matched * bs, seq))
         self.tables = jnp.asarray(self._tables_np)
         Tc = self._suffix_len
@@ -426,7 +438,7 @@ class ServeEngine:
                 if v:
                     tok[slot, :v] = seq[s0:s0 + v]
                     commit[slot] = s0 + v == len(seq)
-            self.prefill_flops_proxy += Tc * self.slots
+            self._c_prefill.inc(Tc * self.slots)
             nxt, self.cache, self.seq_lens, self.last_tokens, \
                 self.sample_salt = self._admit_fn(
                     self.params, self.cache, jnp.asarray(tok),
@@ -529,8 +541,34 @@ class ServeEngine:
         chunk — the router reads this per routing decision."""
         return default if self._chunk_ema is None else self._chunk_ema
 
+    # -- telemetry views -------------------------------------------------------
+    # The pre-registry counter attributes, now thin read-only views over the
+    # registry instruments (same names, same values — existing readers and
+    # benchmark arms compare unchanged).
+
+    @property
+    def prefill_flops_proxy(self) -> int:
+        return self._c_prefill.value
+
+    @property
+    def kv_prompt_tokens(self) -> int:
+        return self._c_kv_prompt.value
+
+    @property
+    def kv_shared_tokens(self) -> int:
+        return self._c_kv_shared.value
+
+    @property
+    def kv_migrated_shared_blocks(self) -> int:
+        return self._c_mig_shared.value
+
+    @property
+    def kv_migrated_suffix_blocks(self) -> int:
+        return self._c_mig_suffix.value
+
     def _record_latency(self, lat: float) -> None:
         self.chunk_lat_s.append(lat)
+        self._h_chunk.observe(lat)
         # `run` resets the list per batch, but a fleet replica steps chunk
         # by chunk for the service's lifetime — bound the history so a
         # long-lived engine doesn't leak (EMA carries the tail)
@@ -592,8 +630,8 @@ class ServeEngine:
             if self._pooled and self.kvpool.table(i) is not None:
                 if r is not None and not r.done:
                     shared = self.kvpool.shared_blocks(i)
-                    self.kv_migrated_shared_blocks += shared
-                    self.kv_migrated_suffix_blocks += self._nb - shared
+                    self._c_mig_shared.inc(shared)
+                    self._c_mig_suffix.inc(self._nb - shared)
                 self.kvpool.release(i)
                 self._tables_np[i] = self.kvpool.num_blocks
             if r is not None and not r.done:

@@ -33,6 +33,7 @@ from repro.data.synthetic import Dataset
 from repro.launch import steps as STEPS
 from repro.launch.mesh import mesh_scope
 from repro.models import api
+from repro.obs import Telemetry
 from repro.optim import adam as OPT
 from repro.parallel import sharding as SH
 from repro.train import checkpoint as CKPT
@@ -64,7 +65,9 @@ class Trainer:
 
     def __init__(self, run: RunConfig, mesh, *, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 50, accum_steps: Optional[int] = None,
-                 slice_dims: Optional[tuple] = None):
+                 slice_dims: Optional[tuple] = None,
+                 obs: Optional[Telemetry] = None,
+                 obs_labels: Optional[Dict[str, Any]] = None):
         self.run = run
         self.mesh = mesh
         self.ckpt_dir = ckpt_dir
@@ -74,7 +77,13 @@ class Trainer:
         self.preempted = False
         self.ctx = SH.make_context(mesh, run.parallel)
         self.dataset = Dataset(run.model, run.shape, seed=run.seed)
-        self.metrics_log: List[Dict[str, float]] = []
+        # the per-step metric log lives in the registry as a Series;
+        # `metrics_log` below is a view of its samples, so the attribute
+        # surface (and everything reading it) is unchanged
+        self.obs = obs if obs is not None else Telemetry()
+        self._obs_labels = dict(obs_labels or {})
+        self._series = self.obs.metrics.series("train.metrics",
+                                               **self._obs_labels)
 
         with mesh_scope(mesh):
             # ONE step builder for every entry point (shapes_and_shardings
@@ -90,6 +99,12 @@ class Trainer:
             self.train_step = jax.jit(step, in_shardings=self._in_sh,
                                       out_shardings=self._out_sh,
                                       donate_argnums=(0, 1))
+
+    @property
+    def metrics_log(self) -> List[Dict[str, float]]:
+        """Per-step metric dicts (a view of the registry Series' samples —
+        the list object is live, appends land in the registry)."""
+        return self._series.samples
 
     def _named(self, s):
         if s is None:
@@ -207,7 +222,9 @@ class Trainer:
                 self.save(state)
                 self.preempt_requested = False
                 self.preempted = True
-                self.metrics_log.append({"step": step, "preempt": 1.0})
+                self._series.append({"step": step, "preempt": 1.0})
+                self.obs.event("train.preempt", cat="train", track="train",
+                               step=step, **self._obs_labels)
                 return state
             if fail_at is not None and step == fail_at:
                 # -- simulated block failure (TrainSession.run drives this)
@@ -219,14 +236,18 @@ class Trainer:
                 if restored is not None:
                     state = restored
                     step = state.step
-                    self.metrics_log.append(
-                        {"step": step, "event": 1.0})
+                    self._series.append({"step": step, "event": 1.0})
+                    self.obs.event("train.restore", cat="train",
+                                   track="train", step=step,
+                                   **self._obs_labels)
                     continue
             t_step = time.perf_counter()
-            batch = self._put_batch(step)
-            with mesh_scope(self.mesh):
-                params, opt, metrics = self.train_step(
-                    state.params, state.opt_state, batch)
+            with self.obs.span("train.step", cat="train", track="train",
+                               step=step):
+                batch = self._put_batch(step)
+                with mesh_scope(self.mesh):
+                    params, opt, metrics = self.train_step(
+                        state.params, state.opt_state, batch)
             state = TrainerState(params, opt, step + 1)
             step += 1
             if on_step is not None:
@@ -234,7 +255,14 @@ class Trainer:
             if step % log_every == 0 or step == num_steps:
                 m = {k: float(v) for k, v in metrics.items()}
                 m.update(step=step, wall_s=round(time.time() - t0, 2))
-                self.metrics_log.append(m)
+                self._series.append(m)
+                # wire accounting rides the registry too: last-observed
+                # per-step payload bytes from the compressed collectives
+                for k in ("wire_bytes", "wire_bytes_full",
+                          "wire_overhead_bytes"):
+                    if k in m:
+                        self.obs.metrics.gauge(
+                            f"train.{k}", **self._obs_labels).set(m[k])
             if self.ckpt_dir and step % self.ckpt_every == 0:
                 self.save(state)
         if self.preempt_requested:
@@ -245,7 +273,9 @@ class Trainer:
             self.save(state)
             self.preempt_requested = False
             self.preempted = True
-            self.metrics_log.append({"step": step, "preempt": 1.0})
+            self._series.append({"step": step, "preempt": 1.0})
+            self.obs.event("train.preempt", cat="train", track="train",
+                           step=step, **self._obs_labels)
             return state
         if self.ckpt_dir:
             self.save(state)

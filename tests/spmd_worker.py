@@ -7,6 +7,10 @@ Exits 0 iff every check passes; prints one line per check.
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=8")
+# The 8 fake devices only exist on the host platform; pin it so jax never
+# probes an ambient TPU runtime (the probe can stall for minutes when the
+# caller's env, unlike ci.sh's, doesn't set this).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import sys
 
