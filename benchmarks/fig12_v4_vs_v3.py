@@ -10,28 +10,18 @@ Model: per-app roofline time/flop = max(1/peak, 1/(OI × bw_eff)) with
 operational intensities in the ranges Fig 16 plots; CMEM (128 MiB @ ~5x HBM
 bandwidth, v4 only) raises bw_eff for apps whose working set fits —
 reproducing both the 1.5-2.0x band and the RNN1 outlier.
+
+The app mix and roofline live in `repro.core.costmodel` (`FIG12_APPS`,
+`app_time_per_flop`) — the SAME model that seeds the generation registry's
+perf factors (`generation_speedup`), so the het-fleet placer's economics
+and this figure cannot drift apart (pinned by tests/test_hetfleet.py).
 """
 import time
 
-from repro.core.costmodel import TPU_V3, TPU_V4
+from repro.core.costmodel import (CMEM_BW_MULT, FIG12_APPS, TPU_V3, TPU_V4,
+                                  app_time_per_flop)
 
-CMEM_BW_MULT = 3.0          # CMEM vs HBM effective bandwidth
-APPS = [
-    # name, operational intensity (flops/byte), CMEM-resident fraction
-    ("CNN0", 250.0, 0.1),
-    ("CNN1", 150.0, 0.1),
-    ("BERT0", 120.0, 0.15),
-    ("BERT1", 100.0, 0.15),
-    ("RNN0", 20.0, 0.3),
-    ("RNN1", 12.0, 0.85),    # small weights/batch: CMEM-resident
-]
-
-
-def _time_per_flop(hw, oi, cmem_frac=0.0, cmem=False):
-    bw = hw.hbm_bw
-    if cmem and hw.cmem_bytes > 0:
-        bw = bw * (1.0 - cmem_frac) + bw * CMEM_BW_MULT * cmem_frac
-    return max(1.0 / hw.peak_flops_bf16, 1.0 / (oi * bw))
+APPS = list(FIG12_APPS)      # (name, operational intensity, CMEM fraction)
 
 
 def run():
@@ -39,9 +29,9 @@ def run():
     t0 = time.perf_counter()
     in_band = 0
     for name, oi, cf in APPS:
-        t3 = _time_per_flop(TPU_V3, oi)
-        t4 = _time_per_flop(TPU_V4, oi, cf, cmem=True)
-        t4_nocmem = _time_per_flop(TPU_V4, oi)
+        t3 = app_time_per_flop(TPU_V3, oi)
+        t4 = app_time_per_flop(TPU_V4, oi, cf, cmem=True)
+        t4_nocmem = app_time_per_flop(TPU_V4, oi)
         speedup = t3 / t4
         cmem_gain = t4_nocmem / t4
         band = "1.5-2.0x" if name != "RNN1" else "3.3x"

@@ -1,0 +1,309 @@
+"""Heterogeneous multi-generation fleet benchmark -> BENCH_hetfleet.json.
+
+The Jouppi et al. retrospective frames Google's ML real estate as a fleet
+of supercomputers *across generations*.  Two arms run the SAME
+three-machine fleet (tpu_v4 + tpu_v3 + a projected tpu_v5p point, each its
+own OCS fabric and failure domain), the same diurnal serving day with
+mid-peak failures, and the same two elastic training tenants (priority
+tiers 1 and 0):
+
+  * **aware** — generation-aware placement: serve replicas land best
+    perf/Watt first (v4, then v5p, v3 last), the ``slo_tiered`` router
+    keeps tight-TTFT traffic on the fastest silicon while batch-tier
+    requests prefer the slower pool, training drains to the best perf/$
+    machine (v3), and a serving burst that cannot place cleanly asks the
+    trainer to *partially shrink* (hand back blocks, keep training on a
+    smaller geometry) instead of a full preempt→resume.
+  * **blind** — the generation-unaware baseline: round-robin placement,
+    plain ``least_eta`` routing, registration-order training placement,
+    and full preemption on pressure.
+
+Replica chunk latency divides by the generation's fig12 perf factor
+(measured by `repro.core.costmodel.generation_speedup` — the same roofline
+as benchmarks/fig12_v4_vs_v3.py), and every replica's allocated lifetime
+is metered in Wh and dollars from the generation cost model.  Gates:
+
+  * fleet perf/Watt goodput (SLO-met tokens per Wh of serving energy) —
+    the aware arm must beat the blind arm;
+  * the aware arm performs >= 1 cooperative partial shrink (NOT a full
+    preempt) and the aware serve replicas span >= 2 machines;
+  * zero dropped requests in both arms (cross-machine migration worked);
+  * a dedicated shrink drill reproduces the uninterrupted loss curve
+    bitwise across a shrink (checkpoint + in-place re-carve, same global
+    batch).
+
+    python benchmarks/het_fleet.py            # full run + gates
+    python benchmarks/het_fleet.py --quick    # CI-sized run + gates
+"""
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+
+import jax
+
+from repro.cluster import (ElasticTrainJob, MachineRegistry,
+                           MixedTenancyDriver, SliceSpec, Supercomputer,
+                           TrainTenantSpec)
+from repro.configs import (OptimizerConfig, ParallelConfig, RunConfig,
+                           ShapeConfig, registry)
+from repro.core.costmodel import GEN_V3, GEN_V4, GEN_V5P
+from repro.fleet import (AutoscalerConfig, FleetService, RouterConfig,
+                         TrafficSpec, generate)
+from repro.models import api
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_hetfleet.json"
+
+ARCH = "olmo-1b"
+# three machines, three generations: v4 is the perf/Watt sweet spot, v3 the
+# cheap perf/$ pool, v5p the fastest silicon
+MACHINE_BLOCKS = {"tpu_v4": 3, "tpu_v3": 3, "tpu_v5p": 2}
+GENS = {"tpu_v4": GEN_V4, "tpu_v3": GEN_V3, "tpu_v5p": GEN_V5P}
+SERVE_GEOMETRY = (4, 4, 4)               # 1 block per replica
+SPEC = SliceSpec(slots=4, max_len=64, prompt_len=16, chunk=8)
+CHUNK_S = 0.15                           # virtual chunk cost on the v4 ref
+WINDOW_S = 0.5
+BASE_STEP_S = 0.4                        # virtual sec/train-step on 1 block
+EXTRA_WINDOWS = 8                        # overnight trough after the day
+TRAIN_STEPS = {True: (60, 30), False: (120, 60)}   # (tier-1, tier-0) targets
+
+
+def _model():
+    cfg = registry.get_reduced(ARCH)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _train_run(seed=0):
+    return RunConfig(
+        model=registry.get_reduced(ARCH),
+        shape=ShapeConfig("hetfleet", "train", 32, 4),
+        parallel=ParallelConfig(remat="none"),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2),
+        seed=seed)
+
+
+def _fleet():
+    """Fresh three-generation fleet (machines hold state; one per arm)."""
+    return MachineRegistry([
+        Supercomputer(MACHINE_BLOCKS[n], generation=GENS[n])
+        for n in ("tpu_v4", "tpu_v3", "tpu_v5p")
+    ])
+
+
+DAY_S = 3.0                              # one diurnal period
+
+
+def _trace(quick: bool):
+    """Diurnal day-curve with interactive (0.5s TTFT) and batch (4s)
+    tiers: the peak wants ~6 one-block replicas — more than v4+v5p hold,
+    so the peak squeezes the training pool.  Quick mode is one day; the
+    full run is TWO days at the same slope (same per-peak pressure, twice
+    the failure drills and trough drains)."""
+    return generate(TrafficSpec(
+        duration_s=DAY_S if quick else 2 * DAY_S, rate_rps=40.0,
+        pattern="diurnal", trough_frac=0.1, diurnal_period_s=DAY_S,
+        new_tokens_choices=(16, 32), new_tokens_weights=(0.5, 0.5),
+        prompt_len_max=8), seed=11)
+
+
+def _plans(quick: bool):
+    """Mid-peak failures across machines: burn the v4 spare (none to begin
+    with — v4 is fully subscribed at peak) then kill the busiest serving
+    block; the slice is LOST and its in-flight requests migrate, possibly
+    to a different machine/generation.  Repairs land before the trough.
+    The full run repeats the drill at the second day's peak."""
+    peaks = [DAY_S / 2.0] if quick else [DAY_S / 2.0, 3.0 * DAY_S / 2.0]
+    fail_plan, repair_plan = [], []
+    for day, peak in enumerate(peaks):
+        fail_plan += [(peak, "spare"), (peak + 0.1, "busiest")]
+        repair_plan += [(peak + 0.9, f"failed:{2 * day}"),
+                        (peak + 1.0, f"failed:{2 * day + 1}")]
+    return fail_plan, repair_plan
+
+
+def _arm(kind: str, cfg, params, quick: bool, d1: str, d2: str):
+    reg = _fleet()
+    autoscale = AutoscalerConfig(
+        min_replicas=1, max_replicas=6, tick_s=0.05, cooldown_s=0.3,
+        scale_up_backlog=3.0, scale_down_backlog=0.5, provision_s=0.1)
+    if kind == "aware":
+        svc = FleetService(reg, cfg, params, SPEC, geometry=SERVE_GEOMETRY,
+                           initial_replicas=1, autoscale=autoscale,
+                           router=RouterConfig(policy="slo_tiered",
+                                               slo_fast_ttft_s=1.0),
+                           timing=CHUNK_S, priority=1,
+                           preempt_on_allocate="shrink",
+                           placement="perf_watt")
+        objective = "perf_dollar"
+    else:
+        svc = FleetService(reg, cfg, params, SPEC, geometry=SERVE_GEOMETRY,
+                           initial_replicas=1, autoscale=autoscale,
+                           router=RouterConfig(policy="least_eta"),
+                           timing=CHUNK_S, priority=1,
+                           preempt_on_allocate=True,
+                           placement="blind")
+        objective = "blind"
+    t1, t0 = TRAIN_STEPS[quick]
+    jobs = [
+        ElasticTrainJob(reg, TrainTenantSpec(
+            run=_train_run(seed=0), target_steps=t1, ckpt_dir=d1,
+            geometries=((4, 4, 12), (4, 4, 8), (4, 4, 4)), priority=0,
+            base_step_s=BASE_STEP_S, name="tier1", objective=objective)),
+        ElasticTrainJob(reg, TrainTenantSpec(
+            run=_train_run(seed=1), target_steps=t0, ckpt_dir=d2,
+            geometries=((4, 4, 8), (4, 4, 4)), priority=-1,
+            base_step_s=BASE_STEP_S, name="tier0", objective=objective)),
+    ]
+    for j in jobs:
+        j.try_start(0.0)        # tier0 may fail to place at t=0 — fine
+    drv = MixedTenancyDriver(svc, jobs, window_s=WINDOW_S,
+                             resume_training=True)
+    fail_plan, repair_plan = _plans(quick)
+    rep = drv.run(_trace(quick), fail_plan=fail_plan,
+                  repair_plan=repair_plan, extra_windows=EXTRA_WINDOWS,
+                  arm=kind)
+    svc.close()
+    return rep
+
+
+def _shrink_bitwise_check(quick: bool):
+    """The partial-shrink contract in isolation: train N steps, force a
+    cooperative shrink to a smaller geometry via `request_capacity`
+    (checkpoint + in-place re-carve, NO preempt), train N more, and compare
+    the per-step loss curve bitwise against an uninterrupted fixed-geometry
+    run at equal global batch."""
+    half = 4 if quick else 6
+    with tempfile.TemporaryDirectory() as d:
+        sc = Supercomputer(num_blocks=8)
+        job = ElasticTrainJob(sc, TrainTenantSpec(
+            run=_train_run(), target_steps=10 * half, ckpt_dir=d,
+            geometries=((4, 4, 32), (4, 4, 16)), priority=0,
+            base_step_s=8.0 / half))
+        assert job.try_start(0.0)
+        job.run_quantum(1.0, 0.0)                       # `half` steps on 8
+        assert sc.request_capacity((4, 4, 16), priority=1), \
+            "trainer must shrink on request"
+        assert job.state == "running" and job.shrinks == 1
+        taken = sc.allocate((4, 4, 16), priority=1, required=True)
+        job.run_quantum(2.0, 1.0)                       # `half` more on 4
+        losses = {int(m["step"]): float(m["loss"])
+                  for m in job.session.metrics_log}
+        shapes = [list(g) for _, g in job.geometry_history if g]
+        taken.free()
+    with tempfile.TemporaryDirectory() as d:
+        sc2 = Supercomputer(num_blocks=8)
+        ref = ElasticTrainJob(sc2, TrainTenantSpec(
+            run=_train_run(), target_steps=10 * half, ckpt_dir=d,
+            geometries=((4, 4, 32),), priority=0,
+            base_step_s=8.0 / half))
+        assert ref.try_start(0.0)
+        ref.run_quantum(2.0, 0.0)                       # 2*`half` straight
+        ref_losses = {int(m["step"]): float(m["loss"])
+                      for m in ref.session.metrics_log}
+    common = sorted(set(losses) & set(ref_losses))
+    assert len(common) >= 2 * half, (len(common), half)
+    diffs = [abs(losses[s] - ref_losses[s]) for s in common]
+    return {
+        "steps": 2 * half,
+        "shrink_at": half,
+        "shapes": shapes,
+        "max_abs_loss_diff": max(diffs),
+        "bitwise_equal": bool(max(diffs) == 0.0),
+    }
+
+
+def run(quick: bool = False):
+    cfg, params = _model()
+    with tempfile.TemporaryDirectory() as a1, \
+            tempfile.TemporaryDirectory() as a2, \
+            tempfile.TemporaryDirectory() as b1, \
+            tempfile.TemporaryDirectory() as b2:
+        aware = _arm("aware", cfg, params, quick, a1, a2)
+        blind = _arm("blind", cfg, params, quick, b1, b2)
+    shrink = _shrink_bitwise_check(quick)
+    pwg_aware = aware.serve["perf_watt_goodput"]
+    pwg_blind = blind.serve["perf_watt_goodput"]
+    gate = {
+        "perf_watt_goodput_aware": pwg_aware,
+        "perf_watt_goodput_blind": pwg_blind,
+        "passed": bool(pwg_aware > pwg_blind),
+    }
+    record = {
+        "arch": ARCH,
+        "machines": {n: {"blocks": MACHINE_BLOCKS[n],
+                         "perf_factor": GENS[n].perf_factor,
+                         "watts_per_chip": GENS[n].watts_per_chip,
+                         "dollars_per_chip_hour":
+                             GENS[n].dollars_per_chip_hour}
+                     for n in MACHINE_BLOCKS},
+        "window_s": WINDOW_S,
+        "virtual_chunk_s": CHUNK_S,
+        "virtual_base_step_s": BASE_STEP_S,
+        "train_target_steps": list(TRAIN_STEPS[quick]),
+        "aware": aware.to_dict(),
+        "blind": blind.to_dict(),
+        "gate": gate,
+        "shrink_drill": shrink,
+    }
+    OUT.write_text(json.dumps(record, indent=2) + "\n")
+    rows = [
+        ("hetfleet_perf_watt", 0.0,
+         f"aware={pwg_aware};blind={pwg_blind};ok={gate['passed']}"),
+        ("hetfleet_placement", 0.0,
+         f"aware_by_machine={aware.serve['replicas_by_machine']};"
+         f"blind_by_machine={blind.serve['replicas_by_machine']}"),
+        ("hetfleet_shrink", 0.0,
+         f"aware_shrinks={aware.train_shrinks};"
+         f"aware_preempts={aware.train_preemptions};"
+         f"blind_preempts={blind.train_preemptions}"),
+        ("hetfleet_economics", 0.0,
+         f"aware_wh={aware.serve['energy_wh']};"
+         f"blind_wh={blind.serve['energy_wh']};"
+         f"aware_tok_per_usd={aware.serve['slo_tokens_per_usd']};"
+         f"blind_tok_per_usd={blind.serve['slo_tokens_per_usd']}"),
+        ("hetfleet_shrink_drill", 0.0,
+         f"max_abs_loss_diff={shrink['max_abs_loss_diff']};"
+         f"bitwise={shrink['bitwise_equal']}"),
+    ]
+    if not gate["passed"]:
+        raise AssertionError(
+            f"hetfleet gate: aware perf/Watt goodput {pwg_aware} must beat "
+            f"blind {pwg_blind}")
+    for arm in (aware, blind):
+        if arm.serve["dropped"] != 0 \
+                or arm.serve["completed"] != arm.serve["offered"]:
+            raise AssertionError(f"{arm.arm} arm lost requests: "
+                                 f"{arm.serve['drops_by_reason']}")
+    if aware.train_shrinks < 1:
+        raise AssertionError(
+            "aware arm must exercise >= 1 cooperative partial shrink; got "
+            f"{aware.train_shrinks}")
+    if len(aware.serve["replicas_by_machine"]) < 2:
+        raise AssertionError(
+            "aware serving must span >= 2 machines: "
+            f"{aware.serve['replicas_by_machine']}")
+    if shrink["max_abs_loss_diff"] > 0.0:
+        raise AssertionError(
+            "loss curve diverged across the partial shrink: max |dloss| = "
+            f"{shrink['max_abs_loss_diff']}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (shorter trace), same gates")
+    args = ap.parse_args()
+    try:
+        for name, us, derived in run(quick=args.quick):
+            print(f"{name},{us:.1f},{derived}")
+    except AssertionError as e:
+        print(f"GATE FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

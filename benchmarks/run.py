@@ -3,8 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``derived`` carries the
 paper-claim comparison (got vs published value + ok flag).
 """
+import os
 import sys
 import traceback
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; the `benchmarks.*` namespace imports below need the root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 BENCHES = [
     "fig4_goodput",
@@ -26,6 +31,8 @@ BENCHES = [
                              # straggler swap -> BENCH_predict.json
     "observability",         # tracing overhead + noninterference + trace
                              # reconstruction -> BENCH_obs.json
+    "het_fleet",             # multi-generation fleet placement + partial
+                             # shrink -> BENCH_hetfleet.json
 ]
 
 

@@ -13,6 +13,7 @@ Everything below this facade (`OCSFabric`, `SliceScheduler`,
 `CollectiveCostModel`, goodput, autotopo, `Trainer`, `ServeEngine`) remains
 importable for tests and benchmarks, but workloads should not need it.
 """
+from repro.cluster.registry import MachineRegistry, slice_key
 from repro.cluster.slices import (BoundCollectives, ServeSession, Slice,
                                   SliceError, SliceEvent, SliceSession,
                                   TrainSession)
@@ -25,8 +26,8 @@ from repro.serve.engine import SliceSpec
 
 __all__ = [
     "BoundCollectives", "CapacityError", "ElasticTrainJob", "JobTicket",
-    "MixedTenancyDriver", "ServeSession", "Slice", "SliceError",
-    "SliceEvent", "SliceSession", "SliceSpec", "StragglerConfig",
-    "StragglerDetector", "Supercomputer", "TenancyReport", "TrainSession",
-    "TrainTenantSpec",
+    "MachineRegistry", "MixedTenancyDriver", "ServeSession", "Slice",
+    "SliceError", "SliceEvent", "SliceSession", "SliceSpec",
+    "StragglerConfig", "StragglerDetector", "Supercomputer",
+    "TenancyReport", "TrainSession", "TrainTenantSpec", "slice_key",
 ]

@@ -40,10 +40,12 @@ if TYPE_CHECKING:                                     # pragma: no cover
 class SliceEvent:
     """One thing that happened to a slice after allocation."""
     kind: str                   # "allocate" | "reconfigure" | "retwist" |
-                                # "straggler" | "preempt" | "lost" | "free"
+                                # "straggler" | "preempt" | "lost" | "free" |
+                                # "shrink_request" | "shrink"
     detail: str
     circuits_moved: int = 0
     downtime_s: float = 0.0
+    blocks_needed: int = 0      # "shrink_request" only: blocks asked back
 
 
 class SliceError(RuntimeError):
@@ -521,6 +523,45 @@ class Slice:
         self._notify(ev)
         self._sc._publish(self, ev)
         return self.status != "active"
+
+    def shrink(self, new_dims: Tuple[int, int, int]) -> SliceEvent:
+        """Hand blocks back WITHOUT vacating: re-carve this slice in place
+        to the strictly-smaller ``new_dims`` (§2.5 partial shrink).  The
+        scheduler keeps the fastest owned blocks, reprograms the OCS
+        circuits to the smaller torus, and the surplus returns to the free
+        pool — one reconfiguration blackout instead of a full
+        preempt→checkpoint→resume cycle.  Sessions opened before the shrink
+        see the ``"shrink"`` event but keep their (now stale) geometry;
+        tenants that care (the elastic trainer) close and reopen their
+        session on the new shape."""
+        self._check_active()
+        dims = tuple(new_dims)
+        released, moved, secs = self._sc.scheduler.shrink(self.job_id, dims)
+        ev = SliceEvent("shrink",
+                        f"-> {dims}, released blocks {released}",
+                        circuits_moved=moved, downtime_s=secs)
+        self._notify(ev)
+        self._sc._publish(self, ev)
+        return ev
+
+    def request_shrink(self, blocks_needed: int,
+                       detail: str = "capacity requested") -> int:
+        """Ask this slice's tenant to hand back ``blocks_needed`` blocks
+        (cooperative, like `request_preempt` — but partial).  A shrink-aware
+        tenant reacts to the ``"shrink_request"`` `SliceEvent` by
+        checkpointing and calling `shrink` to a smaller geometry *during
+        the notification*; a tenant may instead vacate entirely, or ignore
+        the request.  Returns the number of blocks actually freed."""
+        if self.status != "active":
+            return 0
+        before = len(self._job.blocks)
+        ev = SliceEvent("shrink_request", detail,
+                        blocks_needed=blocks_needed)
+        self._notify(ev)
+        self._sc._publish(self, ev)
+        if self.status != "active":
+            return before                   # tenant vacated entirely
+        return before - len(self._job.blocks)
 
     def swap_straggler(self, slow_block: int) -> Optional[SliceEvent]:
         """Replace a slow-but-healthy block with the fastest spare (§2.3).

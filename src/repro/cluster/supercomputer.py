@@ -23,7 +23,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.cluster.slices import Slice, SliceEvent
-from repro.core.costmodel import CollectiveCostModel, HardwareParams, TPU_V4
+from repro.core.costmodel import (GENERATIONS, CollectiveCostModel,
+                                  Generation, HardwareParams, TPU_V4)
 from repro.core.goodput import goodput_ocs, goodput_static
 from repro.core.scheduler import SliceScheduler
 from repro.core.topology import geometries_for, is_twistable
@@ -72,11 +73,22 @@ class Supercomputer:
     """Facade over one OCS-reconfigurable machine (default: 4096 chips)."""
 
     def __init__(self, num_blocks: int = 64, *,
-                 hw: HardwareParams = TPU_V4, contiguous: bool = False,
+                 hw: Optional[HardwareParams] = None,
+                 generation: Optional[Generation] = None,
+                 name: Optional[str] = None,
+                 contiguous: bool = False,
                  obs: Optional[Telemetry] = None):
+        if hw is None:
+            hw = generation.hw if generation is not None else TPU_V4
         self.scheduler = _NotifyingScheduler(
             num_blocks, contiguous=contiguous, on_failure=self._on_failure)
         self.hw = hw
+        # generation economics (perf factor, Watts, $/chip-hour) for the
+        # multi-machine fleet placer; resolved from the hardware preset when
+        # not given, None for hardware outside the registry
+        self.generation = (generation if generation is not None
+                           else GENERATIONS.get(hw.name))
+        self.name = name if name is not None else hw.name
         self.costs = CollectiveCostModel(hw)
         self.slices: Dict[int, Slice] = {}      # job_id -> live Slice
         self.queue: List[JobTicket] = []
@@ -128,7 +140,7 @@ class Supercomputer:
 
     def allocate(self, geometry: Geometry, *, twisted: bool = False,
                  mesh=None, required: bool = True, priority: int = 0,
-                 preempt: bool = False) -> Optional[Slice]:
+                 preempt: Union[bool, str] = False) -> Optional[Slice]:
         """Allocate a slice.
 
         Args:
@@ -140,7 +152,10 @@ class Supercomputer:
             machine cannot place the slice.
           priority: scheduling priority recorded on the job (higher wins).
           preempt: when capacity is short, cooperatively evict strictly
-            lower-priority slices (see `request_preemption`) and retry once.
+            lower-priority slices (see `request_preemption`) and retry
+            once.  The string ``"shrink"`` asks shrink-capable tenants to
+            hand back blocks FIRST (`request_capacity`), falling back to
+            full preemption only when partial shrink cannot free enough.
 
         Returns:
           A live `Slice` handle, or None (``required=False`` only).
@@ -149,7 +164,10 @@ class Supercomputer:
         job = self.scheduler.allocate(dims, twisted=twisted,
                                       priority=priority)
         if job is None and preempt:
-            if self.request_preemption(dims, priority):
+            ok = (self.request_capacity(dims, priority)
+                  if preempt == "shrink"
+                  else self.request_preemption(dims, priority))
+            if ok:
                 job = self.scheduler.allocate(dims, twisted=twisted,
                                               priority=priority)
         if job is None:
@@ -201,6 +219,47 @@ class Supercomputer:
             if len(self.scheduler.free & self.scheduler.healthy) >= need:
                 break
         return len(self.scheduler.free & self.scheduler.healthy) >= need
+
+    def request_capacity(self, geometry: Geometry, priority: int, *,
+                         twisted: bool = False) -> bool:
+        """Free enough healthy blocks for a ``geometry`` request at
+        ``priority``, preferring PARTIAL SHRINK over full preemption.
+
+        Pass 1 walks strictly-lower-priority slices in the same
+        cheapest-first victim order as `preemption_victims` and asks each to
+        `Slice.request_shrink` the remaining deficit — a shrink-aware tenant
+        (the elastic trainer) re-checkpoints onto a smaller geometry and
+        keeps running, handing back only what the request needs.  Only if
+        shrink leaves a deficit does pass 2 fall back to
+        `request_preemption` (full cooperative eviction).  Returns True if
+        enough blocks are free on exit."""
+        dims = self._resolve_geometry(geometry, twisted)
+        need = self.scheduler.blocks_needed(dims)
+
+        def have() -> int:
+            return len(self.scheduler.free & self.scheduler.healthy)
+
+        if have() >= need:
+            return True
+        cands = sorted((j for j in self.scheduler.jobs.values()
+                        if j.priority < priority),
+                       key=lambda j: (j.priority, len(j.blocks), -j.job_id))
+        for job in cands:
+            if have() >= need:
+                break
+            sl = self.slices.get(job.job_id)
+            if sl is None:
+                continue
+            freed = sl.request_shrink(
+                need - have(),
+                f"priority-{priority} {dims} request needs blocks")
+            if freed:
+                self.scheduler.events.append(
+                    f"shrink job{job.job_id} freed {freed} blocks for a "
+                    f"priority-{priority} {dims} request")
+        if have() >= need:
+            return True
+        return self.request_preemption(dims, priority, twisted=twisted)
 
     def subscribe(self, fn: Callable[[Slice, SliceEvent], None]):
         """Register a machine-level observer: ``fn(slice, event)`` fires for

@@ -38,8 +38,9 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Sequence,
-                    Tuple)
+                    Tuple, Union)
 
+from repro.cluster.registry import MachineRegistry
 from repro.cluster.slices import Slice, SliceEvent, TrainSession
 from repro.cluster.supercomputer import Supercomputer
 from repro.configs.base import RunConfig
@@ -54,6 +55,35 @@ PREEMPTED = "preempted"      # evicted; checkpointed and block-less
 DONE = "done"                # reached target_steps
 
 
+def _blocks_needed(dims: Tuple[int, int, int]) -> int:
+    a, b, c = dims
+    return (a // 4) * (b // 4) * (c // 4)
+
+
+def shrink_target(geometries: Sequence[Tuple[int, int, int]],
+                  held_blocks: int, blocks_requested: int
+                  ) -> Optional[Tuple[int, int, int]]:
+    """Pick the geometry a cooperative tenant shrinks to when asked to hand
+    back ``blocks_requested`` of its ``held_blocks``.
+
+    Pure policy (property-tested in isolation): among the tenant's
+    acceptable ``geometries`` (preference order, largest first), take the
+    LARGEST one that both strictly shrinks and frees the full request;
+    when none frees enough, fall back to the smallest acceptable geometry
+    (best-effort — every freed block still helps the requester's tally).
+    Returns None when the tenant is already at (or below) its minimum
+    geometry: a shrink never strands the gang below the smallest shape it
+    declared it can train on."""
+    cands = [tuple(d) for d in geometries
+             if _blocks_needed(d) < held_blocks]
+    if not cands:
+        return None
+    for dims in cands:
+        if held_blocks - _blocks_needed(dims) >= blocks_requested:
+            return dims
+    return cands[-1]
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainTenantSpec:
     """Configuration of one elastic training tenant.
@@ -66,12 +96,18 @@ class TrainTenantSpec:
       geometries: acceptable chip geometries in preference order (largest
         first); resume takes the first that fits the machine's free blocks.
       priority: scheduling priority (keep it below the serving fleet's so
-        bursts can evict training).
+        bursts can evict training; between trainers it is the tier — a
+        higher-priority trainer is shrunk/evicted last).
       base_step_s: virtual seconds one step costs on ONE block; on ``g``
         blocks a step costs ``base_step_s / g`` (ideal DP scaling).
       ckpt_every: periodic checkpoint interval in steps (preemption always
         checkpoints regardless).
       log_every: trainer metric logging period.
+      name: label in logs/reports (several tenants share one machine).
+      objective: machine-ranking objective for placement on a multi-machine
+        registry — "perf_dollar" (default: deadline-free training drains
+        to the cheapest silicon) or any other `MachineRegistry` objective
+        ("blind" = registration order, the generation-unaware baseline).
     """
     run: RunConfig
     target_steps: int
@@ -81,6 +117,8 @@ class TrainTenantSpec:
     base_step_s: float = 0.25
     ckpt_every: int = 10
     log_every: int = 1
+    name: str = "train"
+    objective: str = "perf_dollar"
 
 
 class ElasticTrainJob:
@@ -95,8 +133,16 @@ class ElasticTrainJob:
     (between quanta); either way the job checkpoints, frees its blocks
     during the notification, and re-enters the waiting pool."""
 
-    def __init__(self, sc: Supercomputer, spec: TrainTenantSpec):
-        self.sc = sc
+    def __init__(self, sc: Union[Supercomputer, MachineRegistry],
+                 spec: TrainTenantSpec):
+        # accept one machine or a fleet; placement ranks machines by
+        # perf/$ — training is deadline-free, so it drains to the cheapest
+        # silicon that fits (the ISSUE's batch-goes-to-old-pools story)
+        if isinstance(sc, MachineRegistry):
+            self.registry = sc
+        else:
+            self.registry = MachineRegistry([sc])
+        self.sc = self.registry[0]
         self.spec = spec
         self.state = WAITING
         self.slice: Optional[Slice] = None
@@ -105,6 +151,7 @@ class ElasticTrainJob:
         self.preemptions = 0
         self.resumes = 0                    # re-placements after preemption
         self.grows = 0                      # voluntary moves to more blocks
+        self.shrinks = 0                    # cooperative partial shrinks
         self.geometry_history: List[Tuple[float, Optional[Tuple[int, int, int]]]] = []
         self.log: List[str] = []
         self._in_quantum = False
@@ -146,12 +193,13 @@ class ElasticTrainJob:
         if self.state not in (WAITING, PREEMPTED):
             return False
         self._now = max(self._now, now)
+        sl = None
         for dims in self.spec.geometries:
-            sl = self.sc.allocate(dims, required=False,
-                                  priority=self.spec.priority)
+            sl = self.registry.allocate(dims, objective=self.spec.objective,
+                                        priority=self.spec.priority)
             if sl is not None:
                 break
-        else:
+        if sl is None:
             return False
         self.slice = sl
         self.session = sl.train(self.spec.run, None,
@@ -163,8 +211,9 @@ class ElasticTrainJob:
         self._ever_started = True
         self.state = RUNNING
         self.geometry_history.append((now, sl.dims))
-        self.log.append(f"[t={now:8.3f}s] train tenant on {sl.dims} "
-                        f"(blocks={sl.blocks}, step={self.steps_done})")
+        self.log.append(f"[t={now:8.3f}s] {self.spec.name} tenant on "
+                        f"{sl.dims} ({sl._sc.name} blocks={sl.blocks}, "
+                        f"step={self.steps_done})")
         return True
 
     def maybe_grow(self, now: float = 0.0) -> bool:
@@ -178,15 +227,20 @@ class ElasticTrainJob:
         if self.state != RUNNING:
             return False
         self._now = max(self._now, now)
-        sched = self.sc.scheduler
-        free = len(sched.free & sched.healthy)
+        here = self.slice._sc                  # machine holding the slice
+        free_here = len(here.scheduler.free & here.scheduler.healthy)
+        free_elsewhere = max(
+            (len(m.scheduler.free & m.scheduler.healthy)
+             for m in self.registry if m is not here), default=0)
         held = self.blocks_held
         target = None
         for dims in self.spec.geometries:
-            need = sched.blocks_needed(dims)
+            need = _blocks_needed(dims)
             if need <= held:
                 break                       # already at best fit
-            if need <= held + free:
+            # growing in place reuses the held blocks; moving to another
+            # machine is a full re-place, so only its own free pool counts
+            if need <= held + free_here or need <= free_elsewhere:
                 target = dims
                 break
         if target is None:
@@ -195,8 +249,8 @@ class ElasticTrainJob:
         self.state = WAITING
         if self.try_start(now, _count_resume=False):
             self.grows += 1
-            self.log.append(f"[t={now:8.3f}s] train tenant grew to "
-                            f"{self.slice.dims}")
+            self.log.append(f"[t={now:8.3f}s] {self.spec.name} tenant grew "
+                            f"to {self.slice.dims}")
             return True
         return False
 
@@ -209,6 +263,14 @@ class ElasticTrainJob:
             # time `Supercomputer.request_preemption` returns, the blocks
             # are genuinely free
             self._vacate(save=True, reason=ev.detail)
+        elif ev.kind == "shrink_request" and not self._in_quantum:
+            # partial shrink: hand back blocks WITHOUT vacating — the job
+            # checkpoints, re-carves its slice to a smaller preferred
+            # geometry in place (during this notification, so the
+            # requester's `request_shrink` sees the blocks freed), and
+            # keeps training.  Mid-quantum requests are ignored; the
+            # requester falls back to full preemption.
+            self._shrink_to(ev.blocks_needed)
         elif ev.kind == "lost":
             # block failure with no spare: the slice died under us; the
             # last periodic/preemption checkpoint is the resume point
@@ -217,6 +279,40 @@ class ElasticTrainJob:
             self.geometry_history.append((self._now, None))
             self.log.append(f"train tenant slice LOST ({ev.detail}); "
                             f"will resume from checkpoint")
+
+    def _shrink_to(self, blocks_needed: int) -> int:
+        """Cooperatively shrink onto a smaller preferred geometry, keeping
+        the job RUNNING on the same slice.  Checkpoint → close the old
+        session (its trainer is compiled for the old shape) → `Slice.shrink`
+        in place → fresh session that resumes from the checkpoint on the
+        next quantum.  The loss curve continues bitwise-identically: the
+        checkpoint carries params + optimizer state + data cursor, and the
+        global batch is geometry-independent.  Returns blocks freed."""
+        if self.state != RUNNING or self.slice is None:
+            return 0
+        held = self.blocks_held
+        target = shrink_target(self.spec.geometries, held, blocks_needed)
+        if target is None:
+            return 0                        # already at minimum geometry
+        if self.session is not None and self.session.state is not None:
+            self.session.trainer.save(self.session.state)
+        sl = self.slice
+        if self.session is not None:
+            self.session.close()
+        self.session = None
+        sl.shrink(target)
+        self.session = sl.train(self.spec.run, None,
+                                ckpt_dir=self.spec.ckpt_dir,
+                                ckpt_every=self.spec.ckpt_every)
+        self.session.add_listener(self._on_session_event)
+        self.shrinks += 1
+        freed = held - len(sl.blocks)
+        self.geometry_history.append((self._now, sl.dims))
+        self.log.append(f"[t={self._now:8.3f}s] {self.spec.name} tenant "
+                        f"shrank {held}->{len(sl.blocks)} blocks "
+                        f"({sl.dims}) at step {self.steps_done}, "
+                        f"freed {freed}")
+        return freed
 
     def _drop_slice(self) -> None:
         if self.session is not None:
@@ -283,7 +379,7 @@ class TenancyReport:
     window_s: float
     train_steps: int
     train_target: int
-    train_frac: float               # steps completed / target
+    train_frac: float               # steps completed / target (mean over jobs)
     train_preemptions: int
     train_resumes: int
     train_grows: int
@@ -293,6 +389,8 @@ class TenancyReport:
     deferred_scale_ups: int
     combined_score: float           # train_frac + serve slo_goodput
     log: List[str]
+    train_shrinks: int = 0          # cooperative partial shrinks (all jobs)
+    per_job: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -324,26 +422,39 @@ class MixedTenancyDriver:
         off for a static arm whose training never moves).
     """
 
-    def __init__(self, service: "FleetService", train_job: ElasticTrainJob,
+    def __init__(self, service: "FleetService",
+                 train_job: Union[ElasticTrainJob,
+                                  Sequence[ElasticTrainJob]],
                  *, window_s: float = 0.5, resume_training: bool = True):
         self.service = service
-        self.train_job = train_job
+        jobs = ([train_job] if isinstance(train_job, ElasticTrainJob)
+                else list(train_job))
+        assert jobs, "need at least one training job"
+        self.train_jobs = jobs
+        self.train_job = jobs[0]            # primary (legacy accessor)
         self.window_s = window_s
         self.resume_training = resume_training
         self._deferred_seen = 0
 
     def _boundary(self, t: float) -> None:
-        """One co-scheduling decision + training quantum at virtual ``t``."""
-        job, svc = self.train_job, self.service
+        """One co-scheduling decision + training quantum at virtual ``t``.
+        With several trainers, placement runs in priority-tier order
+        (highest first — the top tier grabs freed blocks before the rest),
+        then every RUNNING job gets its quantum."""
+        svc = self.service
         starved = (svc.deferred_scale_ups > self._deferred_seen
                    or len(svc.wait) > 0)
         self._deferred_seen = svc.deferred_scale_ups
+        by_tier = sorted(self.train_jobs,
+                         key=lambda j: -j.spec.priority)
         if self.resume_training and not starved:
-            if job.state in (WAITING, PREEMPTED):
-                job.try_start(now=t)
-            else:
-                job.maybe_grow(now=t)
-        job.run_quantum(self.window_s, now=t)
+            for job in by_tier:
+                if job.state in (WAITING, PREEMPTED):
+                    job.try_start(now=t)
+                else:
+                    job.maybe_grow(now=t)
+        for job in by_tier:
+            job.run_quantum(self.window_s, now=t)
 
     def run(self, trace: Sequence["FleetRequest"], *,
             fail_plan: Optional[Sequence[Tuple[float, Any]]] = None,
@@ -369,7 +480,7 @@ class MixedTenancyDriver:
         n_windows = int(math.ceil(horizon / self.window_s + 1e-9)) \
             + 1 + extra_windows
         end_t = n_windows * self.window_s
-        job, svc = self.train_job, self.service
+        svc = self.service
         self._deferred_seen = svc.deferred_scale_ups
         next_t = self.window_s
 
@@ -388,23 +499,43 @@ class MixedTenancyDriver:
             self._boundary(next_t)
             next_t += self.window_s
         serve_report = svc.report_for(trace)
-        dims_seen = {g for _, g in job.geometry_history if g is not None}
-        train_frac = job.steps_done / max(1, job.spec.target_steps)
+        jobs = self.train_jobs
+        primary = self.train_job
+        dims_seen = {g for _, g in primary.geometry_history if g is not None}
+        fracs = [j.steps_done / max(1, j.spec.target_steps) for j in jobs]
+        train_frac = sum(fracs) / len(fracs)
         combined = round(train_frac + serve_report.slo_goodput, 4)
+        per_job = [{
+            "name": j.spec.name,
+            "priority": j.spec.priority,
+            "state": j.state,
+            "steps": j.steps_done,
+            "target": j.spec.target_steps,
+            "frac": round(f, 4),
+            "preemptions": j.preemptions,
+            "resumes": j.resumes,
+            "grows": j.grows,
+            "shrinks": j.shrinks,
+            "geometry_history": [[t, list(g) if g else None]
+                                 for t, g in j.geometry_history],
+        } for j, f in zip(jobs, fracs)]
         return TenancyReport(
             arm=arm,
             windows=n_windows,
             window_s=self.window_s,
-            train_steps=job.steps_done,
-            train_target=job.spec.target_steps,
+            train_steps=sum(j.steps_done for j in jobs),
+            train_target=sum(j.spec.target_steps for j in jobs),
             train_frac=round(train_frac, 4),
-            train_preemptions=job.preemptions,
-            train_resumes=job.resumes,
-            train_grows=job.grows,
+            train_preemptions=sum(j.preemptions for j in jobs),
+            train_resumes=sum(j.resumes for j in jobs),
+            train_grows=sum(j.grows for j in jobs),
             geometry_changes=len(dims_seen),
-            geometry_history=list(job.geometry_history),
+            geometry_history=list(primary.geometry_history),
             serve=serve_report.to_dict(),
             deferred_scale_ups=svc.deferred_scale_ups,
             combined_score=combined,
-            log=list(svc.log) + list(job.log),
+            log=(list(svc.log)
+                 + [ln for j in jobs for ln in j.log]),
+            train_shrinks=sum(j.shrinks for j in jobs),
+            per_job=per_job,
         )

@@ -30,6 +30,12 @@ from repro.core.topology import SliceTopology, is_twistable
 MACHINE_BLOCK_DIMS = (4, 4, 4)
 
 
+def _shrink_reconfig_time(circuits_moved: int) -> float:
+    """Blackout of reprogramming a shrunk slice's circuits (ACOS model)."""
+    from repro.core.ocs import reconfig_time
+    return reconfig_time(circuits_moved)
+
+
 @dataclass
 class Job:
     """One placed slice: its chip geometry, owned blocks, OCS circuit
@@ -157,6 +163,49 @@ class SliceScheduler:
         self.fabric.release(job.config)
         self.free |= set(job.blocks)
         self.events.append(f"release job{job_id}")
+
+    def shrink(self, job_id: int,
+               new_dims: Tuple[int, int, int]) -> Tuple[List[int], int, float]:
+        """Re-carve a job IN PLACE to the strictly-smaller ``new_dims``,
+        handing the surplus blocks back to the free pool (§2.5 partial
+        shrink: the tenant keeps running on fewer blocks instead of being
+        fully evicted).  The job keeps its ``need`` fastest owned blocks
+        (lowest slowdown, lowest id on ties) and the OCS circuits are
+        reprogrammed to the smaller torus — one reconfiguration blackout,
+        not a release + re-allocate.
+
+        Returns ``(released_blocks, circuits_moved, switch_seconds)``.
+        OCS mode only: a static-cabled machine cannot re-carve a contiguous
+        region around a live tenant."""
+        if self.contiguous:
+            raise ValueError("shrink requires OCS wiring (contiguous mode "
+                             "cannot re-carve around a live job)")
+        job = self.jobs[job_id]
+        a, b, c = new_dims
+        assert a % 4 == b % 4 == c % 4 == 0, "slices are built from 4^3 blocks"
+        need = self.blocks_needed(new_dims)
+        assert 0 < need < len(job.blocks), \
+            f"shrink must strictly reduce: {need} vs {len(job.blocks)} blocks"
+        keep = sorted(job.blocks,
+                      key=lambda blk: (self.slowdown_of(blk), blk))[:need]
+        keep_set = set(keep)
+        released = [blk for blk in job.blocks if blk not in keep_set]
+        # a twist that the smaller geometry cannot express is dropped
+        twisted = job.twisted and is_twistable(new_dims)
+        self.fabric.release(job.config)
+        dims_blocks = (a // 4, b // 4, c // 4)
+        cfg = self.fabric.configure_slice(keep, dims_blocks, twisted=twisted)
+        job.blocks = list(keep)
+        job.dims_chips = (a, b, c)
+        job.twisted = twisted
+        job.config = cfg
+        self.free |= set(released)
+        moved = len(cfg.circuits)
+        secs = _shrink_reconfig_time(moved)
+        self.events.append(
+            f"shrink job{job_id} -> {new_dims} released={released} "
+            f"({moved} circuits, {secs * 1e3:.0f}ms)")
+        return released, moved, secs
 
     # -- failures / stragglers ----------------------------------------------------
 

@@ -229,8 +229,13 @@ class Autoscaler:
             # about to need it
             idle = [r for r in live if r.state == ACTIVE]
             if idle:
-                victim = min(idle, key=lambda r: (r.depth, r.tokens_owed(),
-                                                  r.rep_id))
+                # generation-aware drain: among equally-idle replicas, shed
+                # the worst perf/Watt silicon first (`drain_rank` is the
+                # replica's generation perf/Watt; 0.0 everywhere — the
+                # homogeneous fleet — leaves the legacy rep_id ordering)
+                victim = min(idle, key=lambda r: (
+                    r.depth, r.tokens_owed(),
+                    getattr(r, "drain_rank", 0.0), r.rep_id))
                 return "down", victim
         return "hold", None
 

@@ -47,7 +47,10 @@ class ServeReplica:
                  now: float, provision_s: float = 0.0,
                  chunk_s: Optional[float] = None,
                  straggler: Optional[StragglerDetector] = None,
-                 tracer=NOOP_TRACER):
+                 tracer=NOOP_TRACER,
+                 speed: float = 1.0, watts: float = 0.0,
+                 dollars_per_h: float = 0.0, gen: str = "",
+                 drain_rank: float = 0.0):
         self.rep_id = rep_id
         self.slice = slice_
         self.session = session
@@ -59,6 +62,19 @@ class ServeReplica:
         self.chunk_s = chunk_s              # None = measure real wall time
         self.straggler = straggler          # per-replica detector (optional)
         self.straggler_swaps = 0
+        # generation economics (heterogeneous fleet): chunk latency divides
+        # by ``speed`` (fig12 perf factor relative to the service's
+        # reference machine; 1.0 = homogeneous fleet, bitwise-unchanged),
+        # ``watts``/``dollars_per_h`` price the slice's allocated lifetime,
+        # and ``drain_rank`` orders scale-down victims (worst perf/Watt
+        # drains first; 0.0 everywhere preserves the legacy ordering)
+        self.speed = speed
+        self.watts = watts
+        self.dollars_per_h = dollars_per_h
+        self.gen = gen
+        self.drain_rank = drain_rank
+        self.t_alloc = now
+        self.t_end: Optional[float] = None  # stamped at free/death
         # engine rid -> (fleet request, out_tokens length at dispatch,
         #               engine request)
         self._assigned: Dict[int, Tuple[FleetRequest, int, object]] = {}
@@ -115,7 +131,25 @@ class ServeReplica:
         (wall-clock) latencies would be inconsistent with the fleet clock."""
         start_delay = max(0.0, self.ready_at - now, self.busy_until - now)
         return start_delay + self.session.expected_ttft_s(
-            default_chunk_s, chunk_time_s=self.chunk_s)
+            default_chunk_s / self.speed, chunk_time_s=self.virtual_chunk_s)
+
+    @property
+    def virtual_chunk_s(self) -> Optional[float]:
+        """Deterministic-mode chunk cost on THIS replica's generation (the
+        fleet-wide ``chunk_s`` divided by the generation speed factor)."""
+        return None if self.chunk_s is None else self.chunk_s / self.speed
+
+    def energy_wh(self, now: float) -> float:
+        """Energy charged to this replica: allocated-lifetime Wh (a held
+        slice burns power whether busy or idle — that is why perf/Watt
+        placement matters)."""
+        end = self.t_end if self.t_end is not None else now
+        return self.watts * max(0.0, end - self.t_alloc) / 3600.0
+
+    def cost_usd(self, now: float) -> float:
+        """Dollar cost of this replica's allocated lifetime."""
+        end = self.t_end if self.t_end is not None else now
+        return self.dollars_per_h * max(0.0, end - self.t_alloc) / 3600.0
 
     # -- dispatch / step ------------------------------------------------------
 
@@ -168,7 +202,7 @@ class ServeReplica:
         t0 = time.perf_counter()
         self.session.step_chunk()
         base = (time.perf_counter() - t0 if self.chunk_s is None
-                else self.chunk_s)
+                else self.chunk_s) / self.speed
         lat = base * self.slice.slowdown_factor()
         self._maybe_swap_straggler(base)
         stall = self.session.stall_s - self._stall_seen
@@ -291,6 +325,7 @@ class ServeReplica:
     def stats(self) -> Dict[str, object]:
         if self._final_stats is not None:
             return self._final_stats
+        end = self.t_end if self.t_end is not None else self.t_alloc
         out = {
             "rep_id": self.rep_id,
             "state": self.state,
@@ -299,6 +334,11 @@ class ServeReplica:
             "busy_s": round(self.busy_s, 4),
             "truncated_migrations": self.truncated_migrations,
             "straggler_swaps": self.straggler_swaps,
+            "gen": self.gen,
+            "speed": round(self.speed, 4),
+            "watts": round(self.watts, 2),
+            "energy_wh": round(self.energy_wh(end), 6),
+            "cost_usd": round(self.cost_usd(end), 8),
         }
         eng = getattr(self.session, "engine", None)
         kv = eng.kv_stats() if eng is not None and hasattr(eng, "kv_stats") \

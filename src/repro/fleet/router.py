@@ -20,6 +20,14 @@ Policies (pick with ``RouterConfig.policy``):
     that already prefilled the header turns the kv-pool's block sharing
     into a fleet-level win: the suffix-only prefill happens where the
     prefix lives.
+  * ``slo_tiered`` — generation-aware tiering for heterogeneous fleets:
+    batch-tier requests (TTFT deadline above ``slo_fast_ttft_s``) prefer a
+    strictly-slower pool when one exists (old silicon earns its power bill
+    on deadline-insensitive work, and the fast pool keeps headroom for the
+    latency tier); tight-SLO requests consider every replica but the
+    speed-aware ``least_eta`` ranking pulls them onto the fastest silicon
+    whenever it has headroom.  On a homogeneous fleet every replica is the
+    same speed and the policy degenerates to ``least_eta``.
 
 Admission backpressure: a replica whose engine already holds
 ``max_queue_per_replica`` unfinished requests is not eligible; when no
@@ -37,7 +45,8 @@ from repro.fleet.replica import ServeReplica
 from repro.fleet.traffic import FleetRequest
 from repro.obs import Telemetry
 
-POLICIES = ("least_loaded", "least_eta", "round_robin", "prefix_affinity")
+POLICIES = ("least_loaded", "least_eta", "round_robin", "prefix_affinity",
+            "slo_tiered")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +54,10 @@ class RouterConfig:
     policy: str = "least_loaded"
     max_queue_per_replica: int = 16     # unfinished requests per engine
     default_chunk_s: float = 0.05       # ETA prior before latency samples
+    # slo_tiered: requests with a TTFT SLO above this bound are batch-tier
+    # and prefer the slower/cheaper pool when one exists; at or under it
+    # they ride the speed-aware least-ETA ranking (fast silicon first)
+    slo_fast_ttft_s: float = 1.0
 
     def __post_init__(self):
         assert self.policy in POLICIES, self.policy
@@ -118,7 +131,21 @@ class Router:
                 cands = [r for r, s in zip(cands, scores) if s == best]
             else:
                 self._c_misses.inc()
-        if self.cfg.policy in ("least_eta", "prefix_affinity"):
+        if self.cfg.policy == "slo_tiered" and req is not None \
+                and req.ttft_slo_s > self.cfg.slo_fast_ttft_s:
+            # batch-tier traffic yields the fast silicon: prefer a strictly
+            # slower pool when one exists, so old machines earn their power
+            # bill on deadline-insensitive work and the fast pool keeps
+            # headroom for the latency tier.  Tight-SLO requests are NOT
+            # hard-pinned to the fastest generation — the ETA ranking below
+            # already divides by replica speed, so they gravitate to fast
+            # silicon when it has headroom but can overflow to slower
+            # replicas instead of queueing behind each other at peak.
+            speeds = [getattr(r, "speed", 1.0) for r in cands]
+            slow = [r for r, s in zip(cands, speeds) if s < max(speeds)]
+            if slow:
+                cands = slow
+        if self.cfg.policy in ("least_eta", "prefix_affinity", "slo_tiered"):
             # price fresh replicas with the fleet-wide observed chunk cost,
             # not the static prior — otherwise a cold (sample-free) replica
             # can rank worse than a warm loaded one by prior mismatch alone

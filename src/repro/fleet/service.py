@@ -29,6 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.cluster.registry import MachineRegistry, slice_key
 from repro.cluster.slices import Slice, SliceEvent
 from repro.cluster.straggler import StragglerConfig, StragglerDetector
 from repro.cluster.supercomputer import Supercomputer
@@ -43,8 +44,13 @@ from repro.obs import Telemetry, VirtualClock
 from repro.serve.engine import ServeEngine, SliceSpec, _pct
 
 Geometry = Union[int, Tuple[int, int, int]]
-FailPlan = Sequence[Tuple[float, Union[int, str]]]   # (virtual_t, block)
+# fail/repair target: a block id or symbolic spec ("spare"/"busiest"/
+# "replica:<id>"/"last_failed"/"failed:<i>"), optionally machine-scoped as
+# ("<machine-name>", block-or-"spare") on a multi-machine fleet
+BlockSpec = Union[int, str, Tuple[str, Union[int, str]]]
+FailPlan = Sequence[Tuple[float, BlockSpec]]         # (virtual_t, target)
 Arrivals = Union[FleetTrace, Sequence[FleetRequest]]
+Machines = Union[Supercomputer, MachineRegistry, Sequence[Supercomputer]]
 
 
 @dataclasses.dataclass
@@ -70,6 +76,13 @@ class FleetReport:
     straggler_swaps: int            # detector-fired spare swaps
     failures: int                   # fail_block hits on fleet slices
     replicas_seen: int
+    # heterogeneous-fleet economics (all zero / single-keyed on a
+    # generation-less or single-machine fleet)
+    energy_wh: float                # allocated-lifetime Wh across replicas
+    cost_usd: float                 # allocated-lifetime $ across replicas
+    perf_watt_goodput: float        # SLO-met tokens per Wh
+    slo_tokens_per_usd: float       # SLO-met tokens per dollar
+    replicas_by_machine: Dict[str, int]  # machine name -> replicas placed
     replica_stats: List[Dict[str, Any]]
     log: List[str]
 
@@ -82,11 +95,16 @@ class FleetReport:
 
 
 class FleetService:
-    """Operate a pool of serve replicas over one `Supercomputer` as a
+    """Operate a pool of serve replicas over one `Supercomputer` — or a
+    `MachineRegistry` of several, spanning hardware generations — as a
     single SLO-tracked service.
 
     Args:
-      sc: the machine (the service subscribes to its event stream).
+      sc: the machine, a sequence of machines, or a `MachineRegistry`
+        (the service subscribes to every machine's event stream).  With
+        several machines, ``placement`` decides where scale-ups land and
+        each replica's chunk latency scales by its generation's fig12
+        perf factor relative to the first machine's generation.
       model_cfg/params: the served model (one compile serves all replicas).
       spec: per-replica `SliceSpec` serving envelope.
       geometry: chip shape of each replica slice.
@@ -100,10 +118,16 @@ class FleetService:
       ttft_window_s: sliding window for the observed-p95-TTFT signal.
       priority: scheduling class of this service's slices.
       preempt_on_allocate: let scale-ups cooperatively evict strictly
-        lower-priority tenants (the serving-burst-evicts-training story).
+        lower-priority tenants (the serving-burst-evicts-training story);
+        pass ``"shrink"`` to prefer asking them to *shrink* (hand back
+        blocks, keep training on a smaller geometry) over full eviction.
+      placement: multi-machine scale-up objective — a generation score
+        ("perf" / "perf_watt" / "perf_dollar": best machine first) or
+        "blind" (generation-unaware round-robin; the baseline the
+        het-fleet benchmark beats).  Ignored on a single machine.
     """
 
-    def __init__(self, sc: Supercomputer, model_cfg: ModelConfig, params,
+    def __init__(self, sc: Machines, model_cfg: ModelConfig, params,
                  spec: Optional[SliceSpec] = None, *,
                  geometry: Geometry = (4, 4, 4),
                  initial_replicas: int = 1,
@@ -114,13 +138,32 @@ class FleetService:
                  max_wait_queue: int = 256,
                  ttft_window_s: float = 2.0,
                  priority: int = 1,
-                 preempt_on_allocate: bool = False,
+                 preempt_on_allocate: Union[bool, str] = False,
+                 placement: str = "perf_watt",
                  straggler: Optional[StragglerConfig] = None,
                  obs: Optional[Telemetry] = None):
         assert model_cfg.family != "audio", \
             "fleet serving rides the fast path; the whisper enc-dec " \
             "family has no per-slot cache insert yet"
-        self.sc = sc
+        # normalize the machine argument into a registry; ``self.sc``
+        # stays the first machine so single-machine callers are untouched
+        if isinstance(sc, MachineRegistry):
+            self.registry = sc
+        elif isinstance(sc, Supercomputer):
+            self.registry = MachineRegistry([sc])
+        else:
+            self.registry = MachineRegistry(sc)
+        assert len(self.registry) > 0, "need at least one machine"
+        self.machines = self.registry.machines
+        self.sc = self.machines[0]
+        assert placement in ("perf", "perf_watt", "perf_dollar", "blind"), \
+            placement
+        self.placement = placement
+        self._blind_rr = 0
+        # chunk-latency reference: the FIRST machine's generation (a
+        # homogeneous fleet divides by 1.0 — bitwise-unchanged timing)
+        ref = self.sc.generation
+        self._ref_perf = ref.perf_factor if ref else 1.0
         self.cfg = model_cfg
         self.params = params
         self.spec = spec or SliceSpec()
@@ -129,7 +172,7 @@ class FleetService:
         # fleet events land on one timeline; when its clock is a
         # VirtualClock, the event loop advances it in step with `self.now`
         # (fleet traces read in virtual seconds)
-        self.obs = obs if obs is not None else sc.obs
+        self.obs = obs if obs is not None else self.sc.obs
         self._vclock = (self.obs.clock
                         if isinstance(self.obs.clock, VirtualClock) else None)
         # service-local drop breakdown (the registry counters are shared
@@ -172,11 +215,16 @@ class FleetService:
         self.now = 0.0
         self.failures = 0
         self.failed_blocks: List[int] = []
+        # machine-scoped mirror of `failed_blocks` (job/block ids are only
+        # unique per machine); repairs of "last_failed"/"failed:<i>" resolve
+        # through this so they land on the machine that took the hit
+        self._failed: List[Tuple[Supercomputer, int]] = []
         self._next_rep = 0
-        self._by_job: Dict[int, ServeReplica] = {}
+        self._by_job: Dict[Tuple[int, int], ServeReplica] = {}
+        self.replicas_by_machine: Dict[str, int] = {}
         self._ttfts: deque = deque()          # (t_done, ttft) window
         self._warmed = False
-        sc.subscribe(self._on_machine_event)
+        self.registry.subscribe(self._on_machine_event)
         if self.autoscaler:
             initial_replicas = max(initial_replicas,
                                    self.autoscaler.cfg.min_replicas)
@@ -199,11 +247,25 @@ class FleetService:
         self.obs.postmortem("request_drop", t=self.now,
                             drop_reason=reason, n=n, **detail)
 
+    def _machine_order(self) -> List[Supercomputer]:
+        """Machines to try for the next scale-up, best first.  Generation
+        placement ranks by the configured objective; ``blind`` round-robins
+        registration order (the generation-unaware baseline)."""
+        if self.placement == "blind":
+            n = len(self.machines)
+            order = [self.machines[(self._blind_rr + i) % n]
+                     for i in range(n)]
+            self._blind_rr += 1
+            return order
+        return self.registry.rank(self.placement)
+
     def _scale_up(self, now: float, *,
                   provision_s: Optional[float] = None
                   ) -> Optional[ServeReplica]:
         """Add capacity: reuse a draining replica when one exists (pure
-        bookkeeping, no OCS programming), else allocate a fresh slice."""
+        bookkeeping, no OCS programming), else allocate a fresh slice on
+        the best machine under the placement objective — free capacity on
+        ANY machine beats shrinking/evicting a tenant on a better one."""
         for r in self.replicas:
             if r.state == DRAINING:
                 r.undrain()
@@ -212,12 +274,25 @@ class FleetService:
                                track="autoscaler", t=now,
                                rep_id=r.rep_id, undrained=True)
                 return r
-        sl = self.sc.allocate(self.geometry, required=False,
-                              priority=self.priority,
-                              preempt=self.preempt_on_allocate)
+        order = self._machine_order()
+        sl = mach = None
+        for m in order:
+            sl = m.allocate(self.geometry, required=False,
+                            priority=self.priority)
+            if sl is not None:
+                mach = m
+                break
+        if sl is None and self.preempt_on_allocate:
+            for m in order:
+                sl = m.allocate(self.geometry, required=False,
+                                priority=self.priority,
+                                preempt=self.preempt_on_allocate)
+                if sl is not None:
+                    mach = m
+                    break
         if sl is None:
             self.deferred_scale_ups += 1
-            self._log("scale-up: machine full, allocation deferred")
+            self._log("scale-up: fleet full, allocation deferred")
             return None
         session = sl.serve(self.cfg, self.params, self.spec)
         if provision_s is None:
@@ -225,16 +300,33 @@ class FleetService:
                            if self.autoscaler else 0.0)
         det = (StragglerDetector(self.straggler_cfg)
                if self.straggler_cfg else None)
+        g = mach.generation
+        chips = sl.num_chips
         rep = ServeReplica(self._next_rep, sl, session, now=now,
                            provision_s=provision_s, chunk_s=self.chunk_s,
-                           straggler=det, tracer=self.obs.tracer)
+                           straggler=det, tracer=self.obs.tracer,
+                           speed=(g.perf_factor / self._ref_perf
+                                  if g else 1.0),
+                           watts=(g.watts_per_chip * chips if g else 0.0),
+                           dollars_per_h=(g.dollars_per_chip_hour * chips
+                                          if g else 0.0),
+                           gen=(g.name if g else ""),
+                           # blind placement stays blind end-to-end: no
+                           # generation hint to the autoscaler's drain order
+                           drain_rank=(g.perf_per_watt
+                                       if g and self.placement != "blind"
+                                       else 0.0))
         self._next_rep += 1
         self.replicas.append(rep)
-        self._by_job[sl.job_id] = rep
-        self._log(f"scale-up: replica {rep.rep_id} on job{sl.job_id} "
-                  f"blocks={sl.blocks} (ready t+{provision_s:.2f}s)")
+        self._by_job[slice_key(sl)] = rep
+        self.replicas_by_machine[mach.name] = \
+            self.replicas_by_machine.get(mach.name, 0) + 1
+        self._log(f"scale-up: replica {rep.rep_id} on {mach.name} "
+                  f"job{sl.job_id} blocks={sl.blocks} "
+                  f"(ready t+{provision_s:.2f}s)")
         self.obs.event("fleet.scale_up", cat="autoscaler", track="autoscaler",
-                       t=now, rep_id=rep.rep_id, job_id=sl.job_id)
+                       t=now, rep_id=rep.rep_id, job_id=sl.job_id,
+                       machine=mach.name)
         return rep
 
     def _scale_down(self, victim: ServeReplica) -> None:
@@ -257,7 +349,9 @@ class FleetService:
         gone = [r for r in self.replicas if r.state in (FREED, DEAD)]
         if gone:
             for r in gone:
-                self._by_job.pop(r.slice.job_id, None)
+                if r.t_end is None:
+                    r.t_end = self.now   # stop the energy/cost meter
+                self._by_job.pop(slice_key(r.slice), None)
                 r.retire()
             self.retired.extend(gone)
             self.replicas = [r for r in self.replicas
@@ -278,12 +372,12 @@ class FleetService:
             if r.state in (PROVISIONING, ACTIVE, DRAINING):
                 r.free()
         self._free_drained()        # retires the freed replicas
-        self.sc.unsubscribe(self._on_machine_event)
+        self.registry.unsubscribe(self._on_machine_event)
 
     # -- failure integration --------------------------------------------------
 
     def _on_machine_event(self, sl: Slice, ev: SliceEvent) -> None:
-        rep = self._by_job.get(sl.job_id)
+        rep = self._by_job.get(slice_key(sl))
         if rep is None:
             return
         if ev.kind == "lost":
@@ -298,24 +392,43 @@ class FleetService:
             # orphans jump the wait queue: they have already waited once
             for req in reversed(orphans):
                 self.wait.appendleft(req)
-            self._by_job.pop(sl.job_id, None)
+            self._by_job.pop(slice_key(sl), None)
         elif ev.kind == "reconfigure":
             self.failures += 1
             self._log(f"replica {rep.rep_id} reconfigured around a failed "
                       f"block ({ev.circuits_moved} circuits, "
                       f"{ev.downtime_s * 1e3:.0f}ms stall)")
 
-    def _resolve_block(self, spec: Union[int, str]) -> Optional[int]:
-        """Fail-plan target: a raw block id, "replica:<id>" (first block of
-        that replica's slice), "busiest" (first block of the alive replica
-        owing the most work), or "spare" (a healthy free block — burn it to
-        force the next failure into the no-spare LOST path) — all resolved
-        at fire time."""
+    @staticmethod
+    def _machine_spare(m: Supercomputer) -> Optional[int]:
+        spares = sorted(m.scheduler.free & m.scheduler.healthy)
+        return spares[0] if spares else None
+
+    def _resolve_target(self, spec: BlockSpec
+                        ) -> Optional[Tuple[Supercomputer, int]]:
+        """Fail-plan target resolved at fire time into (machine, block):
+        a raw block id (first machine — the single-machine legacy form),
+        "replica:<id>" (first block of that replica's slice, wherever it
+        is), "busiest" (first block of the alive replica owing the most
+        work fleet-wide), "spare" (a healthy free block — burn it to force
+        the next failure into the no-spare LOST path; first machine that
+        has one), or a ("<machine-name>", block-or-"spare") pair to pin
+        the hit to one machine."""
+        if isinstance(spec, tuple):
+            name, inner = spec
+            m = self.registry.get(name)
+            if inner == "spare":
+                b = self._machine_spare(m)
+                return (m, b) if b is not None else None
+            return (m, int(inner))
         if isinstance(spec, int):
-            return spec
+            return (self.sc, spec)
         if spec == "spare":
-            spares = sorted(self.sc.scheduler.free & self.sc.scheduler.healthy)
-            return spares[0] if spares else None
+            for m in self.machines:
+                b = self._machine_spare(m)
+                if b is not None:
+                    return (m, b)
+            return None
         if spec == "busiest":
             alive = [r for r in self.replicas
                      if r.alive and r.state != PROVISIONING]
@@ -323,11 +436,11 @@ class FleetService:
                 return None
             busiest = max(alive, key=lambda r: (r.tokens_owed(), r.depth,
                                                 -r.rep_id))
-            return busiest.slice.blocks[0]
+            return (busiest.slice._sc, busiest.slice.blocks[0])
         rep_id = int(str(spec).split(":", 1)[1])
         for r in self.replicas:
             if r.rep_id == rep_id and r.alive:
-                return r.slice.blocks[0]
+                return (r.slice._sc, r.slice.blocks[0])
         return None
 
     # -- dispatch -------------------------------------------------------------
@@ -523,8 +636,7 @@ class FleetService:
             # stranded (and still-arriving) requests loudly instead of
             # spinning ticks until max_iters
             dead_end = (not self.live_replicas and ri >= len(repairs)
-                        and not (self.sc.scheduler.free
-                                 & self.sc.scheduler.healthy))
+                        and self.registry.free_healthy_blocks() == 0)
             if dead_end and (self.wait or ai < n_arr):
                 # before declaring the requests stranded, try one scale-up:
                 # with `preempt_on_allocate` the machine may still carve a
@@ -563,39 +675,43 @@ class FleetService:
 
             # -- injected failures / repairs ---------------------------------
             while fi < len(fails) and fails[fi][0] <= self.now:
-                block = self._resolve_block(fails[fi][1])
-                if block is None:
+                tgt = self._resolve_target(fails[fi][1])
+                if tgt is None:
                     # a scenario that declares a failure must see it land or
                     # know it didn't — silent skips make benchmarks measure
                     # something other than what they claim
                     self._log(f"SKIPPED fail_block({fails[fi][1]!r}): "
                               f"target did not resolve")
                 else:
-                    self._log(f"injecting fail_block({block})")
+                    mach, block = tgt
+                    self._log(f"injecting fail_block({block}) "
+                              f"on {mach.name}")
                     self.failed_blocks.append(block)
-                    self.sc.fail_block(block)   # subscription handles rerouting
+                    self._failed.append((mach, block))
+                    mach.fail_block(block)  # subscription handles rerouting
                     last_event_t = self.now
                 fi += 1
             while ri < len(repairs) and repairs[ri][0] <= self.now:
                 spec_b = repairs[ri][1]
                 ri += 1
                 if spec_b == "last_failed":
-                    if not self.failed_blocks:
+                    if not self._failed:
                         continue
-                    block = self.failed_blocks[-1]
+                    tgt = self._failed[-1]
                 elif isinstance(spec_b, str) and spec_b.startswith("failed:"):
                     # "failed:<i>": i-th injected failure of this service's
                     # lifetime — lets a plan that burns spares repair each
                     # of them individually
                     i = int(spec_b.split(":", 1)[1])
-                    if i >= len(self.failed_blocks):
+                    if i >= len(self._failed):
                         continue
-                    block = self.failed_blocks[i]
+                    tgt = self._failed[i]
                 else:
-                    block = self._resolve_block(spec_b)
-                if block is not None:
-                    self._log(f"repair_block({block})")
-                    self.sc.repair_block(block)
+                    tgt = self._resolve_target(spec_b)
+                if tgt is not None:
+                    mach, block = tgt
+                    self._log(f"repair_block({block}) on {mach.name}")
+                    mach.repair_block(block)
                     last_event_t = self.now
             # -- arrivals ----------------------------------------------------
             while ai < n_arr and next_arrival_t() <= self.now:
@@ -661,6 +777,13 @@ class FleetService:
         t1 = max((r.t_done for r in done if r.t_done), default=t0)
         makespan = max(t1 - t0, 1e-9)
         asc = self.autoscaler
+        slo_tok = sum(len(r.out_tokens) for r in done if r.met_slo)
+        # energy/cost meter: live replicas are charged up to `now`; retired
+        # ones were stamped with t_end when freed/lost
+        energy = sum(r.energy_wh(self.now) for r in self.replicas) \
+            + sum(r.stats().get("energy_wh", 0.0) for r in self.retired)
+        cost = sum(r.cost_usd(self.now) for r in self.replicas) \
+            + sum(r.stats().get("cost_usd", 0.0) for r in self.retired)
         return FleetReport(
             offered=offered_n,
             completed=len(done),
@@ -676,9 +799,7 @@ class FleetService:
             slo_attainment=round(
                 sum(1 for r in done if r.met_slo) / max(1, offered_n), 4),
             served_goodput=round(tokens / max(1, offered_tok), 4),
-            slo_goodput=round(
-                sum(len(r.out_tokens) for r in done if r.met_slo)
-                / max(1, offered_tok), 4),
+            slo_goodput=round(slo_tok / max(1, offered_tok), 4),
             scale_ups=asc.scale_ups if asc else 0,
             scale_downs=asc.scale_downs if asc else 0,
             predictive_ups=asc.predictive_ups if asc else 0,
@@ -686,6 +807,13 @@ class FleetService:
                                 for r in self.retired + self.replicas),
             failures=self.failures,
             replicas_seen=self._next_rep,
+            energy_wh=round(energy, 6),
+            cost_usd=round(cost, 8),
+            perf_watt_goodput=round(slo_tok / energy, 4) if energy > 0
+            else 0.0,
+            slo_tokens_per_usd=round(slo_tok / cost, 4) if cost > 0
+            else 0.0,
+            replicas_by_machine=dict(self.replicas_by_machine),
             replica_stats=[r.stats()
                            for r in self.retired + self.replicas],
             log=list(self.log),

@@ -1,0 +1,281 @@
+"""Property suite for the block scheduler under adversarial op sequences.
+
+Random allocate / free / preempt / shrink / fail / repair programs are run
+against a small `Supercomputer` with cooperative dummy tenants (free on
+"preempt", partial-shrink on "shrink_request" via the elastic trainer's
+`shrink_target` policy), checking after EVERY op that
+
+  * blocks are conserved: every block is free, owned by exactly one job,
+    or failed — never two of those at once, never lost;
+  * allocations only ever use healthy blocks;
+  * victim selection respects priority ordering (victims are exactly the
+    cheapest strictly-lower-priority prefix, and `request_capacity` at
+    priority p never shrinks or evicts a tenant at priority >= p);
+  * partial shrink never strands a gang below its minimum geometry.
+
+Runs on real `hypothesis` when installed, else the deterministic shim in
+`_hypothesis_compat` (seeded random examples, same properties).
+"""
+import sys
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.cluster import Supercomputer
+from repro.cluster.tenancy import shrink_target
+
+NUM_BLOCKS = 8
+# geometry ladders a dummy tenant may occupy, largest first (chip dims;
+# blocks = product/64).  Every ladder bottoms out at one (4,4,4) block.
+LADDERS = (
+    ((4, 4, 16), (4, 4, 8), (4, 4, 4)),
+    ((4, 8, 8), (4, 4, 8), (4, 4, 4)),
+    ((4, 4, 8), (4, 4, 4)),
+    ((4, 4, 4),),
+)
+
+
+def _blocks(dims):
+    a, b, c = dims
+    return (a // 4) * (b // 4) * (c // 4)
+
+
+class _Tenant:
+    """Cooperative dummy tenant: frees on preempt, partial-shrinks on
+    shrink_request using the same `shrink_target` policy as the elastic
+    trainer (never below the ladder's minimum geometry)."""
+
+    def __init__(self, sl, ladder, priority):
+        self.sl = sl
+        self.ladder = ladder
+        self.priority = priority
+        self.preempted = False
+        self.shrinks = 0
+
+    def on_event(self, ev):
+        if ev.kind == "preempt" and self.sl.status == "active":
+            self.preempted = True
+            self.sl.free()
+        elif ev.kind == "shrink_request" and self.sl.status == "active":
+            held = len(self.sl._job.blocks)
+            tgt = shrink_target(self.ladder, held, ev.blocks_needed)
+            if tgt is not None:
+                self.sl.shrink(tgt)
+                self.shrinks += 1
+
+
+class _Harness:
+    """One machine + tenant bookkeeping + the invariant checks."""
+
+    def __init__(self):
+        self.sc = Supercomputer(num_blocks=NUM_BLOCKS)
+        self.tenants = {}               # job_id -> _Tenant
+        self.failed = []                # fail-injection order
+        self.sc.subscribe(self._on_machine_event)
+
+    def _on_machine_event(self, sl, ev):
+        t = self.tenants.get(sl.job_id)
+        if t is not None and t.sl is sl:
+            t.on_event(ev)
+
+    # -- ops ----------------------------------------------------------------
+    def op_allocate(self, arg):
+        ladder = LADDERS[arg % len(LADDERS)]
+        priority = (arg // len(LADDERS)) % 3
+        preempt = ("shrink", True, False)[(arg // 16) % 3]
+        sl = self.sc.allocate(ladder[0], required=False, priority=priority,
+                              preempt=preempt)
+        if sl is not None:
+            self.tenants[sl.job_id] = _Tenant(sl, ladder, priority)
+
+    def op_free(self, arg):
+        live = self._live()
+        if live:
+            live[arg % len(live)].sl.free()
+
+    def op_fail(self, arg):
+        block = arg % NUM_BLOCKS
+        if block in self.sc.scheduler.healthy:
+            self.sc.fail_block(block)
+            self.failed.append(block)
+
+    def op_repair(self, arg):
+        bad = sorted(set(range(NUM_BLOCKS)) - self.sc.scheduler.healthy)
+        if bad:
+            self.sc.repair_block(bad[arg % len(bad)])
+
+    def op_request_capacity(self, arg):
+        dims = ((4, 4, 4), (4, 4, 8), (4, 4, 16))[arg % 3]
+        priority = 1 + arg % 3
+        before = {j: (t.priority, len(t.sl._job.blocks), t.sl.status)
+                  for j, t in self.tenants.items()
+                  if t.sl.status == "active"}
+        self.sc.request_capacity(dims, priority)
+        # priority ordering: capacity pressure at `priority` may only have
+        # touched strictly-lower-priority tenants
+        for j, (prio, nblocks, _) in before.items():
+            t = self.tenants[j]
+            if prio >= priority:
+                assert t.sl.status == "active", \
+                    f"job{j} prio {prio} evicted by prio {priority}"
+                assert len(t.sl._job.blocks) == nblocks, \
+                    f"job{j} prio {prio} shrunk by prio {priority}"
+
+    def _live(self):
+        return [t for t in self.tenants.values()
+                if t.sl.status == "active"]
+
+    # -- invariants ---------------------------------------------------------
+    def check(self):
+        sched = self.sc.scheduler
+        allb = set(range(NUM_BLOCKS))
+        owned = []
+        for job in sched.jobs.values():
+            owned.extend(job.blocks)
+        assert len(owned) == len(set(owned)), \
+            f"block owned by two jobs: {sorted(owned)}"
+        owned = set(owned)
+        assert not (sched.free & owned), \
+            f"blocks both free and owned: {sorted(sched.free & owned)}"
+        failed = allb - sched.healthy
+        assert sched.free | owned | failed == allb, \
+            "leaked blocks: " \
+            f"{sorted(allb - (sched.free | owned | failed))}"
+        # live tenants sit on a ladder geometry, never below the minimum
+        for t in self._live():
+            dims = tuple(t.sl.dims)
+            assert dims in t.ladder, (dims, t.ladder)
+            assert len(t.sl._job.blocks) >= _blocks(t.ladder[-1])
+
+    def check_victims(self, arg):
+        """preemption_victims returns the cheapest strictly-lower-priority
+        prefix of the candidate ordering (and None only when even evicting
+        everyone below would not fit the request)."""
+        sched = self.sc.scheduler
+        dims = ((4, 4, 8), (4, 4, 16))[arg % 2]
+        priority = 1 + arg % 3
+        victims = sched.preemption_victims(dims, priority)
+        cands = sorted((j for j in sched.jobs.values()
+                        if j.priority < priority),
+                       key=lambda j: (j.priority, len(j.blocks), -j.job_id))
+        if victims is None:
+            have = len(sched.free & sched.healthy) + sum(
+                sum(1 for b in j.blocks if b in sched.healthy)
+                for j in cands)
+            assert have < sched.blocks_needed(dims)
+            return
+        assert all(j.priority < priority for j in victims)
+        assert victims == cands[:len(victims)], \
+            "victims are not the cheapest lower-priority prefix"
+
+
+OPS = ("allocate", "free", "fail", "repair", "request_capacity")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, len(OPS) - 1),
+                          st.integers(0, 10 ** 6)),
+                min_size=1, max_size=40))
+def test_op_sequences_conserve_blocks(program):
+    h = _Harness()
+    for opcode, arg in program:
+        getattr(h, f"op_{OPS[opcode]}")(arg)
+        h.check()
+        h.check_victims(arg)
+    # teardown frees everything and the machine is whole again
+    for t in h._live():
+        t.sl.free()
+    h.check()
+    assert h.sc.scheduler.free | (set(range(NUM_BLOCKS))
+                                  - h.sc.scheduler.healthy) \
+        == set(range(NUM_BLOCKS))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, len(LADDERS) - 1), st.integers(1, 8))
+def test_shrink_target_never_strands(ladder_i, need):
+    """`shrink_target` only ever proposes geometries from the ladder,
+    strictly smaller than what is held, and returns None (refuse) rather
+    than dropping below the minimum geometry."""
+    ladder = LADDERS[ladder_i]
+    for dims in ladder:
+        held = _blocks(dims)
+        tgt = shrink_target(ladder, held, need)
+        if dims == ladder[-1]:
+            assert tgt is None, "shrink below the minimum geometry"
+            continue
+        if tgt is None:
+            continue
+        assert tgt in ladder
+        assert _blocks(tgt) < held
+        freed = held - _blocks(tgt)
+        possible = held - _blocks(ladder[-1])
+        # best-effort: frees the full request when any ladder rung can,
+        # otherwise the most it can without stranding the gang
+        if need <= possible:
+            assert freed >= min(need, possible)
+
+
+def test_cooperative_shrink_prefers_partial_over_preempt():
+    """A shrink-capable low-priority tenant loses blocks, not its slice."""
+    h = _Harness()
+    sl = h.sc.allocate((4, 4, 16), priority=0)       # 4 of 8 blocks
+    h.tenants[sl.job_id] = _Tenant(sl, LADDERS[0], 0)
+    filler = h.sc.allocate((4, 4, 12), priority=0)   # 3 more: 1 block free
+    assert h.sc.request_capacity((4, 4, 8), priority=1)
+    h.check()
+    t = h.tenants[sl.job_id]
+    assert t.shrinks >= 1 and not t.preempted
+    assert sl.status == "active"
+    assert tuple(sl.dims) in LADDERS[0]
+    taken = h.sc.allocate((4, 4, 8), priority=1)
+    h.check()
+    for s in (taken, filler, sl):
+        s.free()
+    h.check()
+
+
+def test_preempt_falls_back_when_shrink_cannot_cover():
+    """When every ladder rung is too small to cover the deficit, pass 2
+    (full preemption) evicts the lowest-priority tenant — and the blocks
+    still balance."""
+    h = _Harness()
+    a = h.sc.allocate((4, 4, 4), priority=0)         # min geometry: no shrink
+    h.tenants[a.job_id] = _Tenant(a, LADDERS[3], 0)
+    b = h.sc.allocate((4, 4, 16), priority=3)        # above the requester
+    h.tenants[b.job_id] = _Tenant(b, LADDERS[0], 3)
+    c = h.sc.allocate((4, 4, 12), priority=2)        # machine now full
+    assert h.sc.request_capacity((4, 4, 4), priority=3)
+    h.check()
+    assert h.tenants[a.job_id].preempted, "min-geometry tenant must evict"
+    assert b.status == "active", "higher-priority tenant untouched or shrunk"
+    for s in (b, c):
+        if s.status == "active":
+            s.free()
+    h.check()
+
+
+def test_failed_block_is_not_reallocated_until_repair():
+    h = _Harness()
+    h.sc.fail_block(0)
+    h.check()
+    seen = set()
+    slices = []
+    for _ in range(NUM_BLOCKS - 1):
+        sl = h.sc.allocate((4, 4, 4), required=False)
+        if sl is None:
+            break
+        seen.update(sl._job.blocks)
+        slices.append(sl)
+    assert 0 not in seen
+    assert h.sc.allocate((4, 4, 4), required=False) is None
+    h.sc.repair_block(0)
+    sl = h.sc.allocate((4, 4, 4), required=False)
+    assert sl is not None and 0 in sl._job.blocks
+    for s in slices + [sl]:
+        s.free()
+    h.check()
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-v"]))
